@@ -1,0 +1,156 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape) on the single-pod mesh, derive the three terms:
+
+  compute    = HLO_FLOPs_per_chip / peak_bf16_FLOPs          [s]
+  memory     = HLO_bytes_per_chip / HBM_bandwidth            [s]
+  collective = collective_bytes_per_chip / ICI_link_bw       [s]
+
+Sources: loop-corrected cost records (experiments/dryrun/*__cost.json —
+XLA counts while bodies once, so the dry-run extrapolates per-period body
+cost to full depth; see launch/dryrun.run_cost) + the baseline compile
+records (memory_analysis, compile proof).  MODEL_FLOPS = 6·N·D for train,
+2·N·D for inference (N = active params for MoE), D = processed tokens.
+
+Outputs a markdown table (EXPERIMENTS.md §Roofline body) + CSV.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import INPUT_SHAPES  # noqa: E402
+from repro.launch.mesh import V5E  # noqa: E402
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR):
+    base, cost = {}, {}
+    for path in glob.glob(os.path.join(dryrun_dir, "*.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        key = (rec["arch"], rec["shape"])
+        if path.endswith("__cost.json"):
+            cost[key] = rec
+        elif rec.get("mesh") == "single_pod":
+            base[key] = rec
+    return base, cost
+
+
+def model_flops(rec_cost: dict, shape_name: str) -> float:
+    """Analytic MODEL_FLOPS (global): 6·N·D train, 2·N·D inference."""
+    shape = INPUT_SHAPES[shape_name]
+    n = rec_cost["model_params_active"]
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: ONE token per sequence in the batch
+    return 2.0 * n * shape.global_batch
+
+
+def analyze_one(base: dict, cost: dict) -> dict:
+    chips = base["chips"]
+    est = cost["estimate"]
+    flops_dev = est["flops"]  # per-device (SPMD program)
+    bytes_dev = est["bytes"]
+    coll = est["collectives"]
+    coll_bytes_dev = sum(v for k, v in coll.items() if k != "count")
+
+    t_compute = flops_dev / V5E["peak_bf16_flops"]
+    t_memory = bytes_dev / V5E["hbm_bandwidth"]
+    t_collective = coll_bytes_dev / V5E["ici_link_bandwidth"]
+
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cost, base["shape"])
+    hlo_global = flops_dev * chips
+    ratio = mf / hlo_global if hlo_global else float("nan")
+
+    mem = base.get("memory", {})
+    hbm_used = mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+
+    return {
+        "arch": base["arch"],
+        "shape": base["shape"],
+        "chips": chips,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": ratio,
+        "hbm_per_device_gb": hbm_used / 1e9,
+        "fits_hbm": hbm_used <= V5E["hbm_bytes"],
+        "collective_breakdown": {k: v for k, v in coll.items() if k != "count" and v},
+        "compile_s": base.get("compile_s", float("nan")),
+    }
+
+
+def bottleneck_hint(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["useful_ratio"] < 0.5:
+            return "compute-bound but low useful ratio: cut remat/recompute or fuse non-matmul ops"
+        return "compute-bound: near roofline; only lower-precision or better MXU tiling helps"
+    if d == "memory":
+        return "memory-bound: raise arithmetic intensity (fusion, bigger per-chip batch, bf16 IO)"
+    return "collective-bound: reshard to cut all-gathers (FSDP prefetch, reduce-scatter grads) or overlap"
+
+
+def main() -> int:
+    base, cost = load_records()
+    keys = sorted(set(base) & set(cost))
+    missing = sorted(set(base) - set(cost))
+    rows = [analyze_one(base[k], cost[k]) for k in keys]
+
+    csv_lines = ["arch,shape,t_compute_s,t_memory_s,t_collective_s,dominant,"
+                 "model_flops,hlo_flops_global,useful_ratio,hbm_gb,fits"]
+    md = ["| arch | shape | compute s | memory s | collective s | dominant | "
+          "MODEL/HLO | HBM GB/chip | fits |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        csv_lines.append(
+            f"{r['arch']},{r['shape']},{r['t_compute_s']:.4g},{r['t_memory_s']:.4g},"
+            f"{r['t_collective_s']:.4g},{r['dominant']},{r['model_flops']:.4g},"
+            f"{r['hlo_flops_global']:.4g},{r['useful_ratio']:.3f},"
+            f"{r['hbm_per_device_gb']:.2f},{r['fits_hbm']}"
+        )
+        md.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | **{r['dominant']}** | "
+            f"{r['useful_ratio']:.3f} | {r['hbm_per_device_gb']:.2f} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} |"
+        )
+
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "experiments")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "roofline.csv"), "w") as f:
+        f.write("\n".join(csv_lines) + "\n")
+    with open(os.path.join(out_dir, "roofline.md"), "w") as f:
+        f.write("\n".join(md) + "\n\n")
+        f.write("### Dominant-term hints\n\n")
+        for r in rows:
+            f.write(f"- **{r['arch']} x {r['shape']}**: {bottleneck_hint(r)}\n")
+    with open(os.path.join(out_dir, "roofline_rows.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+    print("\n".join(md))
+    if missing:
+        print(f"\n[roofline] WARNING: no cost record yet for {missing}")
+    print(f"\n[roofline] {len(rows)} rows -> experiments/roofline.{{csv,md}}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,39 @@
+"""Channel sweep: how wireless conditions drive the adaptive Top-k and the
+accuracy/communication trade-off (the paper's §III-A mechanism in isolation).
+
+Sweeps mean uplink SNR; for each condition reports the per-round k chosen by
+the Shannon budget, the uplink bytes, and final accuracy after a few rounds.
+
+Run:  PYTHONPATH=src python examples/channel_sweep.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.configs.gpt2_paper import REDUCED_CLIENT, REDUCED_SERVER  # noqa: E402
+from repro.core import ChannelConfig  # noqa: E402
+from repro.data import make_banking77_like  # noqa: E402
+from repro.fed import FedConfig, run_federated  # noqa: E402
+
+client = REDUCED_CLIENT.with_overrides(num_layers=2, d_model=128, num_heads=4, d_ff=512)
+server = REDUCED_SERVER.with_overrides(num_layers=2, d_model=192, num_heads=4,
+                                       num_kv_heads=4, d_ff=768)
+ds = make_banking77_like(vocab_size=client.vocab_size, seq_len=20, total=1500, seed=0)
+
+print(f"{'SNR dB':>8} {'BW MHz':>8} {'mean k':>8} {'uplink MB':>10} {'best acc':>9}")
+for snr, bw in [(0, 0.2e6), (5, 0.5e6), (10, 1e6), (20, 2e6), (30, 10e6)]:
+    fed = FedConfig(
+        method="adald", num_clients=6, clients_per_round=3, rounds=4,
+        public_size=256, public_batch=64, eval_size=256, local_steps=3,
+        distill_steps=1, seed=0,
+        channel=ChannelConfig(bandwidth_hz=bw, mean_snr_db=snr),
+    )
+    run = run_federated(client, server, ds, fed)
+    print(f"{snr:8.0f} {bw/1e6:8.1f} {np.mean(run.mean_k):8.0f} "
+          f"{run.ledger.uplink_mb:10.3f} {max(run.server_acc):9.3f}")
+print("\nworse channel -> smaller k -> fewer bytes; accuracy degrades gracefully"
+      "\n(the adaptive aggregation compensating for sparsity is the paper's point).")

@@ -1,0 +1,86 @@
+"""Heterogeneous federated distillation — the paper's core motivation.
+
+Parameter-sharing FL REQUIRES homogeneous architectures; federated
+distillation exchanges only (logits, LoRA projections) on a public set, so
+clients can run completely different model families.  Here three clients —
+a GPT-2-family dense model, a Mamba2 (attention-free SSM!) and a
+granite-style MoE — jointly teach one server through the AdaLD pipeline.
+The only shared contract is the tokenizer/vocab and the LoRA rank of the
+projection exchange.
+
+Run:  PYTHONPATH=src python examples/heterogeneous_fed.py [rounds]
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.configs.base import LoRAConfig  # noqa: E402
+from repro.configs.gpt2_paper import REDUCED_SERVER  # noqa: E402
+from repro.core import ChannelConfig, ChannelSimulator  # noqa: E402
+from repro.data import dirichlet_partition, make_fed_benchmark_dataset, split_public_private  # noqa: E402
+from repro.fed.client import Client  # noqa: E402
+from repro.fed.pretrain import pretrain_classifier, pretrain_lm  # noqa: E402
+from repro.fed.server import Server  # noqa: E402
+from repro.fed.steps import make_eval_fn  # noqa: E402
+
+rounds = int(sys.argv[1]) if len(sys.argv) > 1 else 5
+VOCAB = 1024
+LORA = LoRAConfig(rank=16, targets=("q", "v", "o", "head"))
+
+# --- three DIFFERENT client architectures, one shared vocab ---
+dense = get_smoke_config("stablelm-1.6b").with_overrides(
+    name="hetero-dense", vocab_size=VOCAB, lora=LORA, max_seq_len=128)
+ssm = get_smoke_config("mamba2-130m").with_overrides(
+    name="hetero-ssm", vocab_size=VOCAB, lora=LORA, max_seq_len=128)
+moe = get_smoke_config("granite-moe-1b-a400m").with_overrides(
+    name="hetero-moe", vocab_size=VOCAB, lora=LORA, max_seq_len=128)
+client_cfgs = [dense, ssm, moe]
+server_cfg = REDUCED_SERVER
+
+ds = make_fed_benchmark_dataset(VOCAB, seed=0, total=1800)
+public, private = split_public_private(ds, 256, seed=0)
+parts = dirichlet_partition(private.labels, 3, gamma=0.5, seed=0)
+
+# pretrain split (disjoint): supervised for clients, LM-only for the server
+pre = private.subset(np.arange(300))
+clients = []
+for i, cfg in enumerate(client_cfgs):
+    init_p = pretrain_classifier(cfg, pre, num_classes=77, steps=60, seed=i)
+    clients.append(
+        Client(i, cfg, private.subset(parts[i] + 300), num_classes=77, seed=i,
+               local_steps=6, distill_steps=1, lr=2e-3,
+               initial_params=init_p)
+    )
+server = Server(server_cfg, aggregation="adaptive", distill_steps=15,
+                distill_lr=3e-3, initial_params=pretrain_lm(server_cfg, pre, steps=40))
+chan = ChannelSimulator(3, ChannelConfig(), seed=0)
+evaluate = make_eval_fn(server_cfg, 77)
+eval_tok = jnp.asarray(private.tokens[-256:])
+eval_lab = jnp.asarray(private.labels[-256:])
+
+print(f"{'round':>6} {'server acc':>11} " + " ".join(f"{c.name[:12]:>13}" for c in client_cfgs))
+g_logits = g_h = None
+pub = jnp.asarray(public.tokens[:96])
+for rnd in range(rounds):
+    ups = []
+    accs = []
+    for c, st in zip(clients, chan.states(rnd, [0, 1, 2])):
+        if g_logits is not None:
+            c.local_distill(pub, g_logits, g_h)
+        accs.append(c.local_train()["acc"])
+        ups.append(c.upload(pub, st))
+    k_g, h_g = server.aggregate_uploads(ups)
+    server.distill(pub, k_g, h_g)
+    g_logits, g_h, _ = server.broadcast(pub)
+    s_acc = evaluate(server.params, eval_tok, eval_lab)
+    print(f"{rnd:6d} {s_acc:11.3f} " + " ".join(f"{a:13.3f}" for a in accs)
+          + f"   (k={[u.k for u in ups]})")
+
+print("\nThree architecture families (dense attention / SSM / MoE) distilled"
+      "\ninto one server — impossible for parameter-averaging FL.")

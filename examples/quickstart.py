@@ -1,0 +1,69 @@
+"""Quickstart: one AdaLD communication round, end to end, in ~a minute on CPU.
+
+Walks the paper's Algorithm 1 explicitly with the public API:
+  1. clients fine-tune LoRA on private non-IID data          (eq. 2)
+  2. clients infer the public set and adaptively Top-k their
+     logits by live channel state                            (eqs. 3-5)
+  3. server aggregates sparse logits adaptively              (eqs. 6-7)
+  4. server distills into its (larger) LLM                   (eqs. 9-10)
+  5. server broadcasts; clients distill locally
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.gpt2_paper import REDUCED_CLIENT, REDUCED_SERVER  # noqa: E402
+from repro.core import ChannelConfig, ChannelSimulator  # noqa: E402
+from repro.data import dirichlet_partition, make_banking77_like, split_public_private  # noqa: E402
+from repro.fed.client import Client  # noqa: E402
+from repro.fed.server import Server  # noqa: E402
+
+# --- data: synthetic Banking77 statistics (77 intents), Dirichlet non-IID ---
+dataset = make_banking77_like(vocab_size=REDUCED_CLIENT.vocab_size, seq_len=20,
+                              total=1200, seed=0)
+public, private = split_public_private(dataset, 256, seed=0)
+parts = dirichlet_partition(private.labels, num_clients=3, gamma=0.5, seed=0)
+
+clients = [
+    Client(i, REDUCED_CLIENT, private.subset(parts[i]), num_classes=77,
+           seed=i, local_steps=4)
+    for i in range(3)
+]
+server = Server(REDUCED_SERVER, aggregation="adaptive")
+channel = ChannelSimulator(3, ChannelConfig(bandwidth_hz=1e6, mean_snr_db=10), seed=0)
+
+pub_tokens = jnp.asarray(public.tokens[:64])
+
+# --- 1. local fine-tuning (paper eq. 2) ---
+for c in clients:
+    m = c.local_train()
+    print(f"client {c.client_id}: local fine-tune loss={m['loss']:.3f} acc={m['acc']:.3f}")
+
+# --- 2. channel-adaptive Top-k upload (paper §III-A) ---
+uploads = []
+for c, state in zip(clients, channel.states(0, [0, 1, 2])):
+    up = c.upload(pub_tokens, state)
+    uploads.append(up)
+    print(f"client {c.client_id}: SNR={state.snr_db:5.1f}dB -> k={up.k:5d} "
+          f"({up.payload.bytes / 1e3:.1f} kB uplink of "
+          f"{64 * REDUCED_CLIENT.vocab_size * 2 / 1e3:.0f} kB dense)")
+
+# --- 3+4. adaptive aggregation + server distillation (eqs. 6-10) ---
+k_g, h_g = server.aggregate_uploads(uploads)
+metrics = server.distill(pub_tokens, k_g, h_g)
+print(f"server: distill loss={metrics['loss']:.4f} "
+      f"(logits={metrics['logits']:.4f}, lora={metrics['lora']:.4f})")
+
+# --- 5. broadcast + client-side distillation ---
+g_logits, g_h, bits = server.broadcast(pub_tokens)
+for c in clients:
+    m = c.local_distill(pub_tokens, g_logits, g_h)
+    print(f"client {c.client_id}: local distill loss={m['loss']:.4f}")
+print(f"downlink: {bits / 8 / 1e3:.1f} kB broadcast")
+print("OK — one full AdaLD round.")

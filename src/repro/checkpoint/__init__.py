@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import latest_step, restore, restore_step, save, save_step
+
+__all__ = ["latest_step", "restore", "restore_step", "save", "save_step"]

@@ -1,0 +1,74 @@
+"""AdaLD core: the paper's contribution as composable JAX modules.
+
+Public API:
+  channel     — Shannon-capacity byte budgets (paper eq. 5, §III-A)
+  topk        — adaptive Top-k sparsification (eqs. 3-4)
+  aggregation — adaptive / zeropad / mean aggregation (eqs. 6-7)
+  distill     — logits + LoRA-projection KL losses (eqs. 8-10)
+  protocol    — exact communication accounting (§III-C, Fig. 3)
+"""
+
+from repro.core.aggregation import (
+    aggregate,
+    aggregate_adaptive,
+    aggregate_mean_nonzero,
+    aggregate_sparse,
+    aggregate_zeropad,
+)
+from repro.core.channel import (
+    ChannelConfig,
+    ChannelSimulator,
+    ChannelState,
+    bits_per_entry,
+    capacity_bps,
+    topk_budget,
+)
+from repro.core.distill import (
+    DEFAULT_LAMBDA,
+    DEFAULT_TEMPERATURE,
+    kl_divergence,
+    logits_distill_loss,
+    lora_projection_loss,
+    soft_labels,
+    total_distill_loss,
+)
+from repro.core.protocol import (
+    CommLedger,
+    PayloadSpec,
+    RoundStats,
+    UplinkPayload,
+    full_logits_bits,
+    topk_upload_bits,
+)
+from repro.core.topk import SparseLogits, densify, topk_mask_dense, topk_sparsify
+
+__all__ = [
+    "aggregate",
+    "aggregate_adaptive",
+    "aggregate_mean_nonzero",
+    "aggregate_sparse",
+    "aggregate_zeropad",
+    "ChannelConfig",
+    "ChannelSimulator",
+    "ChannelState",
+    "bits_per_entry",
+    "capacity_bps",
+    "topk_budget",
+    "DEFAULT_LAMBDA",
+    "DEFAULT_TEMPERATURE",
+    "kl_divergence",
+    "logits_distill_loss",
+    "lora_projection_loss",
+    "soft_labels",
+    "total_distill_loss",
+    "CommLedger",
+    "PayloadSpec",
+    "RoundStats",
+    "UplinkPayload",
+    "full_logits_bits",
+    "topk_upload_bits",
+    "SparseLogits",
+    "densify",
+    "topk_mask_dense",
+    "topk_sparsify",
+]

@@ -1,0 +1,192 @@
+"""Wireless channel model driving the adaptive Top-k budget (paper §III-A).
+
+The paper models each client's uplink as an AWGN channel.  Shannon capacity
+
+    C = B * log2(1 + SNR)            [bits/s]          (paper eq. 5)
+
+with bandwidth ``B`` (Hz) and linear SNR.  A client granted fraction
+``eta`` of the channel for at most ``T`` seconds per round may transmit
+``eta * C * T`` bits, which caps the number of (logit, index) pairs it can
+upload:
+
+    k = floor(eta * C * T / d)                          (paper §III-A)
+
+where ``d`` is the number of bits to encode one logit value plus its
+dimension index.
+
+On TPU this module is a *deterministic byte-budget simulator*: the budget it
+produces is enforced on the actual collective payload shapes by
+:mod:`repro.core.protocol`, so communication accounting is exact even though
+no radio exists.  Fading is simulated with a seeded PRNG so experiments are
+reproducible (paper Table I: seeds 0, 1, 42).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "ChannelState",
+    "ChannelConfig",
+    "ChannelSimulator",
+    "capacity_bps",
+    "bit_budget",
+    "topk_budget",
+    "bits_per_entry",
+]
+
+
+def capacity_bps(bandwidth_hz: float, snr_db: float) -> float:
+    """Shannon capacity of an AWGN link (paper eq. 5)."""
+    if bandwidth_hz <= 0.0:
+        return 0.0
+    snr_linear = 10.0 ** (snr_db / 10.0)
+    return bandwidth_hz * math.log2(1.0 + snr_linear)
+
+
+def bits_per_entry(value_bits: int, vocab_size: int) -> int:
+    """Bits ``d`` to encode one (logit, index) pair.
+
+    A top-k entry is a value (``value_bits``, e.g. 16 for bf16) plus an index
+    into the vocabulary, which needs ``ceil(log2(vocab))`` bits.
+    """
+    if vocab_size <= 1:
+        index_bits = 1
+    else:
+        index_bits = int(math.ceil(math.log2(vocab_size)))
+    return int(value_bits) + index_bits
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelState:
+    """Instantaneous link state for one client in one round."""
+
+    bandwidth_hz: float
+    snr_db: float
+    eta: float  # fraction of channel resource allocated to this client
+    deadline_s: float  # T: max transmission time per round
+
+    @property
+    def capacity_bps(self) -> float:
+        return capacity_bps(self.bandwidth_hz, self.snr_db)
+
+    @property
+    def bit_budget(self) -> float:
+        return self.eta * self.capacity_bps * self.deadline_s
+
+
+def bit_budget(state: ChannelState) -> float:
+    return state.bit_budget
+
+
+def topk_budget(
+    state: ChannelState,
+    *,
+    vocab_size: int,
+    num_samples: int,
+    value_bits: int = 16,
+    k_min: int = 1,
+    k_max: int | None = None,
+) -> int:
+    """Maximum permissible k per sample: ``k = floor(eta*C*T / d)`` spread
+    over ``num_samples`` public samples uploaded this round.
+
+    The paper states the per-logit budget; with a batch of public samples the
+    same budget divides across samples (each sample's sparse vector costs
+    ``k*d`` bits).  Clamped to ``[k_min, min(k_max, vocab)]`` so a client in
+    deep fade still sends its argmax rather than dropping out.
+    """
+    d = bits_per_entry(value_bits, vocab_size)
+    total_entries = state.bit_budget / float(d)
+    k = int(math.floor(total_entries / max(1, num_samples)))
+    hi = vocab_size if k_max is None else min(k_max, vocab_size)
+    return max(k_min, min(k, hi))
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    """Fleet-level channel configuration.
+
+    Defaults loosely follow an LTE-like uplink: 1 MHz effective bandwidth,
+    mean SNR 10 dB with log-normal shadowing + Rayleigh-like fast fading,
+    1 s round deadline, equal resource share ``eta = 1/num_selected``.
+    """
+
+    bandwidth_hz: float = 1.0e6
+    mean_snr_db: float = 10.0
+    shadowing_std_db: float = 4.0
+    fast_fading: bool = True
+    deadline_s: float = 1.0
+    eta: float | None = None  # None -> 1/num_clients per round
+    value_bits: int = 16
+
+
+class ChannelSimulator:
+    """Deterministic per-round channel realisation for N clients.
+
+    ``states(round, client_ids)`` returns one :class:`ChannelState` per
+    selected client.  SNR_n(t) = mean + shadowing_n + fading_n(t), with
+    shadowing fixed per client (spatial) and fading redrawn per round
+    (temporal), all from a seeded generator.
+    """
+
+    def __init__(self, num_clients: int, config: ChannelConfig | None = None, *, seed: int = 0):
+        self.num_clients = int(num_clients)
+        self.config = config or ChannelConfig()
+        self._rng = np.random.default_rng(seed)
+        # Per-client static shadowing (log-normal in dB).
+        self._shadowing_db = self._rng.normal(
+            0.0, self.config.shadowing_std_db, size=self.num_clients
+        )
+
+    def states(self, round_index: int, client_ids: Sequence[int]) -> list[ChannelState]:
+        cfg = self.config
+        eta = cfg.eta if cfg.eta is not None else 1.0 / max(1, len(client_ids))
+        # Per-round fading: seeded by (base rng stream, round) for determinism
+        # independent of call order.
+        fade_rng = np.random.default_rng(
+            np.random.SeedSequence(entropy=round_index, spawn_key=(7,))
+        )
+        out = []
+        for cid in client_ids:
+            snr = cfg.mean_snr_db + float(self._shadowing_db[cid % self.num_clients])
+            if cfg.fast_fading:
+                # Rayleigh power fading: 10*log10(Exp(1)) has mean ~ -2.5 dB.
+                snr += 10.0 * math.log10(max(1e-6, fade_rng.exponential(1.0)))
+            out.append(
+                ChannelState(
+                    bandwidth_hz=cfg.bandwidth_hz,
+                    snr_db=snr,
+                    eta=eta,
+                    deadline_s=cfg.deadline_s,
+                )
+            )
+        return out
+
+    def topk_for(
+        self,
+        round_index: int,
+        client_ids: Sequence[int],
+        *,
+        vocab_size: int,
+        num_samples: int,
+        k_min: int = 1,
+        k_max: int | None = None,
+    ) -> list[int]:
+        """Per-client adaptive k for this round (paper: 'based on real-time
+        channel condition')."""
+        return [
+            topk_budget(
+                s,
+                vocab_size=vocab_size,
+                num_samples=num_samples,
+                value_bits=self.config.value_bits,
+                k_min=k_min,
+                k_max=k_max,
+            )
+            for s in self.states(round_index, client_ids)
+        ]

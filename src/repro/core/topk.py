@@ -1,0 +1,113 @@
+"""Adaptive Top-k logit sparsification (paper §III-A, eqs. 3-4).
+
+Each client keeps only the k largest logits per sample:
+
+    K̃_{n,c}(x) = K_{n,c}(x) * 1[c in I_{n,k}(x)]        (eq. 4)
+
+Two representations are used throughout the framework:
+
+* **sparse** ``(values, indices)`` of shape ``(..., k)`` — what is actually
+  "transmitted" (its size is exactly the paper's ``k * d`` bits);
+* **dense** ``(..., vocab)`` with zeros off-support — what aggregation
+  consumes (paper's server-side view).
+
+Dense top-k masking for very large vocabularies (50k-256k in the assigned
+architectures) is the compute hot-spot of the uplink path; a Pallas
+bisection-select kernel (:mod:`repro.kernels.topk_select`) implements it
+TPU-natively.  This module is the pure-jnp composable API; ``use_kernel=True``
+routes to the kernel.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SparseLogits",
+    "topk_sparsify",
+    "topk_mask_dense",
+    "densify",
+    "sparsify_batch",
+    "payload_entries",
+]
+
+
+class SparseLogits(NamedTuple):
+    """Transmitted sparse representation of one client's logits.
+
+    values:  (..., k) top-k logit values, descending.
+    indices: (..., k) vocab indices of those values (int32).
+    k:       static python int — the channel-adaptive budget this round.
+    vocab:   static python int — full dimensionality c.
+    """
+
+    values: jax.Array
+    indices: jax.Array
+    k: int
+    vocab: int
+
+
+def topk_sparsify(logits: jax.Array, k: int) -> SparseLogits:
+    """Select the top-k logits per row (paper eq. 3).
+
+    Works for any leading batch shape; the last axis is the vocab axis.
+    """
+    vocab = logits.shape[-1]
+    k = int(min(k, vocab))
+    values, indices = jax.lax.top_k(logits, k)
+    return SparseLogits(values=values, indices=indices.astype(jnp.int32), k=k, vocab=vocab)
+
+
+def densify(sparse: SparseLogits, *, fill: float = 0.0) -> jax.Array:
+    """Scatter a sparse payload back to a dense ``(..., vocab)`` vector
+    (paper eq. 4: zeros off the top-k support, unless ``fill`` overrides)."""
+    batch_shape = sparse.values.shape[:-1]
+    dense = jnp.full(batch_shape + (sparse.vocab,), fill, dtype=sparse.values.dtype)
+    return _scatter_last(dense, sparse.indices, sparse.values)
+
+
+def _scatter_last(dense: jax.Array, indices: jax.Array, values: jax.Array) -> jax.Array:
+    """Scatter ``values`` into ``dense`` along the last axis at ``indices``."""
+    # Flatten batch dims, vmap a 1-D scatter, restore shape.
+    batch_shape = dense.shape[:-1]
+    vocab = dense.shape[-1]
+    flat_dense = dense.reshape((-1, vocab))
+    flat_idx = indices.reshape((-1, indices.shape[-1]))
+    flat_val = values.reshape((-1, values.shape[-1]))
+
+    def scatter_row(row, idx, val):
+        return row.at[idx].set(val)
+
+    out = jax.vmap(scatter_row)(flat_dense, flat_idx, flat_val)
+    return out.reshape(batch_shape + (vocab,))
+
+
+def topk_mask_dense(logits: jax.Array, k: int, *, use_kernel: bool = False) -> jax.Array:
+    """Dense top-k sparsification: keep top-k per row, zero elsewhere.
+
+    Equivalent to ``densify(topk_sparsify(x, k))`` but computed without
+    materialising indices when the Pallas kernel path is used.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        return kops.topk_mask(logits, k)
+    sparse = topk_sparsify(logits, k)
+    return densify(sparse)
+
+
+def sparsify_batch(logits: jax.Array, k: int) -> SparseLogits:
+    """Alias of :func:`topk_sparsify` for (num_samples, vocab) batches —
+    the per-round public-set upload of one client."""
+    return topk_sparsify(logits, k)
+
+
+def payload_entries(sparse: SparseLogits) -> int:
+    """Number of (value, index) entries in a payload = samples * k."""
+    n = 1
+    for s in sparse.values.shape:
+        n *= int(s)
+    return n

@@ -1,0 +1,15 @@
+from repro.data.partition import dirichlet_partition, iid_partition, split_public_private
+from repro.data.pipeline import batch_iterator, epoch_batches
+from repro.data.synthetic import IntentDataset, make_banking77_like, make_fed_benchmark_dataset, make_lm_stream
+
+__all__ = [
+    "dirichlet_partition",
+    "iid_partition",
+    "split_public_private",
+    "batch_iterator",
+    "epoch_batches",
+    "IntentDataset",
+    "make_banking77_like",
+    "make_fed_benchmark_dataset",
+    "make_lm_stream",
+]

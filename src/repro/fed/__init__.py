@@ -1,0 +1,5 @@
+from repro.fed.client import Client, ClientUpload
+from repro.fed.rounds import METHODS, FedConfig, FedRun, run_federated
+from repro.fed.server import Server
+
+__all__ = ["Client", "ClientUpload", "Server", "METHODS", "FedConfig", "FedRun", "run_federated"]

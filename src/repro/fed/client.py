@@ -1,0 +1,130 @@
+"""FL client: local LoRA fine-tuning + sparsified knowledge upload
+(Algorithm 1, client loop: lines 3-12)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.channel import ChannelState, topk_budget
+from repro.core.protocol import PayloadSpec, UplinkPayload
+from repro.core.topk import SparseLogits, topk_sparsify
+from repro.data.pipeline import epoch_batches
+from repro.data.synthetic import IntentDataset
+from repro.fed import steps as fed_steps
+from repro.models import init as model_init
+
+__all__ = ["ClientUpload", "Client"]
+
+
+@dataclasses.dataclass
+class ClientUpload:
+    client_id: int
+    sparse: SparseLogits  # top-k (values, indices) on the public set
+    h: jax.Array | None  # (P, r) LoRA projections (paper eq. 8)
+    payload: UplinkPayload  # byte accounting
+    k: int
+
+
+class Client:
+    def __init__(
+        self,
+        client_id: int,
+        cfg: ModelConfig,
+        private_data: IntentDataset,
+        *,
+        num_classes: int,
+        seed: int = 0,
+        lr: float = 1e-3,
+        distill_lr: float = 1e-3,
+        temperature: float = 2.0,
+        lam: float = 0.03,
+        batch_size: int = 32,
+        local_steps: int = 4,
+        distill_steps: int = 2,
+        restrict_to_support: bool = False,
+        initial_params=None,
+    ):
+        self.client_id = client_id
+        self.cfg = cfg
+        self.data = private_data
+        self.num_classes = num_classes
+        self.batch_size = batch_size
+        self.local_steps = local_steps
+        self.distill_steps = distill_steps
+        if initial_params is not None:
+            # shared pretrained backbone W' (paper eq. 1) + fresh LoRA delta
+            import jax as _jax
+
+            from repro.lora import merge_lora, split_lora
+
+            own_lora, _ = split_lora(model_init(_jax.random.PRNGKey(seed), cfg))
+            _, frozen = split_lora(initial_params)
+            self.params = merge_lora(own_lora, frozen)
+        else:
+            self.params = model_init(jax.random.PRNGKey(seed), cfg)
+        self.opt = fed_steps.init_lora_opt(self.params, cfg)
+        self._train_step = fed_steps.make_finetune_step(cfg, num_classes, lr=lr)
+        self._distill_step = fed_steps.make_distill_step(
+            cfg, lr=distill_lr, temperature=temperature, lam=lam,
+            restrict_to_support=restrict_to_support,
+        )
+        self._rng = np.random.default_rng(seed + 1000 * (client_id + 1))
+
+    # ---- Algorithm 1, line 8: local supervised fine-tuning ----
+    def local_train(self) -> dict:
+        metrics = {}
+        done = 0
+        while done < self.local_steps:
+            for batch in epoch_batches(self.data, self.batch_size, rng=self._rng):
+                jb = {k: jnp.asarray(v) for k, v in batch.items()}
+                self.params, self.opt, metrics = self._train_step(self.params, self.opt, jb)
+                done += 1
+                if done >= self.local_steps:
+                    break
+        return {k: float(v) for k, v in metrics.items()}
+
+    # ---- Algorithm 1, lines 5-7: local distillation vs global knowledge ----
+    def local_distill(self, public_tokens, g_logits, g_h) -> dict:
+        metrics = {}
+        for _ in range(self.distill_steps):
+            self.params, self.opt, metrics = self._distill_step(
+                self.params, self.opt, public_tokens, g_logits, g_h
+            )
+        return {k: float(v) for k, v in metrics.items()}
+
+    # ---- Algorithm 1, lines 9-11: infer public set, top-k, upload ----
+    def upload(
+        self,
+        public_tokens: jax.Array,
+        channel: ChannelState,
+        *,
+        value_bits: int = 16,
+        k_override: int | None = None,
+        send_h: bool = True,
+    ) -> ClientUpload:
+        logits, h = fed_steps.public_logits(self.params, self.cfg, public_tokens)
+        vocab = logits.shape[-1]
+        n_samples = logits.shape[0]
+        if k_override is not None:
+            k = int(min(k_override, vocab))
+        else:
+            k = topk_budget(
+                channel, vocab_size=vocab, num_samples=n_samples, value_bits=value_bits
+            )
+        sparse = topk_sparsify(logits, k)
+        rank = self.cfg.lora.rank if (send_h and self.cfg.lora is not None) else None
+        spec = PayloadSpec(
+            num_samples=n_samples, vocab=vocab, k=k, lora_rank=rank, value_bits=value_bits
+        )
+        return ClientUpload(
+            client_id=self.client_id,
+            sparse=sparse,
+            h=h if send_h else None,
+            payload=UplinkPayload(client_id=self.client_id, spec=spec, snr_db=channel.snr_db),
+            k=k,
+        )

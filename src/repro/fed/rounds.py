@@ -1,0 +1,243 @@
+"""Federated AdaLD round orchestration (paper Algorithm 1 + §IV setup).
+
+One communication round (Fig. 1's 10 steps):
+  1. server broadcasts global knowledge {K_g, h_g} (downlink accounted);
+  2. selected clients distill locally against it (lines 5-7);
+  3. clients fine-tune on private data (line 8);
+  4. clients infer the public set, adaptively Top-k by live channel state
+     (lines 9-10) and upload sparse logits + LoRA projections (line 11);
+  5. server aggregates (line 15), distills into the LLM (line 16).
+
+Four method presets reproduce the paper's comparison (§IV):
+  adald      — adaptive Top-k + adaptive aggregation + LoRA-projection loss
+  adaptive   — adaptive Top-k + adaptive aggregation, logits-only
+  zeropad    — adaptive Top-k + zero-padding mean aggregation, logits-only
+  all_logits — full logits (k = vocab), mean aggregation, logits-only
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.channel import ChannelConfig, ChannelSimulator
+from repro.core.protocol import CommLedger, RoundStats
+from repro.data.partition import dirichlet_partition, iid_partition, split_public_private
+from repro.data.synthetic import IntentDataset
+from repro.fed.client import Client
+from repro.fed.server import Server
+from repro.fed.steps import make_eval_fn
+
+__all__ = ["FedConfig", "FedRun", "run_federated", "METHODS"]
+
+Method = Literal["adald", "adaptive", "zeropad", "all_logits"]
+
+METHODS: dict[str, dict] = {
+    "adald": dict(aggregation="adaptive", send_h=True, adaptive_k=True),
+    "adaptive": dict(aggregation="adaptive", send_h=False, adaptive_k=True),
+    "zeropad": dict(aggregation="zeropad", send_h=False, adaptive_k=True),
+    "all_logits": dict(aggregation="zeropad", send_h=False, adaptive_k=False),
+}
+
+
+@dataclasses.dataclass
+class FedConfig:
+    """Paper Table I defaults (reduced-scale knobs exposed)."""
+
+    method: Method = "adald"
+    num_clients: int = 50
+    clients_per_round: int = 10
+    rounds: int = 20
+    public_size: int = 2000
+    non_iid: bool = True
+    dirichlet_gamma: float = 0.5
+    seed: int = 0
+    temperature: float = 2.0
+    lam: float = 0.03
+    lr: float = 1e-3
+    distill_lr: float = 3e-3
+    local_steps: int = 4
+    distill_steps: int = 2       # client-side distill updates per round
+    server_distill_steps: int = 12  # server-side (the LLM learns only here)
+    public_batch: int = 256  # samples of the public set used per round
+    eval_size: int = 512
+    use_kernels: bool = False
+    restrict_to_support: bool = False
+    channel: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
+    # Backbone pretraining (simulates the paper's pretrained GPT-2 W'; the
+    # pretrain split is disjoint from public/private/eval).  0 disables.
+    # Clients: supervised (they fine-tune on labelled shards anyway);
+    # server: LM-only by default — generic features, NO class knowledge, so
+    # its accuracy trajectory isolates what distillation transfers (the
+    # paper's Fig. 2 server curve).
+    pretrain_steps: int = 80
+    pretrain_frac: float = 0.12
+    pretrain_lr: float = 2e-3
+    server_pretrain: str = "lm"  # "lm" | "supervised" | "none"
+    server_pretrain_steps: int = 60
+
+
+@dataclasses.dataclass
+class FedRun:
+    ledger: CommLedger
+    server_acc: list[float]
+    client_acc: list[float]
+    mean_k: list[float]
+
+    def summary(self) -> dict:
+        return {
+            **self.ledger.summary(),
+            "best_server_acc": max(self.server_acc) if self.server_acc else float("nan"),
+        }
+
+
+def run_federated(
+    client_cfg: ModelConfig,
+    server_cfg: ModelConfig,
+    dataset: IntentDataset,
+    fed: FedConfig,
+    *,
+    verbose: bool = False,
+) -> FedRun:
+    preset = METHODS[fed.method]
+    rng = np.random.default_rng(fed.seed)
+
+    # carve a disjoint pretraining split first (simulated pretrained W')
+    client_init = server_init = None
+    if fed.pretrain_steps > 0:
+        from repro.fed.pretrain import pretrain_classifier, pretrain_lm
+
+        n_pre = int(len(dataset) * fed.pretrain_frac)
+        pre_idx = np.random.default_rng(fed.seed + 31).permutation(len(dataset))
+        pretrain_ds = dataset.subset(pre_idx[:n_pre])
+        dataset = dataset.subset(pre_idx[n_pre:])
+        client_init = pretrain_classifier(
+            client_cfg, pretrain_ds, num_classes=dataset.num_classes,
+            steps=fed.pretrain_steps, lr=fed.pretrain_lr, seed=fed.seed,
+            verbose=verbose,
+        )
+        if fed.server_pretrain == "supervised":
+            server_init = pretrain_classifier(
+                server_cfg, pretrain_ds, num_classes=dataset.num_classes,
+                steps=fed.server_pretrain_steps, lr=fed.pretrain_lr,
+                seed=fed.seed + 999, verbose=verbose,
+            )
+        elif fed.server_pretrain == "lm":
+            server_init = pretrain_lm(
+                server_cfg, pretrain_ds, steps=fed.server_pretrain_steps,
+                lr=fed.pretrain_lr, seed=fed.seed + 999, verbose=verbose,
+            )
+
+    public, private = split_public_private(dataset, fed.public_size, seed=fed.seed)
+    if fed.non_iid:
+        parts = dirichlet_partition(
+            private.labels, fed.num_clients, gamma=fed.dirichlet_gamma, seed=fed.seed
+        )
+    else:
+        parts = iid_partition(len(private), fed.num_clients, seed=fed.seed)
+
+    clients = [
+        Client(
+            i,
+            client_cfg,
+            private.subset(parts[i]),
+            num_classes=dataset.num_classes,
+            seed=fed.seed + i,
+            lr=fed.lr,
+            distill_lr=fed.distill_lr,
+            temperature=fed.temperature,
+            lam=fed.lam,
+            local_steps=fed.local_steps,
+            distill_steps=fed.distill_steps,
+            restrict_to_support=fed.restrict_to_support,
+            initial_params=client_init,
+        )
+        for i in range(fed.num_clients)
+    ]
+    server = Server(
+        server_cfg,
+        seed=fed.seed + 999,
+        distill_lr=fed.distill_lr,
+        temperature=fed.temperature,
+        lam=fed.lam,
+        aggregation=preset["aggregation"],
+        distill_steps=fed.server_distill_steps,
+        use_kernels=fed.use_kernels,
+        restrict_to_support=fed.restrict_to_support,
+        initial_params=server_init,
+    )
+    chan_sim = ChannelSimulator(fed.num_clients, fed.channel, seed=fed.seed)
+
+    # held-out eval split (from the private pool tail, disjoint from clients'
+    # data only in expectation at reduced scale; standard FedD evaluation)
+    eval_idx = rng.permutation(len(private))[: fed.eval_size]
+    eval_tokens, eval_labels = private.tokens[eval_idx], private.labels[eval_idx]
+    evaluate = make_eval_fn(server_cfg, dataset.num_classes)
+    evaluate_client = make_eval_fn(client_cfg, dataset.num_classes)
+
+    ledger = CommLedger()
+    run = FedRun(ledger=ledger, server_acc=[], client_acc=[], mean_k=[])
+
+    pub_rng = np.random.default_rng(fed.seed + 7)
+
+    g_logits, g_h = None, None
+    for rnd in range(fed.rounds):
+        sel = rng.choice(fed.num_clients, size=fed.clients_per_round, replace=False)
+        pub_sel = pub_rng.integers(0, len(public), size=fed.public_batch)
+        pub_tokens = jnp.asarray(public.tokens[pub_sel])
+
+        downlink = 0
+        if g_logits is not None:
+            for cid in sel:
+                clients[cid].local_distill(pub_tokens_prev, g_logits, g_h)  # noqa: F821
+            downlink = g_bits * len(sel)  # noqa: F821 — broadcast to each selected client
+
+        states = chan_sim.states(rnd, list(sel))
+        uplink = 0.0
+        ks = []
+        uploads = []
+        for cid, st in zip(sel, states):
+            clients[cid].local_train()
+            up = clients[cid].upload(
+                pub_tokens,
+                st,
+                k_override=None if preset["adaptive_k"] else client_cfg.vocab_size,
+                send_h=preset["send_h"],
+            )
+            uploads.append(up)
+            uplink += up.payload.bytes
+            ks.append(up.k)
+
+        k_g, h_g = server.aggregate_uploads(uploads)
+        server.distill(pub_tokens, k_g, h_g)
+        g_logits, g_h, g_bits = server.broadcast(pub_tokens)
+        pub_tokens_prev = pub_tokens
+
+        s_acc = evaluate(server.params, jnp.asarray(eval_tokens), jnp.asarray(eval_labels))
+        c_acc = evaluate_client(
+            clients[sel[0]].params, jnp.asarray(eval_tokens), jnp.asarray(eval_labels)
+        )
+        run.server_acc.append(s_acc)
+        run.client_acc.append(c_acc)
+        run.mean_k.append(float(np.mean(ks)))
+        ledger.record(
+            RoundStats(
+                round_index=rnd,
+                uplink_bytes=uplink,
+                downlink_bytes=downlink / 8.0,
+                server_accuracy=s_acc,
+                client_accuracy=c_acc,
+                mean_k=float(np.mean(ks)),
+            )
+        )
+        if verbose:
+            print(
+                f"[{fed.method}] round {rnd:3d}  server_acc={s_acc:.3f} "
+                f"client_acc={c_acc:.3f}  mean_k={np.mean(ks):7.1f}  "
+                f"uplink={uplink/1e6:.2f}MB"
+            )
+    return run

@@ -1,0 +1,157 @@
+"""Jitted step functions for the FL runtime (Algorithm 1).
+
+Task convention (paper §IV): decoder-only LM fine-tuned for Banking77
+intent detection — class logits are the LM-head logits over the first
+``num_classes`` vocab ids at the LAST sequence position.  Distillation
+(paper eqs. 9-10) operates on the FULL last-position vocab logits (the
+high-dimensional vector the adaptive Top-k sparsifies).
+
+All steps train the LoRA subset only (paper §II-A): gradients flow through
+``split_lora`` so the frozen backbone never enters the optimizer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.distill import total_distill_loss
+from repro.lora import merge_lora, split_lora
+from repro.models import forward
+from repro.optim import AdamWState, adamw_init, adamw_update
+
+__all__ = [
+    "class_logits",
+    "public_logits",
+    "make_finetune_step",
+    "make_distill_step",
+    "make_eval_fn",
+    "init_lora_opt",
+]
+
+
+def class_logits(logits_last: jax.Array, num_classes: int) -> jax.Array:
+    """(B, V) last-position logits -> (B, num_classes) class readout."""
+    return logits_last[..., :num_classes]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def public_logits(params, cfg: ModelConfig, tokens: jax.Array):
+    """Last-position vocab logits + pooled LoRA projection on a public batch.
+
+    Returns (logits (B, V), h (B, r) or None) — the client/server upload
+    content (Algorithm 1 lines 4, 14).
+    """
+    logits, aux = forward(params, cfg, {"tokens": tokens})
+    return logits[:, -1, :], aux.lora_h
+
+
+def init_lora_opt(params, cfg: ModelConfig) -> AdamWState:
+    lora, _ = split_lora(params)
+    return adamw_init(lora, state_dtype=cfg.optimizer_state_dtype)
+
+
+@functools.lru_cache(maxsize=64)
+def make_finetune_step(
+    cfg: ModelConfig,
+    num_classes: int,
+    *,
+    lr: float = 1e-3,
+    weight_decay: float = 1e-3,
+) -> Callable:
+    """Supervised local fine-tuning on private data (paper eq. 2), LoRA-only.
+
+    step(params, opt, batch{tokens,labels}) -> (params, opt, metrics)
+    """
+
+    def loss_fn(lora, frozen, batch):
+        params = merge_lora(lora, frozen)
+        logits, aux = forward(params, cfg, {"tokens": batch["tokens"]})
+        cls = class_logits(logits[:, -1, :], num_classes)
+        logp = jax.nn.log_softmax(cls.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1).mean()
+        acc = jnp.mean((jnp.argmax(cls, -1) == batch["labels"]).astype(jnp.float32))
+        return nll + 0.01 * aux.moe_aux, acc
+
+    @jax.jit
+    def step(params, opt, batch):
+        lora, frozen = split_lora(params)
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(lora, frozen, batch)
+        new_lora, new_opt = adamw_update(
+            grads, opt, lora, lr=lr, weight_decay=weight_decay
+        )
+        return merge_lora(new_lora, frozen), new_opt, {"loss": loss, "acc": acc}
+
+    return step
+
+
+@functools.lru_cache(maxsize=64)
+def make_distill_step(
+    cfg: ModelConfig,
+    *,
+    lr: float = 1e-3,
+    temperature: float = 2.0,
+    lam: float = 0.03,
+    restrict_to_support: bool = False,
+) -> Callable:
+    """Knowledge-distillation update against global teacher knowledge
+    (Algorithm 1 lines 5-7 / 16): LoRA-only gradient on L_total (eq. 10).
+
+    step(params, opt, public_tokens, g_logits, g_h) -> (params, opt, metrics)
+    ``g_h`` may be None -> the λ-term drops (the 'Adaptive' baseline).
+    """
+
+    use_h = cfg.lora is not None
+
+    def loss_fn(lora, frozen, tokens, g_logits, g_h):
+        params = merge_lora(lora, frozen)
+        logits, aux = forward(params, cfg, {"tokens": tokens})
+        own = logits[:, -1, :]
+        loss, parts = total_distill_loss(
+            g_logits,
+            own,
+            g_h if use_h else None,
+            aux.lora_h if use_h else None,
+            temperature=temperature,
+            lam=lam,
+            restrict_to_support=restrict_to_support,
+        )
+        return loss + 0.01 * aux.moe_aux, parts
+
+    @jax.jit
+    def step(params, opt, tokens, g_logits, g_h):
+        lora, frozen = split_lora(params)
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            lora, frozen, tokens, g_logits, g_h
+        )
+        new_lora, new_opt = adamw_update(grads, opt, lora, lr=lr)
+        return merge_lora(new_lora, frozen), new_opt, {"loss": loss, **parts}
+
+    return step
+
+
+@functools.lru_cache(maxsize=64)
+def make_eval_fn(cfg: ModelConfig, num_classes: int, *, batch_size: int = 64) -> Callable:
+    """Accuracy over an IntentDataset (numpy arrays), batched + jitted."""
+
+    @functools.partial(jax.jit, static_argnames=())
+    def batch_acc(params, tokens, labels):
+        logits, _ = forward(params, cfg, {"tokens": tokens})
+        cls = class_logits(logits[:, -1, :], num_classes)
+        return jnp.sum((jnp.argmax(cls, -1) == labels).astype(jnp.float32))
+
+    def evaluate(params, tokens, labels) -> float:
+        n = tokens.shape[0]
+        correct = 0.0
+        for i in range(0, n - batch_size + 1, batch_size):
+            correct += float(
+                batch_acc(params, tokens[i : i + batch_size], labels[i : i + batch_size])
+            )
+        seen = (n // batch_size) * batch_size
+        return correct / max(1, seen)
+
+    return evaluate

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (DESIGN §2):
+
+  topk_select      — channel-adaptive Top-k over 50k-256k vocab (bisection)
+  distill_kl       — fused temperature-softmax KL with online logsumexp
+  sparse_agg       — fused adaptive aggregation (eqs. 6-7), one HBM pass
+  flash_attention  — blockwise causal attention for 32k prefill
+
+Each kernel ships with a pure-jnp oracle in ref.py and a jit'd wrapper in
+ops.py; on CPU the wrappers run interpret=True (see ops.interpret_mode).
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: blockwise causal flash attention (prefill hot-spot).
+
+Standard flash-attention-2 schedule adapted to the TPU grid model:
+grid = (batch*heads, q_blocks, kv_blocks) with the kv axis innermost and
+sequential; scratch carries the running max m, normaliser l and output
+accumulator per q block.  Causality is enforced at two granularities:
+whole kv-tiles strictly above the diagonal are skipped via ``pl.when``
+(no FLOPs, no HBM reads scheduled into the MXU), and the diagonal tile uses
+an element mask.  Block sizes default to 128x128 — MXU-aligned.
+
+Used by the prefill path where S is large (32k); the backward pass uses the
+jnp reference (prefill is inference-only in this framework).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+Q_BLK = 128
+KV_BLK = 128
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale: float, n_kv: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    @pl.when(kj <= qi)  # skip fully-masked tiles above the causal diagonal
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (Qb, D)
+        k = k_ref[0].astype(jnp.float32)  # (Kb, D)
+        v = v_ref[0].astype(jnp.float32)
+        scores = (q @ k.T) * scale  # (Qb, Kb)
+
+        @pl.when(kj == qi)
+        def _mask_diag():
+            rows = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+            cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+            scores_m = jnp.where(rows >= cols, scores, _NEG_INF)
+            _online_update(scores_m, v, m_scr, l_scr, acc_scr)
+
+        @pl.when(kj < qi)
+        def _full_tile():
+            _online_update(scores, v, m_scr, l_scr, acc_scr)
+
+    @pl.when(kj == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / l_scr[...][:, None]).astype(o_ref.dtype)
+
+
+def _online_update(scores, v, m_scr, l_scr, acc_scr):
+    m_old = m_scr[...]
+    m_new = jnp.maximum(m_old, jnp.max(scores, axis=-1))
+    p = jnp.exp(scores - m_new[:, None])
+    rescale = jnp.exp(m_old - m_new)
+    l_scr[...] = l_scr[...] * rescale + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * rescale[:, None] + p @ v
+    m_scr[...] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    """Causal attention over (B, S, D) fused head-batches."""
+    b, s, d = q.shape
+    qb = min(Q_BLK, s)
+    kb = min(KV_BLK, s)
+    assert s % qb == 0 and s % kb == 0, f"seq {s} must tile by {qb}/{kb}"
+    scale = d**-0.5
+    n_kv = s // kb
+    grid = (b, s // qb, n_kv)
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, n_kv=n_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, qb, d), lambda b_, i, j: (b_, i, 0)),
+            pl.BlockSpec((1, kb, d), lambda b_, i, j: (b_, j, 0)),
+            pl.BlockSpec((1, kb, d), lambda b_, i, j: (b_, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, d), lambda b_, i, j: (b_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

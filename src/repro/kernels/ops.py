@@ -1,0 +1,63 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in ``interpret=True`` mode — the
+kernel body runs in Python per grid step against the same BlockSpec tiling,
+validating the TPU program's logic; on a TPU backend they compile to Mosaic.
+Batch-dim folding/unfolding lives here so callers pass natural shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.distill_kl import distill_kl_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.sparse_agg import sparse_agg_pallas
+from repro.kernels.topk_select import topk_mask_pallas
+
+__all__ = ["topk_mask", "distill_kl", "sparse_aggregate", "flash_attention", "interpret_mode"]
+
+
+def interpret_mode() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _fold(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    lead = x.shape[:-1]
+    return x.reshape((-1, x.shape[-1])), lead
+
+
+def topk_mask(logits: jax.Array, k: int) -> jax.Array:
+    """Dense top-k sparsification of (..., vocab) logits (paper eq. 4)."""
+    flat, lead = _fold(logits)
+    out = topk_mask_pallas(flat, k, interpret=interpret_mode())
+    return out.reshape(lead + (logits.shape[-1],))
+
+
+def distill_kl(teacher: jax.Array, student: jax.Array, temperature: float = 2.0) -> jax.Array:
+    """Mean KL(σ(t/T)||σ(s/T)) with Hinton T² scaling — matches
+    ``repro.core.distill.kl_divergence`` on (..., vocab) inputs."""
+    t_flat, _ = _fold(teacher)
+    s_flat, _ = _fold(student)
+    per_row = distill_kl_pallas(t_flat, s_flat, float(temperature), interpret=interpret_mode())
+    return jnp.mean(per_row) * (temperature**2)
+
+
+def sparse_aggregate(stack: jax.Array) -> jax.Array:
+    """Adaptive aggregation of (N, ..., vocab) -> (..., vocab) (eqs. 6-7)."""
+    n = stack.shape[0]
+    vocab = stack.shape[-1]
+    flat = stack.reshape((n, -1, vocab))
+    out = sparse_agg_pallas(flat, interpret=interpret_mode())
+    return out.reshape(stack.shape[1:]).astype(stack.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal attention, (B, H, S, D) or (B, S, D)."""
+    if q.ndim == 4:
+        b, h, s, d = q.shape
+        fold = lambda x: x.reshape((b * h, s, d))
+        out = flash_attention_pallas(fold(q), fold(k), fold(v), interpret=interpret_mode())
+        return out.reshape((b, h, s, d))
+    return flash_attention_pallas(q, k, v, interpret=interpret_mode())

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` implements the mathematical spec with no tiling/streaming;
+tests sweep shapes/dtypes and ``assert_allclose`` kernel-vs-ref in
+``interpret=True`` mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["topk_mask_ref", "distill_kl_ref", "sparse_agg_ref", "flash_attention_ref"]
+
+
+def topk_mask_ref(logits: jax.Array, k: int) -> jax.Array:
+    """Keep every entry >= the k-th largest per row, zero the rest.
+
+    Threshold semantics (ties included) — matches the bisection kernel.  For
+    distinct values this is exactly 'keep the top-k'.
+    """
+    kth = jax.lax.top_k(logits, k)[0][..., -1:]
+    return jnp.where(logits >= kth, logits, jnp.zeros_like(logits))
+
+
+def distill_kl_ref(
+    teacher_logits: jax.Array, student_logits: jax.Array, temperature: float = 2.0
+) -> jax.Array:
+    """Per-row KL(softmax(t/T) || softmax(s/T)), shape (rows,), fp32.
+
+    No T^2 scaling, no batch mean — callers (repro.core.distill) apply those.
+    """
+    t = teacher_logits.astype(jnp.float32) / temperature
+    s = student_logits.astype(jnp.float32) / temperature
+    log_p = t - jax.scipy.special.logsumexp(t, axis=-1, keepdims=True)
+    log_q = s - jax.scipy.special.logsumexp(s, axis=-1, keepdims=True)
+    return jnp.sum(jnp.exp(log_p) * (log_p - log_q), axis=-1)
+
+
+def sparse_agg_ref(stack: jax.Array, *, eps: float = 1e-12) -> jax.Array:
+    """Paper eqs. 6-7 on a (N, rows, V) stack -> (rows, V), fp32."""
+    x = stack.astype(jnp.float32)
+    s = jnp.abs(x)
+    den = jnp.sum(s, axis=0)
+    num = jnp.sum(s * x, axis=0)
+    return num / (den + eps)
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True
+) -> jax.Array:
+    """Plain softmax attention, (B, S, D) per fused head-batch, fp32 math."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        s = q.shape[1]
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bst,btd->bsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

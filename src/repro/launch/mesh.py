@@ -1,0 +1,36 @@
+"""Production mesh construction (MULTI-POD DRY-RUN spec, step 1).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state.  TPU v5e hardware constants used by the roofline live here
+too so benchmarks and launch agree on them.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "V5E"]
+
+# TPU v5e per-chip constants (roofline denominators).
+V5E = {
+    "peak_bf16_flops": 197e12,  # FLOP/s
+    "hbm_bandwidth": 819e9,  # B/s
+    "ici_link_bandwidth": 50e9,  # B/s per link
+    "hbm_bytes": 16 * 1024**3,
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi_pod adds the 2-pod leading axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many (host) devices tests were launched with."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

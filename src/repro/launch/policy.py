@@ -1,0 +1,55 @@
+"""Shape/arch launch policy — import-safe (no jax device-state effects).
+
+Shared by the dry-run, tests and benchmarks so the window/skip policy and
+input stand-ins are defined exactly once.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+
+__all__ = ["window_for", "arch_shape_config", "input_specs"]
+
+
+def window_for(cfg: ModelConfig, shape: ShapeConfig) -> int | None:
+    """DESIGN §5: full-attention archs get sliding window 4096 at long_500k;
+    SSM/hybrid run natively (SSM state is O(1); jamba's sparse attention
+    layers use the seq-sharded cache)."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return 4096
+    return None
+
+
+def arch_shape_config(arch: str, shape: ShapeConfig) -> ModelConfig:
+    cfg = get_config(arch)
+    # decode/prefill don't train: microbatching is a train-only lever.
+    if shape.kind != "train":
+        cfg = cfg.with_overrides(microbatches=1)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this step kind
+    (weak-type-correct, shardable, no device allocation)."""
+    from repro.models import init_cache
+    from repro.models.model import input_token_len
+
+    b = shape.global_batch
+    cdt = np.dtype(cfg.compute_dtype)
+    specs: dict = {}
+    if shape.kind in ("train", "prefill"):
+        s_text = input_token_len(cfg, shape.seq_len)
+        specs["batch"] = {"tokens": jax.ShapeDtypeStruct((b, s_text), np.int32)}
+        if cfg.frontend != "none":
+            specs["batch"]["frontend"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.d_model), cdt
+            )
+    else:  # decode
+        w = window_for(cfg, shape)
+        specs["token"] = jax.ShapeDtypeStruct((b,), np.int32)
+        specs["cache"] = jax.eval_shape(lambda: init_cache(cfg, b, shape.seq_len, window=w))
+    return specs

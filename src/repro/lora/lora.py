@@ -1,0 +1,69 @@
+"""LoRA parameter-tree utilities (paper §II-A, eq. 1).
+
+Adapters are initialised inside the model zoo (transformer._lora_init:
+A ~ N(0, 1/d), B = 0, so W' + B·A starts at W') and live at paths
+``stack/posJ/lora/<target>/{A,B}``.  This module provides the
+trainable/frozen split used by client fine-tuning — the paper trains ONLY
+θ_n = {A_n, B_n} on-device — plus merge and projection helpers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["is_lora_path", "split_lora", "merge_lora", "lora_param_count", "map_lora"]
+
+
+def _path_strings(path) -> tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        elif hasattr(p, "idx"):
+            out.append(f"idx{p.idx}")
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def is_lora_path(path) -> bool:
+    return any(part == "lora" or part.startswith("lora_") for part in _path_strings(path))
+
+
+def split_lora(params: Any) -> tuple[Any, Any]:
+    """(trainable lora-only tree, frozen tree) — same structure, with None
+    at the complementary positions (suitable for jax.grad over the first)."""
+    lora = jax.tree_util.tree_map_with_path(
+        lambda p, x: x if is_lora_path(p) else None, params
+    )
+    frozen = jax.tree_util.tree_map_with_path(
+        lambda p, x: None if is_lora_path(p) else x, params
+    )
+    return lora, frozen
+
+
+def merge_lora(lora: Any, frozen: Any) -> Any:
+    """Inverse of split_lora."""
+    return jax.tree.map(
+        lambda a, b: a if a is not None else b,
+        lora,
+        frozen,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def lora_param_count(params: Any) -> int:
+    lora, _ = split_lora(params)
+    return sum(int(x.size) for x in jax.tree.leaves(lora))
+
+
+def map_lora(fn: Callable[[jax.Array], jax.Array], params: Any) -> Any:
+    """Apply ``fn`` to LoRA leaves only (e.g. zeroing non-LoRA grads)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: fn(x) if is_lora_path(p) else x, params
+    )

@@ -1,0 +1,8 @@
+"""Model zoo: dense/GQA, MoE, Mamba2-SSD, hybrid, VLM and audio enc-dec
+stacks, all as pure-pytree functional JAX models (see model.py for the API).
+"""
+
+from repro.models import model
+from repro.models.model import Aux, backbone, decode_step, forward, init, init_cache, prefill
+
+__all__ = ["model", "Aux", "backbone", "decode_step", "forward", "init", "init_cache", "prefill"]

@@ -1,0 +1,279 @@
+"""Grouped-query attention with KV cache, sliding window, LoRA hooks.
+
+Sharding-relevant layout decisions (see DESIGN §4):
+  * activations carry explicit head axes: q (B,S,Kv,G,Dh), k/v (B,T,Kv,Dh) —
+    the Kv/G axes are what tensor parallelism shards;
+  * the decode KV cache is laid out (B, C, Kv, Dh) with C the cache length;
+    at decode shapes C is sharded along the **sequence** axis over the
+    ``model`` mesh axis (flash-decoding on TPU): every device attends its
+    slice, XLA turns the seq-contraction + softmax into partial
+    reductions + ``psum``;
+  * sliding-window mode stores a ring buffer of C = window entries with an
+    absolute-position side array, so a 524k-token stream needs a 4k cache.
+
+RoPE is applied at *write* time for keys (rotation by absolute position),
+so cached keys never need re-rotation (relative property preserved).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_apply, dense_init
+
+__all__ = ["KVCache", "attn_init", "attn_apply", "init_kv_cache", "cross_attn_apply"]
+
+_NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, C, Kv, Dh) — RoPE already applied
+    v: jax.Array  # (B, C, Kv, Dh)
+    pos: jax.Array  # (C,) absolute position of each slot, -1 = empty
+    length: jax.Array  # () int32 — tokens seen so far (absolute)
+
+
+def attn_init(rng: jax.Array, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    hd = cfg.head_dim
+    keys = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(keys[0], cfg.d_model, cfg.num_heads * hd, use_bias=cfg.use_bias, dtype=cfg.param_dtype),
+        "wk": dense_init(keys[1], cfg.d_model, cfg.num_kv_heads * hd, use_bias=cfg.use_bias, dtype=cfg.param_dtype),
+        "wv": dense_init(keys[2], cfg.d_model, cfg.num_kv_heads * hd, use_bias=cfg.use_bias, dtype=cfg.param_dtype),
+        "wo": dense_init(keys[3], cfg.num_heads * hd, cfg.d_model, use_bias=cfg.use_bias, dtype=cfg.param_dtype),
+    }
+
+
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, cache_len: int, *, dtype: str | None = None
+) -> KVCache:
+    dt = jnp.dtype(dtype or cfg.compute_dtype)
+    hd = cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, cache_len, cfg.num_kv_heads, hd), dt),
+        v=jnp.zeros((batch, cache_len, cfg.num_kv_heads, hd), dt),
+        pos=jnp.full((cache_len,), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _lora_delta(lora_p: dict, x: jax.Array, *, alpha: float, rank: int, compute_dtype: str):
+    """x @ A @ B scaled by alpha/r.  Returns (delta, h) with h = x @ A."""
+    cd = jnp.dtype(compute_dtype)
+    h = jnp.einsum("...i,ir->...r", x.astype(cd), lora_p["A"].astype(cd))
+    delta = jnp.einsum("...r,ro->...o", h, lora_p["B"].astype(cd)) * (alpha / rank)
+    return delta, h
+
+
+def _project(
+    params: dict,
+    x: jax.Array,
+    name: str,
+    cfg: ModelConfig,
+    lora: dict | None,
+) -> tuple[jax.Array, jax.Array | None]:
+    y = dense_apply(params[f"w{name}"], x, compute_dtype=cfg.compute_dtype)
+    h = None
+    if lora is not None and name in lora:
+        delta, h = _lora_delta(
+            lora[name], x, alpha=cfg.lora.alpha, rank=cfg.lora.rank, compute_dtype=cfg.compute_dtype
+        )
+        y = y + delta
+    return y, h
+
+
+def _repeat_kv(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B,T,Kv,Dh) -> (B,T,Hq,Dh): single head axis so tensor parallelism
+    shards scores/probs by head (§Perf iteration 1 — the (Kv,G) split axis
+    defeated XLA's sharding propagation and replicated the score tensors)."""
+    g = cfg.q_per_kv
+    if g == 1:
+        return x
+    return jnp.repeat(x, g, axis=2)
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """q (B,S,Hq,Dh), k (B,T,Kv,Dh) -> scores (B,Hq,S,T), head-sharded."""
+    from repro import sharding as _sh
+
+    dh = q.shape[-1]
+    k_rep = _repeat_kv(k, cfg)
+    scale = dh**-0.5
+    scores = jnp.einsum(
+        "bshd,bthd->bhst", q.astype(jnp.float32), k_rep.astype(jnp.float32)
+    ) * scale
+    return _sh.constrain(scores, "batch", "heads", None, None)
+
+
+def _gqa_output(probs: jax.Array, v: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """probs (B,Hq,S,T), v (B,T,Kv,Dh) -> (B,S,Hq*Dh)."""
+    v_rep = _repeat_kv(v, cfg)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v_rep.astype(jnp.float32))
+    b, s, h, dh = out.shape
+    return out.reshape(b, s, h * dh)
+
+
+# q-chunk length for the memory-efficient full-sequence path.  4k-512k
+# sequences never materialise (S, T) scores — peak attention memory is
+# (B, heads, Q_CHUNK, T) per in-flight chunk, which XLA's scan keeps to one.
+Q_CHUNK = 512
+
+# REPRO_UNROLL=1: replace the chunk scan with a python loop so HLO cost
+# analysis sees every chunk (XLA counts while-loop bodies ONCE — the dry-run
+# cost mode needs fully-materialised op counts; see launch/dryrun.py).
+import os as _os
+
+_UNROLL = _os.environ.get("REPRO_UNROLL", "0") == "1"
+
+
+def _dense_attention(q, k, v, cfg, positions, window, causal) -> jax.Array:
+    """Reference O(S·T)-memory attention for short sequences."""
+    scores = _gqa_scores(q, k, cfg)  # (B,H,S,T)
+    if causal:
+        cmask = positions[..., :, None] >= positions[..., None, :]
+        if window is not None:
+            cmask &= positions[..., :, None] - positions[..., None, :] < window
+        mask = cmask if cmask.ndim == 3 else cmask[None]
+        scores = jnp.where(mask[:, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_output(probs, v, cfg)
+
+
+def _chunked_attention(q, k, v, cfg, positions, window, causal) -> jax.Array:
+    """Scan over query chunks: memory O(Q_CHUNK · T), exact softmax per row.
+
+    The jnp twin of kernels/flash_attention.py (which is the TPU-compiled
+    version for inference prefill); this one is used inside the
+    differentiable train path so the backward pass composes with
+    ``jax.checkpoint`` over the layer scan.
+    """
+    b, s, hq, dh = q.shape
+    nc = s // Q_CHUNK
+    assert s % Q_CHUNK == 0, f"seq {s} not divisible by q-chunk {Q_CHUNK}"
+    pos1d = positions if positions.ndim == 1 else positions[0]
+
+    q_chunks = q.reshape(b, nc, Q_CHUNK, hq, dh).transpose(1, 0, 2, 3, 4)
+    pos_chunks = pos1d.reshape(nc, Q_CHUNK)
+
+    def one_chunk(args):
+        qc, qpos = args  # (B, Cq, Hq, Dh), (Cq,)
+        scores = _gqa_scores(qc, k, cfg)  # (B,H,Cq,T)
+        if causal:
+            m = qpos[:, None] >= pos1d[None, :]  # (Cq, T)
+            if window is not None:
+                m &= qpos[:, None] - pos1d[None, :] < window
+            scores = jnp.where(m[None, None], scores, _NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return _gqa_output(probs, v, cfg)  # (B, Cq, Hq*Dh)
+
+    if _UNROLL:
+        out = jnp.stack([one_chunk((q_chunks[i], pos_chunks[i])) for i in range(nc)])
+    else:
+        out = jax.lax.map(one_chunk, (q_chunks, pos_chunks))  # (nc, B, Cq, H*D)
+    return out.transpose(1, 0, 2, 3).reshape(b, s, hq * dh)
+
+
+def attn_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    window: int | None = None,
+    cache: KVCache | None = None,
+    lora: dict | None = None,
+    causal: bool = True,
+) -> tuple[jax.Array, KVCache | None, jax.Array | None]:
+    """Self-attention.  Returns (output, updated_cache, lora_h).
+
+    Full-sequence mode (cache is None): causal (+optional window) mask over
+    the input sequence — used by train and prefill steps.
+
+    Decode mode (cache given): x is (B, 1, D); the new K/V is written into
+    the ring slot ``length % C`` and the query attends over the whole cache.
+    """
+    q_flat, h_q = _project(params, x, "q", cfg, lora)
+    k_flat, _ = _project(params, x, "k", cfg, lora)
+    v_flat, h_v = _project(params, x, "v", cfg, lora)
+
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = q_flat.reshape(b, s, cfg.num_heads, hd)
+    k = k_flat.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v_flat.reshape(b, s, cfg.num_kv_heads, hd)
+    if cache is None:  # full-seq: anchor head sharding (decode keeps the
+        # seq-sharded-cache layout instead — q replicated over model)
+        from repro import sharding as _sh
+
+        q = _sh.constrain(q, "batch", None, "heads", None)
+        k = _sh.constrain(k, "batch", None, "kv", None)
+        v = _sh.constrain(v, "batch", None, "kv", None)
+
+    if cfg.positional == "rope":
+        q = apply_rope(q, positions, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, theta=cfg.rope_theta)
+
+    lora_h = h_q if h_q is not None else h_v
+
+    if cache is None:
+        # ---- full-sequence causal path ----
+        if s >= 2 * Q_CHUNK:
+            out = _chunked_attention(q, k, v, cfg, positions, window, causal)
+        else:
+            out = _dense_attention(q, k, v, cfg, positions, window, causal)
+        y = dense_apply(params["wo"], out.astype(x.dtype), compute_dtype=cfg.compute_dtype)
+        return y, None, lora_h
+
+    # ---- decode path: single new token against the cache ----
+    assert s == 1, "decode mode expects one new token"
+    cache_len = cache.k.shape[1]
+    slot = (cache.length % cache_len).astype(jnp.int32)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), slot, axis=1)
+    new_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache.pos, cache.length[None].astype(jnp.int32), slot, axis=0
+    )
+    new_cache = KVCache(k=new_k, v=new_v, pos=new_pos, length=cache.length + 1)
+
+    scores = _gqa_scores(q, new_k, cfg)  # (B,H,1,C)
+    valid = new_pos >= 0
+    valid &= new_pos <= cache.length  # all written slots qualify
+    if window is not None:
+        valid &= new_pos > cache.length - window
+    scores = jnp.where(valid[None, None, None, :], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_output(probs, new_v, cfg).astype(x.dtype)
+    y = dense_apply(params["wo"], out, compute_dtype=cfg.compute_dtype)
+    return y, new_cache, lora_h
+
+
+def cross_attn_apply(
+    params: dict,
+    x: jax.Array,
+    enc_out: jax.Array,
+    cfg: ModelConfig,
+    *,
+    lora: dict | None = None,
+) -> jax.Array:
+    """Encoder-decoder cross attention (no mask, no cache mutation).
+
+    ``enc_out``: (B, T_enc, D) encoder output; K/V recomputed each call in
+    training; serving precomputes them once per request outside this fn.
+    """
+    q_flat, _ = _project(params, x, "q", cfg, lora)
+    k_flat, _ = _project(params, enc_out, "k", cfg, lora)
+    v_flat, _ = _project(params, enc_out, "v", cfg, lora)
+    b, s, _ = x.shape
+    t = enc_out.shape[1]
+    hd = cfg.head_dim
+    q = q_flat.reshape(b, s, cfg.num_heads, hd)
+    k = k_flat.reshape(b, t, cfg.num_kv_heads, hd)
+    v = v_flat.reshape(b, t, cfg.num_kv_heads, hd)
+    scores = _gqa_scores(q, k, cfg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_output(probs, v, cfg).astype(x.dtype)
+    return dense_apply(params["wo"], out, compute_dtype=cfg.compute_dtype)

@@ -1,0 +1,33 @@
+"""Stub modality frontends (per assignment carve-out).
+
+``[audio]`` and ``[vlm]`` architectures specify the transformer backbone
+only; the mel-spectrogram/conv feature extractor (audio) and the
+ViT/projector (vision) are STUBS: ``input_specs()`` supplies precomputed
+frame/patch embeddings of the right shape, and for runnable CPU smoke tests
+this module synthesises deterministic embeddings with the correct statistics
+(zero-mean, unit-ish variance, d_model width).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["frontend_embedding_shape", "synth_frontend_embeddings"]
+
+
+def frontend_embedding_shape(cfg: ModelConfig, batch: int) -> tuple[int, int, int]:
+    """(B, frontend_len, d_model) for the stubbed modality stream."""
+    assert cfg.frontend != "none"
+    return (batch, cfg.frontend_len, cfg.d_model)
+
+
+def synth_frontend_embeddings(
+    cfg: ModelConfig, batch: int, *, seed: int = 0, dtype: str | None = None
+) -> jax.Array:
+    """Deterministic stand-in embeddings (what the real ViT/codec would emit)."""
+    shape = frontend_embedding_shape(cfg, batch)
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+    return x.astype(jnp.dtype(dtype or cfg.compute_dtype))

@@ -1,0 +1,143 @@
+"""Primitive layers: norms, RoPE, embeddings, dense MLPs.
+
+Pure-functional pytree style (no flax dependency): every layer is an
+``init_*(rng, ...) -> params`` plus an ``apply`` function.  Weights use
+truncated-normal fan-in init; compute happens in ``config.compute_dtype``
+while params are stored in ``config.param_dtype``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "dense_apply",
+    "norm_init",
+    "norm_apply",
+    "embedding_init",
+    "rope_frequencies",
+    "apply_rope",
+    "mlp_init",
+    "mlp_apply",
+]
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def dense_init(
+    rng: jax.Array,
+    in_dim: int,
+    out_dim: int,
+    *,
+    use_bias: bool = False,
+    dtype: str = "float32",
+    scale: float | None = None,
+) -> dict:
+    std = (scale if scale is not None else 1.0) / (in_dim**0.5)
+    w = jax.random.truncated_normal(rng, -2.0, 2.0, (in_dim, out_dim), jnp.float32) * std
+    params = {"w": w.astype(_dtype(dtype))}
+    if use_bias:
+        params["b"] = jnp.zeros((out_dim,), _dtype(dtype))
+    return params
+
+
+def dense_apply(params: dict, x: jax.Array, *, compute_dtype: str = "float32") -> jax.Array:
+    cd = _dtype(compute_dtype)
+    y = jnp.einsum("...i,io->...o", x.astype(cd), params["w"].astype(cd))
+    if "b" in params:
+        y = y + params["b"].astype(cd)
+    return y
+
+
+def norm_init(dim: int, *, kind: str = "rmsnorm", dtype: str = "float32") -> dict:
+    params = {"scale": jnp.ones((dim,), _dtype(dtype))}
+    if kind == "layernorm":
+        params["bias"] = jnp.zeros((dim,), _dtype(dtype))
+    return params
+
+
+def norm_apply(
+    params: dict, x: jax.Array, *, kind: str = "rmsnorm", eps: float = 1e-6
+) -> jax.Array:
+    # Norm statistics in fp32 for stability regardless of compute dtype.
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps)
+    else:
+        mean = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        y = y + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def embedding_init(
+    rng: jax.Array, vocab: int, dim: int, *, dtype: str = "float32"
+) -> jax.Array:
+    return (jax.random.normal(rng, (vocab, dim), jnp.float32) * 0.02).astype(_dtype(dtype))
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    """Inverse frequencies for RoPE, shape (head_dim // 2,)."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, *, theta: float = 10000.0
+) -> jax.Array:
+    """Rotate (..., seq, heads, head_dim) by position-dependent angles.
+
+    ``positions``: (..., seq) int32 absolute positions (supports decode where
+    the single query sits at position ``cache_len``).
+    """
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_init(
+    rng: jax.Array,
+    d_model: int,
+    d_ff: int,
+    *,
+    activation: str = "swiglu",
+    use_bias: bool = False,
+    dtype: str = "float32",
+) -> dict:
+    keys = jax.random.split(rng, 3)
+    params = {
+        "up": dense_init(keys[0], d_model, d_ff, use_bias=use_bias, dtype=dtype),
+        "down": dense_init(keys[1], d_ff, d_model, use_bias=use_bias, dtype=dtype),
+    }
+    if activation == "swiglu":
+        params["gate"] = dense_init(keys[2], d_model, d_ff, use_bias=use_bias, dtype=dtype)
+    return params
+
+
+def mlp_apply(
+    params: dict,
+    x: jax.Array,
+    *,
+    activation: str = "swiglu",
+    compute_dtype: str = "float32",
+) -> jax.Array:
+    up = dense_apply(params["up"], x, compute_dtype=compute_dtype)
+    if activation == "swiglu":
+        gate = dense_apply(params["gate"], x, compute_dtype=compute_dtype)
+        hidden = jax.nn.silu(gate) * up
+    else:
+        hidden = jax.nn.gelu(up)
+    return dense_apply(params["down"], hidden, compute_dtype=compute_dtype)

@@ -1,0 +1,247 @@
+"""Mamba2 / SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Implements the *chunked SSD* algorithm (paper's Listing 1, "ssd_minimal")
+in JAX:
+
+  * intra-chunk: dense (Q x Q) masked matmuls — MXU-friendly;
+  * inter-chunk: chunk-state recurrence via an exponential-decay matmul over
+    chunk indices (O(nc^2) but tiny next to the intra-chunk work);
+  * decode: the dual recurrent form, O(1) per token:
+      state <- state * exp(dt*A) + dt * (B outer x);   y = C . state + D*x
+
+Block structure follows Mamba2: projections to [z | x | B | C | dt]
+(kept as SEPARATE weights so each can carry its own sharding — packing them
+would slice tensor-parallel shards across segment boundaries), causal
+depthwise conv (width 4) over x and (B,C), softplus dt with learned bias,
+SSD core over heads of size P, skip D, gated RMSNorm(y * silu(z)), out_proj.
+
+Sharding (DESIGN §4): the inner dim d_inner (z, x, conv_x, gate_norm,
+out_proj rows) shards over ``model``; B/C (width 2N=256) and dt (width H,
+not generally divisible by the mesh) stay replicated — they are O(N) wide.
+The decode state (B,H,P,N) shards its N axis over ``model``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, norm_apply, norm_init
+
+__all__ = ["SSMCache", "ssm_init", "ssm_apply", "init_ssm_cache"]
+
+
+class SSMCache(NamedTuple):
+    conv_x: jax.Array  # (B, W-1, d_inner) — pre-conv x history
+    conv_bc: jax.Array  # (B, W-1, 2N) — pre-conv B/C history
+    state: jax.Array  # (B, H, P, N) — SSM recurrent state
+
+
+def _dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    nheads = d_inner // ssm.head_dim
+    return ssm, d_inner, nheads
+
+
+def ssm_init(rng: jax.Array, cfg: ModelConfig) -> dict:
+    ssm, d_inner, nheads = _dims(cfg)
+    keys = jax.random.split(rng, 8)
+    pdt = jnp.dtype(cfg.param_dtype)
+    n2 = 2 * ssm.state_dim
+
+    # dt bias: softplus^{-1}(u), u ~ logUniform[dt_min, dt_max]
+    u = jnp.exp(
+        jax.random.uniform(keys[2], (nheads,), jnp.float32)
+        * (jnp.log(ssm.dt_max) - jnp.log(ssm.dt_min))
+        + jnp.log(ssm.dt_min)
+    )
+    dt_bias = u + jnp.log(-jnp.expm1(-u))  # inverse softplus
+
+    a_init = jax.random.uniform(keys[3], (nheads,), jnp.float32, 1.0, 16.0)
+
+    return {
+        "w_z": dense_init(keys[0], cfg.d_model, d_inner, use_bias=cfg.use_bias, dtype=cfg.param_dtype),
+        "w_x": dense_init(keys[1], cfg.d_model, d_inner, use_bias=cfg.use_bias, dtype=cfg.param_dtype),
+        "w_bc": dense_init(keys[4], cfg.d_model, n2, use_bias=cfg.use_bias, dtype=cfg.param_dtype),
+        "w_dt": dense_init(keys[5], cfg.d_model, nheads, use_bias=cfg.use_bias, dtype=cfg.param_dtype),
+        "out_proj": dense_init(keys[6], d_inner, cfg.d_model, use_bias=cfg.use_bias, dtype=cfg.param_dtype),
+        "conv_x_w": (jax.random.normal(keys[7], (ssm.conv_width, d_inner), jnp.float32) * 0.1).astype(pdt),
+        "conv_x_b": jnp.zeros((d_inner,), pdt),
+        "conv_bc_w": (jax.random.normal(jax.random.fold_in(keys[7], 1), (ssm.conv_width, n2), jnp.float32) * 0.1).astype(pdt),
+        "conv_bc_b": jnp.zeros((n2,), pdt),
+        "dt_bias": dt_bias.astype(pdt),
+        "a_log": jnp.log(a_init).astype(pdt),
+        "d_skip": jnp.ones((nheads,), pdt),
+        "gate_norm": norm_init(d_inner, kind="rmsnorm", dtype=cfg.param_dtype),
+    }
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, *, dtype: str | None = None) -> SSMCache:
+    ssm, d_inner, nheads = _dims(cfg)
+    dt = jnp.dtype(dtype or cfg.compute_dtype)
+    return SSMCache(
+        conv_x=jnp.zeros((batch, ssm.conv_width - 1, d_inner), dt),
+        conv_bc=jnp.zeros((batch, ssm.conv_width - 1, 2 * ssm.state_dim), dt),
+        state=jnp.zeros((batch, nheads, ssm.head_dim, ssm.state_dim), jnp.float32),
+    )
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] = sum_{j<m<=i} a[m].
+
+    a: (..., Q) -> (..., Q, Q), upper triangle = -inf.
+    """
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    i = jnp.arange(q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(
+    x: jax.Array,  # (B, S, H, P) — already multiplied by dt
+    a: jax.Array,  # (B, S, H)    — dt * A (negative log-decay per step)
+    b_mat: jax.Array,  # (B, S, N)
+    c_mat: jax.Array,  # (B, S, N)
+    chunk: int,
+    init_state: jax.Array | None = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    ac = a.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2)  # (B,H,nc,Q)
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+
+    a_cumsum = jnp.cumsum(ac, axis=-1)  # (B,H,nc,Q)
+
+    # 1) intra-chunk (diagonal blocks)
+    l_mat = jnp.exp(_segsum(ac))  # (B,H,nc,Q,Q)
+    y_diag = jnp.einsum("bcqn,bckn,bhcqk,bckhp->bcqhp", cc, bc, l_mat, xc)
+
+    # 2) per-chunk final states
+    decay_states = jnp.exp(a_cumsum[..., -1:] - a_cumsum)  # (B,H,nc,Q)
+    states = jnp.einsum("bckn,bhck,bckhp->bchpn", bc, decay_states, xc)
+
+    # 3) inter-chunk recurrence over chunk states
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), states.dtype)
+    states = jnp.concatenate([init_state[:, None], states], axis=1)  # (B,nc+1,H,P,N)
+    chunk_decay = a_cumsum[..., -1]  # (B,H,nc) total decay per chunk
+    padded = jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(_segsum(padded))  # (B,H,nc+1,nc+1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    prev_states = new_states[:, :-1]  # state entering each chunk
+    final_state = new_states[:, -1]
+
+    # 4) inter-chunk (off-diagonal) output contribution
+    state_decay_out = jnp.exp(a_cumsum)  # (B,H,nc,Q)
+    y_off = jnp.einsum("bcqn,bchpn,bhcq->bcqhp", cc, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def _proj(params: dict, name: str, x: jax.Array, cd) -> jax.Array:
+    w = params[name]
+    y = jnp.einsum("bsd,dk->bsk", x.astype(cd), w["w"].astype(cd))
+    if "b" in w:
+        y = y + w["b"].astype(cd)
+    return y
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, history: jax.Array | None):
+    """Depthwise causal conv over seq.  history: (B, W-1, C) or None (zeros)."""
+    w32 = w.astype(jnp.float32)  # (W, C)
+    width = w32.shape[0]
+    x32 = x.astype(jnp.float32)
+    if history is None:
+        pad = jnp.zeros((x32.shape[0], width - 1, x32.shape[-1]), x32.dtype)
+    else:
+        pad = history.astype(jnp.float32)
+    xp = jnp.concatenate([pad, x32], axis=1)  # (B, S+W-1, C)
+    s = x.shape[1]
+    out = sum(xp[:, i : i + s] * w32[i] for i in range(width))
+    out = out + b.astype(jnp.float32)
+    new_history = xp[:, -(width - 1) :] if width > 1 else xp[:, :0]
+    return jax.nn.silu(out), new_history
+
+
+def ssm_apply(
+    params: dict,
+    x_in: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: SSMCache | None = None,
+) -> tuple[jax.Array, SSMCache | None]:
+    """Mamba2 block.  Full-sequence when cache is None, else one-token decode.
+
+    Returns (output (B,S,D), updated cache or None).
+    """
+    ssm, d_inner, nheads = _dims(cfg)
+    cd = jnp.dtype(cfg.compute_dtype)
+    n = ssm.state_dim
+    p = ssm.head_dim
+
+    z = _proj(params, "w_z", x_in, cd)
+    x_pre = _proj(params, "w_x", x_in, cd)
+    bc_pre = _proj(params, "w_bc", x_in, cd)
+    dt_raw = _proj(params, "w_dt", x_in, cd)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a_neg = -jnp.exp(params["a_log"].astype(jnp.float32))  # (H,) negative
+
+    if cache is None:
+        from repro import sharding as _sh
+
+        xs, _ = _causal_conv(x_pre, params["conv_x_w"], params["conv_x_b"], None)
+        bc, _ = _causal_conv(bc_pre, params["conv_bc_w"], params["conv_bc_b"], None)
+        b_mat, c_mat = jnp.split(bc, 2, axis=-1)
+        bsz, s, _ = xs.shape
+        xh = xs.reshape(bsz, s, nheads, p)
+        # anchor head sharding so the (B,H,nc,Q,Q) SSD decay tensors shard
+        # by head instead of replicating (§Perf iteration 4)
+        xh = _sh.constrain(xh, "batch", None, "heads", None)
+        dt = _sh.constrain(dt, "batch", None, "heads")
+        x_dt = xh * dt[..., None]  # discretized input
+        a_dt = dt * a_neg  # (B,S,H)
+        y, _ = _ssd_chunked(x_dt, a_dt, b_mat, c_mat, min(ssm.chunk_size, s), None)
+        new_cache = None
+    else:
+        # one-token decode: conv from cached history, recurrent state update
+        xs, hist_x = _causal_conv(x_pre, params["conv_x_w"], params["conv_x_b"], cache.conv_x)
+        bc, hist_bc = _causal_conv(bc_pre, params["conv_bc_w"], params["conv_bc_b"], cache.conv_bc)
+        b_mat, c_mat = jnp.split(bc, 2, axis=-1)
+        bsz = xs.shape[0]
+        xh1 = xs.reshape(bsz, 1, nheads, p)[:, 0]  # (B,H,P)
+        dt1 = dt[:, 0]  # (B,H)
+        da = jnp.exp(dt1 * a_neg)  # (B,H)
+        bu = jnp.einsum("bhp,bn->bhpn", xh1 * dt1[..., None], b_mat[:, 0])
+        state = cache.state * da[..., None, None] + bu
+        y = jnp.einsum("bhpn,bn->bhp", state, c_mat[:, 0])[:, None]  # (B,1,H,P)
+        new_cache = SSMCache(
+            conv_x=hist_x.astype(cache.conv_x.dtype),
+            conv_bc=hist_bc.astype(cache.conv_bc.dtype),
+            state=state,
+        )
+        xh = xh1[:, None]  # for the skip term below
+
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+
+    bsz, s = y.shape[0], y.shape[1]
+    y = y.reshape(bsz, s, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = norm_apply(params["gate_norm"], y.astype(cd), kind="rmsnorm")
+    out = jnp.einsum("bsk,kd->bsd", y.astype(cd), params["out_proj"]["w"].astype(cd))
+    if "b" in params["out_proj"]:
+        out = out + params["out_proj"]["b"].astype(cd)
+    return out.astype(x_in.dtype), new_cache

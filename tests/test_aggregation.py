@@ -1,0 +1,84 @@
+"""Adaptive aggregation (paper eqs. 6-7) vs baselines."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (
+    aggregate,
+    aggregate_adaptive,
+    aggregate_mean_nonzero,
+    aggregate_sparse,
+    aggregate_zeropad,
+)
+from repro.core.topk import topk_sparsify
+
+
+def _sparse_stack(key, n=5, rows=4, vocab=64, keep=0.2):
+    x = jax.random.normal(key, (n, rows, vocab))
+    mask = jax.random.uniform(jax.random.fold_in(key, 1), x.shape) < keep
+    return jnp.where(mask, x, 0.0)
+
+
+def test_single_client_identity():
+    """With one client, adaptive aggregation returns its logits unchanged."""
+    stack = _sparse_stack(jax.random.PRNGKey(0), n=1)
+    np.testing.assert_allclose(aggregate_adaptive(stack), stack[0], rtol=1e-5, atol=1e-7)
+
+
+def test_untouched_dims_stay_zero():
+    stack = _sparse_stack(jax.random.PRNGKey(1))
+    out = aggregate_adaptive(stack)
+    untouched = jnp.all(stack == 0, axis=0)
+    assert bool(jnp.all(jnp.where(untouched, out == 0, True)))
+
+
+def test_adaptive_in_convex_hull():
+    """Per dimension, the adaptive aggregate lies within [min, max] of the
+    transmitting clients' values (weights are a convex combination)."""
+    stack = _sparse_stack(jax.random.PRNGKey(2), n=6)
+    out = aggregate_adaptive(stack)
+    transmitted = stack != 0
+    big = jnp.where(transmitted, stack, jnp.inf).min(axis=0)
+    small = jnp.where(transmitted, stack, -jnp.inf).max(axis=0)
+    touched = transmitted.any(axis=0)
+    assert bool(jnp.all(jnp.where(touched, (out >= big - 1e-5) & (out <= small + 1e-5), True)))
+
+
+def test_zeropad_shrinks_vs_adaptive():
+    """Zero-padding dilutes: |zeropad| <= |adaptive| on touched dims where a
+    single client transmitted (the paper's sparsity-bias argument)."""
+    stack = _sparse_stack(jax.random.PRNGKey(3), n=8, keep=0.1)
+    single = (stack != 0).sum(axis=0) == 1
+    zp = jnp.abs(aggregate_zeropad(stack))
+    ad = jnp.abs(aggregate_adaptive(stack))
+    assert bool(jnp.all(jnp.where(single, zp <= ad + 1e-6, True)))
+
+
+def test_mean_nonzero_between():
+    stack = _sparse_stack(jax.random.PRNGKey(4))
+    mn = aggregate_mean_nonzero(stack)
+    # all-positive values: adaptive >= mean_nonzero (confidence upweights)
+    stack_pos = jnp.abs(stack)
+    ad = aggregate_adaptive(stack_pos)
+    mn = aggregate_mean_nonzero(stack_pos)
+    assert bool(jnp.all(ad >= mn - 1e-5))
+
+
+def test_sparse_equals_dense_aggregation():
+    key = jax.random.PRNGKey(5)
+    full = jax.random.normal(key, (4, 6, 50)) + 3.0
+    sparse = topk_sparsify(full, 8)
+    from repro.core.topk import densify
+
+    stack = densify(sparse)  # (4, 6, 50): leading axis = clients
+    for mode in ("adaptive", "zeropad", "mean_nonzero"):
+        dense_out = aggregate(stack, mode)
+        sparse_out = aggregate_sparse(sparse.values, sparse.indices, 50, mode)
+        np.testing.assert_allclose(dense_out, sparse_out, rtol=1e-4, atol=1e-6)
+
+
+def test_unknown_mode_raises():
+    with pytest.raises(ValueError):
+        aggregate(jnp.zeros((2, 3, 4)), "bogus")  # type: ignore[arg-type]

@@ -1,0 +1,66 @@
+"""Channel model: Shannon capacity, byte budgets, adaptive k (paper §III-A)."""
+
+import math
+
+import pytest
+
+from repro.core.channel import (
+    ChannelConfig,
+    ChannelSimulator,
+    ChannelState,
+    bits_per_entry,
+    capacity_bps,
+    topk_budget,
+)
+
+
+def test_capacity_formula():
+    # 1 MHz @ 0 dB SNR -> B*log2(2) = 1e6 bps exactly (paper eq. 5)
+    assert capacity_bps(1e6, 0.0) == pytest.approx(1e6)
+    # 10 dB -> log2(11)
+    assert capacity_bps(1e6, 10.0) == pytest.approx(1e6 * math.log2(11))
+    assert capacity_bps(0.0, 10.0) == 0.0
+
+
+def test_capacity_monotone_in_snr_and_bandwidth():
+    caps = [capacity_bps(1e6, snr) for snr in (-10, 0, 10, 20, 30)]
+    assert caps == sorted(caps)
+    assert capacity_bps(2e6, 5.0) == pytest.approx(2 * capacity_bps(1e6, 5.0))
+
+
+def test_bits_per_entry():
+    # 16-bit value + ceil(log2(vocab)) index bits
+    assert bits_per_entry(16, 50_288) == 16 + 16
+    assert bits_per_entry(16, 65_536) == 16 + 16
+    assert bits_per_entry(16, 65_537) == 16 + 17
+    assert bits_per_entry(8, 2) == 9
+
+
+def test_topk_budget_floor_and_clamps():
+    st = ChannelState(bandwidth_hz=1e6, snr_db=0.0, eta=0.5, deadline_s=1.0)
+    # budget = 0.5 * 1e6 * 1 = 5e5 bits; d = 32 for vocab 50288
+    k = topk_budget(st, vocab_size=50_288, num_samples=100)
+    assert k == math.floor(5e5 / 32 / 100)
+    # deep fade floors at k_min
+    bad = ChannelState(bandwidth_hz=1e3, snr_db=-30.0, eta=0.01, deadline_s=0.1)
+    assert topk_budget(bad, vocab_size=50_288, num_samples=1000) == 1
+    # great channel caps at vocab
+    good = ChannelState(bandwidth_hz=1e12, snr_db=60.0, eta=1.0, deadline_s=10.0)
+    assert topk_budget(good, vocab_size=1000, num_samples=1) == 1000
+
+
+def test_simulator_deterministic_and_per_client():
+    sim1 = ChannelSimulator(20, ChannelConfig(), seed=3)
+    sim2 = ChannelSimulator(20, ChannelConfig(), seed=3)
+    s1 = sim1.states(5, [0, 3, 7])
+    s2 = sim2.states(5, [0, 3, 7])
+    assert [a.snr_db for a in s1] == [b.snr_db for b in s2]
+    # different rounds -> different fading
+    s3 = sim1.states(6, [0, 3, 7])
+    assert [a.snr_db for a in s1] != [b.snr_db for b in s3]
+
+
+def test_simulator_eta_default_splits_channel():
+    sim = ChannelSimulator(10, ChannelConfig(eta=None), seed=0)
+    st = sim.states(0, list(range(5)))
+    assert all(s.eta == pytest.approx(1 / 5) for s in st)

@@ -1,0 +1,28 @@
+"""Checkpoint save/restore."""
+
+import jax
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_step, save_step
+from repro.configs import get_smoke_config
+from repro.models import init
+
+
+def test_roundtrip(tmp_path):
+    cfg = get_smoke_config("granite-moe-1b-a400m")
+    params = init(jax.random.PRNGKey(0), cfg)
+    save_step(str(tmp_path), 5, {"params": params}, arch=cfg.name)
+    save_step(str(tmp_path), 9, {"params": params}, arch=cfg.name)
+    assert latest_step(str(tmp_path)) == 9
+    restored, step = restore_step(str(tmp_path), {"params": params})
+    assert step == 9
+    for (pa, a), (pb, b) in zip(
+        jax.tree_util.tree_leaves_with_path({"params": params}),
+        jax.tree_util.tree_leaves_with_path(restored),
+    ):
+        assert pa == pb
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_empty(tmp_path):
+    assert latest_step(str(tmp_path / "nope")) is None

@@ -1,0 +1,91 @@
+"""Distillation losses (paper eqs. 8-10)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distill import (
+    kl_divergence,
+    logits_distill_loss,
+    lora_projection_loss,
+    soft_labels,
+    total_distill_loss,
+)
+
+
+def test_identical_distributions_zero():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 100))
+    assert float(kl_divergence(x, x)) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_kl_nonnegative():
+    t = jax.random.normal(jax.random.PRNGKey(1), (16, 64)) * 3
+    s = jax.random.normal(jax.random.PRNGKey(2), (16, 64)) * 3
+    assert float(kl_divergence(t, s)) >= 0.0
+
+
+def test_kl_asymmetric():
+    t = jnp.array([[6.0, 0.0, -2.0]])
+    s = jnp.array([[1.0, 1.0, 1.0]])
+    assert float(kl_divergence(t, s)) != pytest.approx(float(kl_divergence(s, t)), rel=1e-3)
+
+
+def test_temperature_scaling_identity():
+    """With scale_by_t2, KL at T is comparable across T; at T→∞ it → 0
+    relative to T=1 for the same logits."""
+    t = jax.random.normal(jax.random.PRNGKey(3), (4, 50)) * 5
+    s = jax.random.normal(jax.random.PRNGKey(4), (4, 50)) * 5
+    kl_t1 = float(kl_divergence(t, s, 1.0))
+    kl_t2_unscaled = float(kl_divergence(t, s, 2.0, scale_by_t2=False))
+    kl_t2_scaled = float(kl_divergence(t, s, 2.0, scale_by_t2=True))
+    assert kl_t2_scaled == pytest.approx(kl_t2_unscaled * 4.0, rel=1e-5)
+    assert kl_t2_unscaled < kl_t1  # softer distributions are closer
+
+
+def test_soft_labels_normalized():
+    x = jax.random.normal(jax.random.PRNGKey(5), (6, 30))
+    p = soft_labels(x, 2.0)
+    np.testing.assert_allclose(jnp.sum(p, -1), jnp.ones(6), rtol=1e-5)
+
+
+def test_total_loss_lambda_composition():
+    t = jax.random.normal(jax.random.PRNGKey(6), (4, 40))
+    s = jax.random.normal(jax.random.PRNGKey(7), (4, 40))
+    th = jax.random.normal(jax.random.PRNGKey(8), (4, 8))
+    sh = jax.random.normal(jax.random.PRNGKey(9), (4, 8))
+    total, parts = total_distill_loss(t, s, th, sh, lam=0.5)
+    assert float(total) == pytest.approx(
+        float(parts["logits"]) + 0.5 * float(parts["lora"]), rel=1e-5
+    )
+    # no projections -> logits-only (the paper's 'Adaptive' baseline)
+    total0, parts0 = total_distill_loss(t, s, None, None, lam=0.5)
+    assert float(total0) == pytest.approx(float(parts0["logits"]), rel=1e-6)
+    assert float(parts0["lora"]) == 0.0
+
+
+def test_lora_projection_loss_matches_kl():
+    th = jax.random.normal(jax.random.PRNGKey(10), (4, 8))
+    sh = jax.random.normal(jax.random.PRNGKey(11), (4, 8))
+    assert float(lora_projection_loss(th, sh)) == pytest.approx(
+        float(kl_divergence(th, sh)), rel=1e-6
+    )
+
+
+def test_support_restriction_changes_loss_on_sparse_teacher():
+    from repro.core.topk import densify, topk_sparsify
+
+    full = jax.random.normal(jax.random.PRNGKey(12), (8, 200)) * 4
+    sparse_teacher = densify(topk_sparsify(full, 10))
+    student = jax.random.normal(jax.random.PRNGKey(13), (8, 200)) * 4
+    plain = float(logits_distill_loss(sparse_teacher, student))
+    restricted = float(logits_distill_loss(sparse_teacher, student, restrict_to_support=True))
+    assert plain != pytest.approx(restricted, rel=1e-3)
+    assert restricted >= 0.0
+
+
+def test_grad_flows_to_student_only():
+    t = jax.random.normal(jax.random.PRNGKey(14), (4, 30))
+    s = jax.random.normal(jax.random.PRNGKey(15), (4, 30))
+    g = jax.grad(lambda ss: kl_divergence(t, ss))(s)
+    assert bool(jnp.any(g != 0))

@@ -1,0 +1,75 @@
+"""LoRA: init semantics (B=0 -> identity), split/merge, LoRA-only training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LoRAConfig, ModelConfig
+from repro.lora import is_lora_path, lora_param_count, merge_lora, split_lora
+from repro.models import forward, init
+
+
+def _cfg(lora=True):
+    return ModelConfig(
+        name="t", family="dense", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=128,
+        lora=LoRAConfig(rank=4) if lora else None,
+    )
+
+
+def test_lora_b_zero_init_is_identity():
+    """W' + B·A with B=0 must reproduce the frozen model exactly (eq. 1)."""
+    cfg = _cfg(True)
+    cfg0 = _cfg(False)
+    params = init(jax.random.PRNGKey(0), cfg)
+    params0 = init(jax.random.PRNGKey(0), cfg0)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 128)
+    l1, aux = forward(params, cfg, {"tokens": tokens})
+    l0, _ = forward(params0, cfg0, {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l0), rtol=1e-5, atol=1e-5)
+    assert aux.lora_h is not None and aux.lora_h.shape == (2, 4)
+
+
+def test_split_merge_roundtrip():
+    cfg = _cfg(True)
+    params = init(jax.random.PRNGKey(0), cfg)
+    lora, frozen = split_lora(params)
+    merged = merge_lora(lora, frozen)
+    flat_a = jax.tree_util.tree_leaves_with_path(params)
+    flat_b = jax.tree_util.tree_leaves_with_path(merged)
+    assert len(flat_a) == len(flat_b)
+    for (pa, a), (pb, b) in zip(flat_a, flat_b):
+        assert pa == pb
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lora_subset_is_small():
+    cfg = _cfg(True)
+    params = init(jax.random.PRNGKey(0), cfg)
+    n_lora = lora_param_count(params)
+    n_all = sum(int(x.size) for x in jax.tree.leaves(params))
+    # targets q,v: per layer r*(D + Hq*hd) + r*(D + Kv*hd)
+    assert n_lora == 2 * (4 * (64 + 64) + 4 * (64 + 32))
+    assert n_lora < n_all * 0.05
+
+
+def test_only_lora_grads_nonzero_in_distill_step():
+    from repro.fed.steps import make_distill_step
+
+    cfg = _cfg(True)
+    params = init(jax.random.PRNGKey(0), cfg)
+    step = make_distill_step(cfg, lr=1e-2)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (4, 8), 0, 128)
+    g_logits = jax.random.normal(jax.random.PRNGKey(3), (4, 128))
+    g_h = jax.random.normal(jax.random.PRNGKey(4), (4, 4))
+    from repro.fed.steps import init_lora_opt
+
+    opt = init_lora_opt(params, cfg)
+    new_params, _, metrics = step(params, opt, tokens, g_logits, g_h)
+    changed = jax.tree_util.tree_map_with_path(
+        lambda p, a, b: bool(jnp.any(a != b)), params, new_params
+    )
+    for path, c in jax.tree_util.tree_leaves_with_path(changed):
+        if c:
+            assert is_lora_path(path), f"non-LoRA param changed: {path}"
+    assert float(metrics["loss"]) > 0

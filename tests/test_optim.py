@@ -1,0 +1,57 @@
+"""Optimizer + schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw_init, adamw_update, constant, global_norm, warmup_cosine, warmup_linear
+
+
+def test_adamw_minimises_quadratic():
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    opt = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(200):
+        grads = jax.grad(loss)(params)
+        params, opt = adamw_update(grads, opt, params, lr=5e-2, weight_decay=0.0)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adamw_bf16_state_roundtrip():
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    opt = adamw_init(params, state_dtype="bfloat16")
+    assert opt.m["w"].dtype == jnp.bfloat16
+    grads = {"w": jnp.ones((4,), jnp.bfloat16)}
+    new_p, new_opt = adamw_update(grads, opt, params, lr=1e-2)
+    assert new_p["w"].dtype == jnp.bfloat16
+    assert int(new_opt.count) == 1
+    assert bool(jnp.all(new_p["w"] < params["w"]))
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros((3,))}
+    opt = adamw_init(params)
+    huge = {"w": jnp.full((3,), 1e9)}
+    new_p, _ = adamw_update(huge, opt, params, lr=1.0, grad_clip=1.0)
+    assert bool(jnp.all(jnp.isfinite(new_p["w"])))
+    assert float(jnp.max(jnp.abs(new_p["w"]))) <= 1.5  # one adam step, clipped
+
+
+def test_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)
+
+
+def test_schedules():
+    sc = warmup_cosine(1.0, 10, 100)
+    assert float(sc(0)) == 0.0
+    assert float(sc(10)) == pytest.approx(1.0, rel=1e-3)
+    assert float(sc(100)) == pytest.approx(0.1, rel=1e-2)  # final_frac
+    lin = warmup_linear(2.0, 5, 50)
+    assert float(lin(5)) == pytest.approx(2.0)
+    assert float(lin(50)) == pytest.approx(0.0, abs=1e-6)
+    assert float(constant(0.3)(123)) == pytest.approx(0.3)

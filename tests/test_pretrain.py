@@ -1,0 +1,53 @@
+"""Backbone pretraining stage (simulated pretrained W', DESIGN §1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.gpt2_paper import REDUCED_CLIENT
+from repro.data import make_fed_benchmark_dataset
+from repro.fed.pretrain import pretrain_classifier, pretrain_lm
+from repro.fed.steps import make_eval_fn
+from repro.lora import split_lora
+
+CFG = REDUCED_CLIENT.with_overrides(num_layers=2, d_model=128, num_heads=4, d_ff=256)
+
+
+def test_supervised_pretrain_beats_chance():
+    ds = make_fed_benchmark_dataset(CFG.vocab_size, seed=0, total=900)
+    params = pretrain_classifier(CFG, ds.subset(np.arange(300)), num_classes=77,
+                                 steps=40, seed=0)
+    ev = make_eval_fn(CFG, 77)
+    acc = ev(params, jnp.asarray(ds.tokens[300:556]), jnp.asarray(ds.labels[300:556]))
+    assert acc > 5 / 77, acc
+
+
+def test_pretrain_returns_zero_delta_lora():
+    """FL must start from W' + B=0 (paper eq. 1): pretraining is absorbed
+    into the frozen backbone, adapters reset."""
+    ds = make_fed_benchmark_dataset(CFG.vocab_size, seed=1, total=400)
+    params = pretrain_classifier(CFG, ds, num_classes=77, steps=5, seed=0)
+    lora, _ = split_lora(params)
+    for path, leaf in jax.tree_util.tree_leaves_with_path(lora):
+        name = str(path[-1].key if hasattr(path[-1], "key") else path[-1])
+        if name == "B":
+            assert float(jnp.max(jnp.abs(leaf))) == 0.0, path
+
+
+def test_pretrain_cached():
+    ds = make_fed_benchmark_dataset(CFG.vocab_size, seed=2, total=400)
+    a = pretrain_classifier(CFG, ds, num_classes=77, steps=3, seed=7)
+    b = pretrain_classifier(CFG, ds, num_classes=77, steps=3, seed=7)
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_lm_pretrain_carries_no_label_info():
+    """LM-only pretraining must leave classification at chance — the server
+    curve then isolates what distillation transfers."""
+    ds = make_fed_benchmark_dataset(CFG.vocab_size, seed=3, total=600)
+    params = pretrain_lm(CFG, ds.subset(np.arange(200)), steps=15, seed=0)
+    ev = make_eval_fn(CFG, 77)
+    acc = ev(params, jnp.asarray(ds.tokens[300:556]), jnp.asarray(ds.labels[300:556]))
+    assert acc < 6 / 77, f"LM pretrain leaked label info: {acc}"

@@ -1,0 +1,105 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import aggregate_adaptive, aggregate_zeropad
+from repro.core.channel import ChannelState, bits_per_entry, topk_budget
+from repro.core.distill import kl_divergence
+from repro.core.protocol import PayloadSpec
+from repro.core.topk import densify, topk_sparsify
+
+SETTINGS = settings(max_examples=30, deadline=None)
+
+
+@given(
+    bandwidth=st.floats(1e3, 1e9),
+    snr_db=st.floats(-20, 40),
+    eta=st.floats(0.01, 1.0),
+    deadline=st.floats(0.01, 10.0),
+    vocab=st.integers(2, 300_000),
+    samples=st.integers(1, 5000),
+)
+@SETTINGS
+def test_topk_payload_respects_shannon_budget(bandwidth, snr_db, eta, deadline, vocab, samples):
+    """INVARIANT (paper §III-A): the adaptive payload never exceeds the
+    channel's bit budget — except via the k_min=1 survival floor."""
+    state = ChannelState(bandwidth, snr_db, eta, deadline)
+    k = topk_budget(state, vocab_size=vocab, num_samples=samples)
+    spec = PayloadSpec(num_samples=samples, vocab=vocab, k=k, lora_rank=None)
+    floor_bits = samples * 1 * bits_per_entry(16, vocab)
+    assert spec.uplink_bits <= max(state.bit_budget, floor_bits) + 1e-6
+
+
+@given(
+    n=st.integers(1, 8),
+    rows=st.integers(1, 4),
+    vocab=st.integers(4, 128),
+    keep=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**30),
+)
+@SETTINGS
+def test_adaptive_aggregation_convexity(n, rows, vocab, keep, seed):
+    """INVARIANT (eqs. 6-7): per dim, output is a convex combination of the
+    transmitting clients' values; untouched dims stay exactly zero."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, rows, vocab))
+    mask = jax.random.uniform(jax.random.fold_in(key, 1), x.shape) < keep
+    stack = jnp.where(mask, x, 0.0)
+    out = aggregate_adaptive(stack)
+    transmitted = stack != 0
+    touched = transmitted.any(axis=0)
+    lo = jnp.where(transmitted, stack, jnp.inf).min(axis=0)
+    hi = jnp.where(transmitted, stack, -jnp.inf).max(axis=0)
+    assert bool(jnp.all(jnp.where(touched, (out >= lo - 1e-4) & (out <= hi + 1e-4), out == 0)))
+
+
+@given(
+    rows=st.integers(1, 4),
+    vocab=st.integers(8, 256),
+    k=st.integers(1, 64),
+    seed=st.integers(0, 2**30),
+)
+@SETTINGS
+def test_sparsify_preserves_topk_and_is_idempotent(rows, vocab, k, seed):
+    k = min(k, vocab)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, vocab)) + 10.0
+    d = densify(topk_sparsify(x, k))
+    # exactly k nonzeros per row (values are strictly positive)
+    assert int(jnp.sum(d != 0)) == rows * k
+    d2 = densify(topk_sparsify(d, k))
+    np.testing.assert_allclose(d, d2, atol=0)
+
+
+@given(
+    rows=st.integers(1, 4),
+    vocab=st.integers(2, 128),
+    temp=st.floats(0.5, 10.0),
+    seed=st.integers(0, 2**30),
+)
+@SETTINGS
+def test_kl_nonnegative_property(rows, vocab, temp, seed):
+    key = jax.random.PRNGKey(seed)
+    t = jax.random.normal(key, (rows, vocab)) * 5
+    s = jax.random.normal(jax.random.fold_in(key, 1), (rows, vocab)) * 5
+    assert float(kl_divergence(t, s, temp)) >= -1e-5
+
+
+@given(
+    n=st.integers(2, 6),
+    vocab=st.integers(4, 64),
+    seed=st.integers(0, 2**30),
+)
+@SETTINGS
+def test_aggregation_modes_agree_on_dense_stacks(n, vocab, seed):
+    """With NO sparsity, adaptive and zeropad agree when all values are equal
+    (degenerate case), and both return finite values generally."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, 2, vocab))
+    assert bool(jnp.all(jnp.isfinite(aggregate_adaptive(x))))
+    assert bool(jnp.all(jnp.isfinite(aggregate_zeropad(x))))
+    same = jnp.broadcast_to(x[0], x.shape)
+    np.testing.assert_allclose(
+        aggregate_adaptive(same), aggregate_zeropad(same), rtol=1e-4, atol=1e-5
+    )

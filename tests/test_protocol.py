@@ -1,0 +1,59 @@
+"""Communication accounting (paper §III-C, Fig. 3)."""
+
+import pytest
+
+from repro.core.channel import ChannelState
+from repro.core.protocol import (
+    CommLedger,
+    PayloadSpec,
+    RoundStats,
+    UplinkPayload,
+    full_logits_bits,
+    lora_projection_bits,
+    topk_upload_bits,
+)
+
+
+def test_topk_vs_full_savings():
+    """Top-k with k << V is far cheaper than full logits; the paper's ~50%
+    claim combines top-k + fewer rounds."""
+    v, n = 50_288, 2000
+    full = full_logits_bits(n, v)
+    topk = topk_upload_bits(n, 100, v)
+    assert topk < full / 100
+
+
+def test_lora_projection_is_cheap():
+    # r=8 projection << even a k=100 top-k payload (paper §III-C)
+    assert lora_projection_bits(2000, 8) < topk_upload_bits(2000, 100, 50_288) / 10
+
+
+def test_payload_spec_bits():
+    spec = PayloadSpec(num_samples=10, vocab=65_536, k=5, lora_rank=8)
+    # d = 16 + 16 index bits; + 8*16 bits of h per sample
+    assert spec.uplink_bits == 10 * 5 * 32 + 10 * 8 * 16
+    assert spec.uplink_bytes == spec.uplink_bits / 8
+
+
+def test_fits_budget_invariant():
+    st = ChannelState(bandwidth_hz=1e6, snr_db=0.0, eta=1.0, deadline_s=1.0)
+    ok = PayloadSpec(num_samples=100, vocab=1024, k=10)  # 100*10*26 = 26k bits
+    too_big = PayloadSpec(num_samples=100_000, vocab=1024, k=1000)
+    assert ok.fits(st)
+    assert not too_big.fits(st)
+
+
+def test_ledger_threshold_metric():
+    led = CommLedger()
+    for i, acc in enumerate([0.2, 0.5, 0.72, 0.8]):
+        led.record(RoundStats(round_index=i, uplink_bytes=1e6, downlink_bytes=1e6,
+                              server_accuracy=acc))
+    assert led.mb_to_reach(0.7) == pytest.approx(6.0)  # 3 rounds x 2 MB
+    assert led.mb_to_reach(0.95) is None
+    assert led.total_mb == pytest.approx(8.0)
+
+
+def test_uplink_payload_bytes():
+    spec = PayloadSpec(num_samples=4, vocab=256, k=2, lora_rank=None)
+    up = UplinkPayload(client_id=0, spec=spec)
+    assert up.bytes == spec.uplink_bytes

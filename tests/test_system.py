@@ -1,0 +1,57 @@
+"""End-to-end behaviour tests for the paper's system (AdaLD).
+
+The headline claim we reproduce at reduced scale: federated distillation
+with adaptive Top-k + adaptive aggregation + LoRA-projection alignment
+transfers knowledge (accuracy above chance grows round over round) at a
+fraction of the All-logits communication cost.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.gpt2_paper import REDUCED_CLIENT, REDUCED_SERVER
+from repro.fed import FedConfig, run_federated
+
+CLIENT = REDUCED_CLIENT.with_overrides(num_layers=2, d_model=128, num_heads=4, d_ff=512)
+SERVER = REDUCED_SERVER.with_overrides(
+    num_layers=3, d_model=192, num_heads=4, num_kv_heads=4, d_ff=768
+)
+
+
+@pytest.fixture(scope="module")
+def adald_run():
+    from repro.data import make_fed_benchmark_dataset
+
+    ds = make_fed_benchmark_dataset(CLIENT.vocab_size, seed=0)
+    fed = FedConfig(
+        method="adald", num_clients=6, clients_per_round=3, rounds=6,
+        public_size=256, public_batch=96, eval_size=256, local_steps=10,
+        distill_steps=1, server_distill_steps=20, lr=2e-3, seed=0,
+    )
+    return run_federated(CLIENT, SERVER, ds, fed)
+
+
+def test_knowledge_transfer_happens(adald_run):
+    """The server backbone is LM-pretrained only (no label information);
+    every accuracy point above chance comes from distilled client knowledge."""
+    chance = 1 / 77
+    assert max(adald_run.server_acc) > 2.5 * chance, adald_run.server_acc
+
+
+def test_clients_learn_locally(adald_run):
+    # supervised-pretrained + locally fine-tuned clients are strong learners
+    assert max(adald_run.client_acc) > 0.35, adald_run.client_acc
+
+
+def test_accuracy_trend_upward(adald_run):
+    first, last = adald_run.server_acc[0], max(adald_run.server_acc[-3:])
+    assert last >= first
+
+
+def test_communication_accounted_every_round(adald_run):
+    assert len(adald_run.ledger.rounds) == 6
+    for r in adald_run.ledger.rounds:
+        assert r.uplink_bytes > 0
+    # downlink starts at round 1 (cold server at round 0)
+    assert adald_run.ledger.rounds[0].downlink_bytes == 0
+    assert adald_run.ledger.rounds[1].downlink_bytes > 0

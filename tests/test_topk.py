@@ -1,0 +1,51 @@
+"""Top-k sparsification (paper eqs. 3-4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topk import densify, topk_mask_dense, topk_sparsify
+
+
+def test_topk_matches_lax_topk():
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 100))
+    s = topk_sparsify(x, 7)
+    want_v, want_i = jax.lax.top_k(x, 7)
+    np.testing.assert_array_equal(s.values, want_v)
+    np.testing.assert_array_equal(s.indices, want_i)
+    assert s.k == 7 and s.vocab == 100
+
+
+def test_k_clamped_to_vocab():
+    x = jnp.ones((2, 8))
+    s = topk_sparsify(x, 99)
+    assert s.k == 8
+
+
+def test_densify_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 4, 50))
+    s = topk_sparsify(x, 50)  # full k
+    np.testing.assert_allclose(densify(s), x, rtol=0, atol=0)
+
+
+def test_densify_zeros_off_support():
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 64)) + 10.0  # all positive
+    d = densify(topk_sparsify(x, 5))
+    assert int(jnp.sum(d != 0)) == 4 * 5
+    # kept entries are the largest
+    kth = jnp.sort(x, axis=-1)[:, -5]
+    assert bool(jnp.all(jnp.where(d != 0, x >= kth[:, None], True)))
+
+
+def test_topk_mask_dense_equals_sparsify_densify():
+    x = jax.random.normal(jax.random.PRNGKey(3), (6, 40))
+    np.testing.assert_allclose(
+        topk_mask_dense(x, 9), densify(topk_sparsify(x, 9)), atol=0
+    )
+
+
+def test_sparsify_idempotent():
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 30)) + 5.0
+    once = densify(topk_sparsify(x, 6))
+    twice = densify(topk_sparsify(once, 6))
+    np.testing.assert_allclose(once, twice, atol=0)
