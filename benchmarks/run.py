@@ -28,10 +28,11 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import agg_ablation, fig2_accuracy, fig3_comm, kernel_bench
+    from benchmarks import agg_ablation, engine_bench, fig2_accuracy, fig3_comm, kernel_bench
 
     benches = {
         "kernel": kernel_bench.bench,
+        "engine": engine_bench.bench,
         "agg": agg_ablation.bench,
         "fig2": fig2_accuracy.bench,
         "fig3": fig3_comm.bench,

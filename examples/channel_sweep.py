@@ -27,7 +27,7 @@ ds = make_banking77_like(vocab_size=client.vocab_size, seq_len=20, total=1500, s
 print(f"{'SNR dB':>8} {'BW MHz':>8} {'mean k':>8} {'uplink MB':>10} {'best acc':>9}")
 for snr, bw in [(0, 0.2e6), (5, 0.5e6), (10, 1e6), (20, 2e6), (30, 10e6)]:
     fed = FedConfig(
-        method="adald", num_clients=6, clients_per_round=3, rounds=4,
+        method="adald", engine="batched", num_clients=6, clients_per_round=3, rounds=4,
         public_size=256, public_batch=64, eval_size=256, local_steps=3,
         distill_steps=1, seed=0,
         channel=ChannelConfig(bandwidth_hz=bw, mean_snr_db=snr),
@@ -37,3 +37,18 @@ for snr, bw in [(0, 0.2e6), (5, 0.5e6), (10, 1e6), (20, 2e6), (30, 10e6)]:
           f"{run.ledger.uplink_mb:10.3f} {max(run.server_acc):9.3f}")
 print("\nworse channel -> smaller k -> fewer bytes; accuracy degrades gracefully"
       "\n(the adaptive aggregation compensating for sparsity is the paper's point).")
+
+# Straggler scenario: min_k=0 removes the survival floor, dropout_prob puts
+# links into outage — dropped clients transmit nothing and are excluded from
+# aggregation (never zero-padded in).
+print("\n--- straggler/dropout scenario (min_k=0, 30% outage) ---")
+fed = FedConfig(
+    method="adald", engine="batched", num_clients=6, clients_per_round=3, rounds=4,
+    public_size=256, public_batch=64, eval_size=256, local_steps=3,
+    distill_steps=1, seed=0,
+    channel=ChannelConfig(bandwidth_hz=0.5e6, mean_snr_db=5, min_k=0, dropout_prob=0.3),
+)
+run = run_federated(client, server, ds, fed)
+for r in run.ledger.rounds:
+    print(f"round {r.round_index}: transmitters {r.num_transmitters}/{r.num_selected}  "
+          f"uplink {r.uplink_bytes/1e6:.3f} MB  server_acc {r.server_accuracy:.3f}")

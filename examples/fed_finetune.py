@@ -6,7 +6,11 @@ Each round runs clients_per_round x (local_steps + distill_steps) model
 updates plus server distillation; 12 rounds x 4 clients x 8 steps ≈ 400+
 optimisation steps end-to-end.
 
-Run:  PYTHONPATH=src python examples/fed_finetune.py [rounds]
+Run:  PYTHONPATH=src python examples/fed_finetune.py [rounds] [engine]
+
+``engine`` is ``batched`` (default: the whole selected cohort advances as
+single vmapped/jitted steps) or ``sequential`` (the bit-compatible
+one-client-at-a-time reference) — see FedConfig.engine.
 """
 
 import os
@@ -19,18 +23,20 @@ from repro.data import make_banking77_like  # noqa: E402
 from repro.fed import FedConfig, run_federated  # noqa: E402
 
 rounds = int(sys.argv[1]) if len(sys.argv) > 1 else 12
+engine = sys.argv[2] if len(sys.argv) > 2 else "batched"
 
 client_cfg = REDUCED_CLIENT
 server_cfg = REDUCED_SERVER
 dataset = make_banking77_like(vocab_size=client_cfg.vocab_size, seq_len=24, seed=0)
 
 print(f"clients: {client_cfg.name} ({client_cfg.param_count()/1e6:.1f}M params)  "
-      f"server: {server_cfg.name} ({server_cfg.param_count()/1e6:.1f}M params)")
+      f"server: {server_cfg.name} ({server_cfg.param_count()/1e6:.1f}M params)  "
+      f"engine: {engine}")
 
 results = {}
 for method in ("adald", "zeropad"):
     fed = FedConfig(
-        method=method, num_clients=10, clients_per_round=4, rounds=rounds,
+        method=method, engine=engine, num_clients=10, clients_per_round=4, rounds=rounds,
         public_size=512, public_batch=96, eval_size=512,
         local_steps=6, distill_steps=2, seed=0,
     )

@@ -16,12 +16,14 @@ from repro.core.aggregation import (
     aggregate_zeropad,
 )
 from repro.core.channel import (
+    BatchedChannelState,
     ChannelConfig,
     ChannelSimulator,
     ChannelState,
     bits_per_entry,
     capacity_bps,
     topk_budget,
+    topk_budget_batch,
 )
 from repro.core.distill import (
     DEFAULT_LAMBDA,
@@ -40,7 +42,13 @@ from repro.core.protocol import (
     full_logits_bits,
     topk_upload_bits,
 )
-from repro.core.topk import SparseLogits, densify, topk_mask_dense, topk_sparsify
+from repro.core.topk import (
+    SparseLogits,
+    densify,
+    topk_mask_batch,
+    topk_mask_dense,
+    topk_sparsify,
+)
 
 __all__ = [
     "aggregate",
@@ -48,12 +56,14 @@ __all__ = [
     "aggregate_mean_nonzero",
     "aggregate_sparse",
     "aggregate_zeropad",
+    "BatchedChannelState",
     "ChannelConfig",
     "ChannelSimulator",
     "ChannelState",
     "bits_per_entry",
     "capacity_bps",
     "topk_budget",
+    "topk_budget_batch",
     "DEFAULT_LAMBDA",
     "DEFAULT_TEMPERATURE",
     "kl_divergence",
@@ -69,6 +79,7 @@ __all__ = [
     "topk_upload_bits",
     "SparseLogits",
     "densify",
+    "topk_mask_batch",
     "topk_mask_dense",
     "topk_sparsify",
 ]

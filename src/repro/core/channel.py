@@ -31,11 +31,13 @@ import numpy as np
 
 __all__ = [
     "ChannelState",
+    "BatchedChannelState",
     "ChannelConfig",
     "ChannelSimulator",
     "capacity_bps",
     "bit_budget",
     "topk_budget",
+    "topk_budget_batch",
     "bits_per_entry",
 ]
 
@@ -99,12 +101,86 @@ def topk_budget(
     same budget divides across samples (each sample's sparse vector costs
     ``k*d`` bits).  Clamped to ``[k_min, min(k_max, vocab)]`` so a client in
     deep fade still sends its argmax rather than dropping out.
+
+    A link in outage (zero bit budget) returns 0 regardless of ``k_min``:
+    the survival floor exists for faded-but-alive links, but nothing can be
+    transmitted over zero capacity — the client drops the round.
     """
+    if state.bit_budget <= 0.0:
+        return 0
     d = bits_per_entry(value_bits, vocab_size)
     total_entries = state.bit_budget / float(d)
     k = int(math.floor(total_entries / max(1, num_samples)))
     hi = vocab_size if k_max is None else min(k_max, vocab_size)
     return max(k_min, min(k, hi))
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedChannelState:
+    """Link states for a whole round's selected cohort as arrays.
+
+    The batched round engine consumes this directly; ``__iter__`` /
+    ``__getitem__`` recover the scalar :class:`ChannelState` views so the
+    sequential reference engine sees identical per-client states.
+    """
+
+    bandwidth_hz: np.ndarray  # (C,)
+    snr_db: np.ndarray  # (C,)
+    eta: np.ndarray  # (C,)
+    deadline_s: np.ndarray  # (C,)
+
+    @classmethod
+    def from_states(cls, states: Sequence[ChannelState]) -> "BatchedChannelState":
+        return cls(
+            bandwidth_hz=np.array([s.bandwidth_hz for s in states], dtype=np.float64),
+            snr_db=np.array([s.snr_db for s in states], dtype=np.float64),
+            eta=np.array([s.eta for s in states], dtype=np.float64),
+            deadline_s=np.array([s.deadline_s for s in states], dtype=np.float64),
+        )
+
+    def __len__(self) -> int:
+        return int(self.snr_db.shape[0])
+
+    def __getitem__(self, i: int) -> ChannelState:
+        return ChannelState(
+            bandwidth_hz=float(self.bandwidth_hz[i]),
+            snr_db=float(self.snr_db[i]),
+            eta=float(self.eta[i]),
+            deadline_s=float(self.deadline_s[i]),
+        )
+
+    def __iter__(self):
+        for i in range(len(self)):
+            yield self[i]
+
+
+def topk_budget_batch(
+    states: "BatchedChannelState | Sequence[ChannelState]",
+    *,
+    vocab_size: int,
+    num_samples: int,
+    value_bits: int = 16,
+    k_min: int = 1,
+    k_max: int | None = None,
+) -> list[int]:
+    """Per-client adaptive budgets for a round's cohort.
+
+    Evaluates the scalar :func:`topk_budget` per client (host-side, tiny N)
+    rather than a vectorized reimplementation so the batched engine's ``k``
+    is bit-identical to the sequential reference — a one-ulp difference in a
+    vectorized log2 could flip a ``floor`` and desynchronise the engines.
+    """
+    return [
+        topk_budget(
+            s,
+            vocab_size=vocab_size,
+            num_samples=num_samples,
+            value_bits=value_bits,
+            k_min=k_min,
+            k_max=k_max,
+        )
+        for s in states
+    ]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +190,14 @@ class ChannelConfig:
     Defaults loosely follow an LTE-like uplink: 1 MHz effective bandwidth,
     mean SNR 10 dB with log-normal shadowing + Rayleigh-like fast fading,
     1 s round deadline, equal resource share ``eta = 1/num_selected``.
+
+    Straggler / dropout scenarios: ``dropout_prob`` puts a selected client's
+    link into outage (zero capacity -> k = 0, the client transmits nothing
+    that round, regardless of ``min_k``), and ``min_k = 0`` additionally
+    removes the survival floor so a faded-but-alive client whose budget
+    cannot afford a single (value, index) entry also drops out.  The round
+    engines exclude k == 0 clients from aggregation entirely instead of
+    zero-padding them in.
     """
 
     bandwidth_hz: float = 1.0e6
@@ -123,6 +207,8 @@ class ChannelConfig:
     deadline_s: float = 1.0
     eta: float | None = None  # None -> 1/num_clients per round
     value_bits: int = 16
+    min_k: int = 1  # survival floor; 0 lets deep-fade clients drop the round
+    dropout_prob: float = 0.0  # per-(round, client) outage probability
 
 
 class ChannelSimulator:
@@ -151,12 +237,22 @@ class ChannelSimulator:
         fade_rng = np.random.default_rng(
             np.random.SeedSequence(entropy=round_index, spawn_key=(7,))
         )
+        # Outage draws live on a separate stream (spawn_key 8) so enabling
+        # dropout does not perturb the fading realisation of existing runs.
+        dropped = np.zeros(len(client_ids), dtype=bool)
+        if cfg.dropout_prob > 0.0:
+            drop_rng = np.random.default_rng(
+                np.random.SeedSequence(entropy=round_index, spawn_key=(8,))
+            )
+            dropped = drop_rng.random(len(client_ids)) < cfg.dropout_prob
         out = []
-        for cid in client_ids:
+        for pos, cid in enumerate(client_ids):
             snr = cfg.mean_snr_db + float(self._shadowing_db[cid % self.num_clients])
             if cfg.fast_fading:
                 # Rayleigh power fading: 10*log10(Exp(1)) has mean ~ -2.5 dB.
                 snr += 10.0 * math.log10(max(1e-6, fade_rng.exponential(1.0)))
+            if dropped[pos]:
+                snr = -math.inf  # outage: zero capacity -> zero bit budget
             out.append(
                 ChannelState(
                     bandwidth_hz=cfg.bandwidth_hz,
@@ -167,6 +263,13 @@ class ChannelSimulator:
             )
         return out
 
+    def states_batched(
+        self, round_index: int, client_ids: Sequence[int]
+    ) -> BatchedChannelState:
+        """The same per-round realisation as :meth:`states`, stacked into the
+        array form the batched round engine consumes."""
+        return BatchedChannelState.from_states(self.states(round_index, client_ids))
+
     def topk_for(
         self,
         round_index: int,
@@ -174,18 +277,19 @@ class ChannelSimulator:
         *,
         vocab_size: int,
         num_samples: int,
-        k_min: int = 1,
+        k_min: int | None = None,
         k_max: int | None = None,
     ) -> list[int]:
         """Per-client adaptive k for this round (paper: 'based on real-time
-        channel condition')."""
+        channel condition').  ``k_min`` defaults to the config's ``min_k`` so
+        this agrees with the round engines' straggler semantics."""
         return [
             topk_budget(
                 s,
                 vocab_size=vocab_size,
                 num_samples=num_samples,
                 value_bits=self.config.value_bits,
-                k_min=k_min,
+                k_min=self.config.min_k if k_min is None else k_min,
                 k_max=k_max,
             )
             for s in self.states(round_index, client_ids)

@@ -99,6 +99,11 @@ class RoundStats:
     client_accuracy: float = float("nan")
     distill_loss: float = float("nan")
     mean_k: float = float("nan")
+    # Clients that actually uploaded this round (straggler/dropout scenarios
+    # can leave selected clients with k == 0 -> they transmit nothing and are
+    # excluded from aggregation).  None -> engine predates this field.
+    num_selected: int | None = None
+    num_transmitters: int | None = None
 
     @property
     def total_bytes(self) -> float:

@@ -20,7 +20,7 @@ routes to the kernel.
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,7 @@ __all__ = [
     "SparseLogits",
     "topk_sparsify",
     "topk_mask_dense",
+    "topk_mask_batch",
     "densify",
     "sparsify_batch",
     "payload_entries",
@@ -97,6 +98,33 @@ def topk_mask_dense(logits: jax.Array, k: int, *, use_kernel: bool = False) -> j
         return kops.topk_mask(logits, k)
     sparse = topk_sparsify(logits, k)
     return densify(sparse)
+
+
+def topk_mask_batch(logits: jax.Array, ks: Sequence[int]) -> jax.Array:
+    """Per-client densified top-k of a stacked ``(C, ..., vocab)`` tensor with
+    a *different* budget per client (the adaptive-k cohort of one round).
+
+    One ``lax.top_k`` at ``max(ks)`` serves every client; client ``i``'s tail
+    entries beyond its own ``ks[i]`` are zeroed before the scatter, so the
+    result equals ``stack([densify(topk_sparsify(logits[i], ks[i]))])``
+    bit-for-bit (``lax.top_k`` is a stable total-order select, so its first
+    ``k_i`` entries at ``k_max`` are exactly its ``k_i`` entries at ``k_i``).
+    """
+    if logits.shape[0] != len(ks):
+        raise ValueError(f"{len(ks)} budgets for {logits.shape[0]} clients")
+    vocab = logits.shape[-1]
+    ks = [int(min(k, vocab)) for k in ks]
+    if min(ks) < 0:
+        raise ValueError(f"negative top-k budget in {ks}")
+    k_max = max(ks + [1])
+    values, indices = jax.lax.top_k(logits, k_max)
+    # (C, 1, ..., 1) against (k_max,) -> mask (C, 1, ..., k_max), which then
+    # broadcasts over the sample axes of ``values``.
+    karr = jnp.asarray(ks, jnp.int32).reshape((len(ks),) + (1,) * (logits.ndim - 1))
+    mask = jnp.arange(k_max, dtype=jnp.int32) < karr
+    values = jnp.where(mask, values, jnp.zeros_like(values))
+    dense = jnp.zeros(logits.shape, dtype=logits.dtype)
+    return _scatter_last(dense, indices.astype(jnp.int32), values)
 
 
 def sparsify_batch(logits: jax.Array, k: int) -> SparseLogits:

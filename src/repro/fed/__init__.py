@@ -1,5 +1,25 @@
 from repro.fed.client import Client, ClientUpload
+from repro.fed.engine import (
+    BatchedEngine,
+    BroadcastState,
+    ClientPhase,
+    SequentialEngine,
+    make_engine,
+)
 from repro.fed.rounds import METHODS, FedConfig, FedRun, run_federated
 from repro.fed.server import Server
 
-__all__ = ["Client", "ClientUpload", "Server", "METHODS", "FedConfig", "FedRun", "run_federated"]
+__all__ = [
+    "Client",
+    "ClientUpload",
+    "Server",
+    "METHODS",
+    "FedConfig",
+    "FedRun",
+    "run_federated",
+    "BatchedEngine",
+    "SequentialEngine",
+    "BroadcastState",
+    "ClientPhase",
+    "make_engine",
+]

@@ -18,7 +18,28 @@ from repro.data.synthetic import IntentDataset
 from repro.fed import steps as fed_steps
 from repro.models import init as model_init
 
-__all__ = ["ClientUpload", "Client"]
+__all__ = ["ClientUpload", "Client", "make_upload_payload"]
+
+
+def make_upload_payload(
+    cfg: ModelConfig,
+    client_id: int,
+    num_samples: int,
+    k: int,
+    *,
+    send_h: bool,
+    value_bits: int,
+    snr_db: float,
+) -> tuple[UplinkPayload, int | None]:
+    """The single source of truth for one upload's on-air accounting
+    (shared by Client.upload and the batched engine, so ledger parity can't
+    drift).  Returns (payload, lora_rank or None)."""
+    rank = cfg.lora.rank if (send_h and cfg.lora is not None) else None
+    spec = PayloadSpec(
+        num_samples=num_samples, vocab=cfg.vocab_size, k=k,
+        lora_rank=rank, value_bits=value_bits,
+    )
+    return UplinkPayload(client_id=client_id, spec=spec, snr_db=snr_db), rank
 
 
 @dataclasses.dataclass
@@ -75,17 +96,25 @@ class Client:
         )
         self._rng = np.random.default_rng(seed + 1000 * (client_id + 1))
 
+    def next_train_batches(self, num_steps: int) -> list[dict]:
+        """Draw the next ``num_steps`` private batches, advancing this
+        client's RNG stream exactly as :meth:`local_train` consumes it — the
+        batched engine pulls batches through here so both engines see
+        identical data under the same seed."""
+        out: list[dict] = []
+        while len(out) < num_steps:
+            for batch in epoch_batches(self.data, self.batch_size, rng=self._rng):
+                out.append(batch)
+                if len(out) >= num_steps:
+                    break
+        return out
+
     # ---- Algorithm 1, line 8: local supervised fine-tuning ----
     def local_train(self) -> dict:
         metrics = {}
-        done = 0
-        while done < self.local_steps:
-            for batch in epoch_batches(self.data, self.batch_size, rng=self._rng):
-                jb = {k: jnp.asarray(v) for k, v in batch.items()}
-                self.params, self.opt, metrics = self._train_step(self.params, self.opt, jb)
-                done += 1
-                if done >= self.local_steps:
-                    break
+        for batch in self.next_train_batches(self.local_steps):
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt, metrics = self._train_step(self.params, self.opt, jb)
         return {k: float(v) for k, v in metrics.items()}
 
     # ---- Algorithm 1, lines 5-7: local distillation vs global knowledge ----
@@ -106,25 +135,32 @@ class Client:
         value_bits: int = 16,
         k_override: int | None = None,
         send_h: bool = True,
-    ) -> ClientUpload:
-        logits, h = fed_steps.public_logits(self.params, self.cfg, public_tokens)
-        vocab = logits.shape[-1]
-        n_samples = logits.shape[0]
+        k_min: int = 1,
+    ) -> ClientUpload | None:
+        """Returns None when the channel budget cannot afford a single
+        (value, index) entry and ``k_min == 0`` — a straggler in outage
+        transmits nothing and must not be zero-padded into aggregation."""
+        vocab = self.cfg.vocab_size
+        n_samples = int(public_tokens.shape[0])
         if k_override is not None:
             k = int(min(k_override, vocab))
         else:
             k = topk_budget(
-                channel, vocab_size=vocab, num_samples=n_samples, value_bits=value_bits
+                channel, vocab_size=vocab, num_samples=n_samples,
+                value_bits=value_bits, k_min=k_min,
             )
+        if k == 0:
+            return None
+        logits, h = fed_steps.public_logits(self.params, self.cfg, public_tokens)
         sparse = topk_sparsify(logits, k)
-        rank = self.cfg.lora.rank if (send_h and self.cfg.lora is not None) else None
-        spec = PayloadSpec(
-            num_samples=n_samples, vocab=vocab, k=k, lora_rank=rank, value_bits=value_bits
+        payload, _ = make_upload_payload(
+            self.cfg, self.client_id, n_samples, k,
+            send_h=send_h, value_bits=value_bits, snr_db=channel.snr_db,
         )
         return ClientUpload(
             client_id=self.client_id,
             sparse=sparse,
             h=h if send_h else None,
-            payload=UplinkPayload(client_id=self.client_id, spec=spec, snr_db=channel.snr_db),
+            payload=payload,
             k=k,
         )

@@ -29,12 +29,14 @@ from repro.core.protocol import CommLedger, RoundStats
 from repro.data.partition import dirichlet_partition, iid_partition, split_public_private
 from repro.data.synthetic import IntentDataset
 from repro.fed.client import Client
+from repro.fed.engine import BroadcastState, make_engine
 from repro.fed.server import Server
 from repro.fed.steps import make_eval_fn
 
 __all__ = ["FedConfig", "FedRun", "run_federated", "METHODS"]
 
 Method = Literal["adald", "adaptive", "zeropad", "all_logits"]
+Engine = Literal["sequential", "batched"]
 
 METHODS: dict[str, dict] = {
     "adald": dict(aggregation="adaptive", send_h=True, adaptive_k=True),
@@ -49,6 +51,10 @@ class FedConfig:
     """Paper Table I defaults (reduced-scale knobs exposed)."""
 
     method: Method = "adald"
+    # Client-phase executor: "batched" stacks the selected cohort along a
+    # leading client axis and runs each phase as one vmapped/jitted step;
+    # "sequential" is the bit-compatible one-client-at-a-time reference.
+    engine: Engine = "batched"
     num_clients: int = 50
     clients_per_round: int = 10
     rounds: int = 20
@@ -87,6 +93,9 @@ class FedRun:
     server_acc: list[float]
     client_acc: list[float]
     mean_k: list[float]
+    # Per-round list of each selected client's adaptive k (0 = dropped
+    # straggler that transmitted nothing).
+    per_client_k: list[list[int]] = dataclasses.field(default_factory=list)
 
     def summary(self) -> dict:
         return {
@@ -179,51 +188,61 @@ def run_federated(
     evaluate = make_eval_fn(server_cfg, dataset.num_classes)
     evaluate_client = make_eval_fn(client_cfg, dataset.num_classes)
 
+    engine = make_engine(
+        fed.engine,
+        clients,
+        client_cfg,
+        num_classes=dataset.num_classes,
+        lr=fed.lr,
+        distill_lr=fed.distill_lr,
+        temperature=fed.temperature,
+        lam=fed.lam,
+        local_steps=fed.local_steps,
+        distill_steps=fed.distill_steps,
+        restrict_to_support=fed.restrict_to_support,
+        value_bits=fed.channel.value_bits,
+        k_min=fed.channel.min_k,
+    )
+
     ledger = CommLedger()
     run = FedRun(ledger=ledger, server_acc=[], client_acc=[], mean_k=[])
 
     pub_rng = np.random.default_rng(fed.seed + 7)
 
-    g_logits, g_h = None, None
+    # Broadcast knowledge carried across rounds: None until the server has
+    # distilled once (cold server at round 0 -> no downlink that round).
+    bcast: BroadcastState | None = None
     for rnd in range(fed.rounds):
         sel = rng.choice(fed.num_clients, size=fed.clients_per_round, replace=False)
         pub_sel = pub_rng.integers(0, len(public), size=fed.public_batch)
         pub_tokens = jnp.asarray(public.tokens[pub_sel])
 
-        downlink = 0
-        if g_logits is not None:
-            for cid in sel:
-                clients[cid].local_distill(pub_tokens_prev, g_logits, g_h)  # noqa: F821
-            downlink = g_bits * len(sel)  # noqa: F821 — broadcast to each selected client
+        # one broadcast of last round's knowledge per selected client
+        downlink = bcast.bits * len(sel) if bcast is not None else 0
 
-        states = chan_sim.states(rnd, list(sel))
-        uplink = 0.0
-        ks = []
-        uploads = []
-        for cid, st in zip(sel, states):
-            clients[cid].local_train()
-            up = clients[cid].upload(
-                pub_tokens,
-                st,
-                k_override=None if preset["adaptive_k"] else client_cfg.vocab_size,
-                send_h=preset["send_h"],
-            )
-            uploads.append(up)
-            uplink += up.payload.bytes
-            ks.append(up.k)
+        states = chan_sim.states_batched(rnd, list(sel))
+        phase = engine.run_round(
+            list(sel), pub_tokens, bcast, states,
+            adaptive_k=preset["adaptive_k"], send_h=preset["send_h"],
+        )
 
-        k_g, h_g = server.aggregate_uploads(uploads)
-        server.distill(pub_tokens, k_g, h_g)
+        if phase.dense is not None:
+            k_g, h_g = server.aggregate_dense(phase.dense, phase.h)
+            server.distill(pub_tokens, k_g, h_g)
+        # else: every selected client dropped this round -> no aggregation,
+        # the server's knowledge simply carries over.
         g_logits, g_h, g_bits = server.broadcast(pub_tokens)
-        pub_tokens_prev = pub_tokens
+        bcast = BroadcastState(tokens=pub_tokens, logits=g_logits, h=g_h, bits=g_bits)
 
         s_acc = evaluate(server.params, jnp.asarray(eval_tokens), jnp.asarray(eval_labels))
         c_acc = evaluate_client(
-            clients[sel[0]].params, jnp.asarray(eval_tokens), jnp.asarray(eval_labels)
+            engine.client_params(sel[0]), jnp.asarray(eval_tokens), jnp.asarray(eval_labels)
         )
+        uplink = phase.uplink_bytes
         run.server_acc.append(s_acc)
         run.client_acc.append(c_acc)
-        run.mean_k.append(float(np.mean(ks)))
+        run.mean_k.append(float(np.mean(phase.ks)))
+        run.per_client_k.append(list(phase.ks))
         ledger.record(
             RoundStats(
                 round_index=rnd,
@@ -231,13 +250,15 @@ def run_federated(
                 downlink_bytes=downlink / 8.0,
                 server_accuracy=s_acc,
                 client_accuracy=c_acc,
-                mean_k=float(np.mean(ks)),
+                mean_k=float(np.mean(phase.ks)),
+                num_selected=len(sel),
+                num_transmitters=phase.num_transmitters,
             )
         )
         if verbose:
             print(
-                f"[{fed.method}] round {rnd:3d}  server_acc={s_acc:.3f} "
-                f"client_acc={c_acc:.3f}  mean_k={np.mean(ks):7.1f}  "
-                f"uplink={uplink/1e6:.2f}MB"
+                f"[{fed.method}/{fed.engine}] round {rnd:3d}  server_acc={s_acc:.3f} "
+                f"client_acc={c_acc:.3f}  mean_k={np.mean(phase.ks):7.1f}  "
+                f"uplink={uplink/1e6:.2f}MB  tx={phase.num_transmitters}/{len(sel)}"
             )
     return run

@@ -47,9 +47,16 @@ class Server:
     def aggregate_uploads(self, uploads: list[ClientUpload]):
         """Returns (K_g (P, V), h_g (P, r) or None)."""
         stack = jnp.stack([densify(u.sparse) for u in uploads])  # (N, P, V)
-        k_g = aggregate(stack, self.aggregation, use_kernel=self.use_kernels)
         hs = [u.h for u in uploads if u.h is not None]
-        h_g = jnp.mean(jnp.stack(hs), axis=0) if hs else None
+        return self.aggregate_dense(stack, jnp.stack(hs) if hs else None)
+
+    def aggregate_dense(self, stack: jax.Array, h_stack: jax.Array | None = None):
+        """Aggregate an already-densified (N, P, V) stack (+ optional (N, P, r)
+        projection stack) — the batched engine's path; only clients that
+        actually transmitted may appear in the stack (dropped stragglers are
+        excluded, never zero-padded in)."""
+        k_g = aggregate(stack, self.aggregation, use_kernel=self.use_kernels)
+        h_g = jnp.mean(h_stack, axis=0) if h_stack is not None else None
         return k_g, h_g
 
     # ---- Algorithm 1, line 16: update the LLM by distilling K_g, h_g ----

@@ -29,6 +29,9 @@ __all__ = [
     "public_logits",
     "make_finetune_step",
     "make_distill_step",
+    "make_batched_finetune_step",
+    "make_batched_distill_step",
+    "make_batched_public_logits",
     "make_eval_fn",
     "init_lora_opt",
 ]
@@ -55,6 +58,40 @@ def init_lora_opt(params, cfg: ModelConfig) -> AdamWState:
     return adamw_init(lora, state_dtype=cfg.optimizer_state_dtype)
 
 
+def _finetune_loss_fn(cfg: ModelConfig, num_classes: int) -> Callable:
+    """loss(lora, frozen, batch) -> (nll + moe_aux, acc) — the shared core
+    of the sequential step and the batched cohort step."""
+
+    def loss_fn(lora, frozen, batch):
+        params = merge_lora(lora, frozen)
+        logits, aux = forward(params, cfg, {"tokens": batch["tokens"]})
+        cls = class_logits(logits[:, -1, :], num_classes)
+        logp = jax.nn.log_softmax(cls.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1).mean()
+        acc = jnp.mean((jnp.argmax(cls, -1) == batch["labels"]).astype(jnp.float32))
+        return nll + 0.01 * aux.moe_aux, acc
+
+    return loss_fn
+
+
+def _finetune_step_fn(
+    cfg: ModelConfig, num_classes: int, lr: float, weight_decay: float
+) -> Callable:
+    """Unjitted single-client fine-tune step over merged params."""
+
+    loss_fn = _finetune_loss_fn(cfg, num_classes)
+
+    def step(params, opt, batch):
+        lora, frozen = split_lora(params)
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(lora, frozen, batch)
+        new_lora, new_opt = adamw_update(
+            grads, opt, lora, lr=lr, weight_decay=weight_decay
+        )
+        return merge_lora(new_lora, frozen), new_opt, {"loss": loss, "acc": acc}
+
+    return step
+
+
 @functools.lru_cache(maxsize=64)
 def make_finetune_step(
     cfg: ModelConfig,
@@ -67,24 +104,89 @@ def make_finetune_step(
 
     step(params, opt, batch{tokens,labels}) -> (params, opt, metrics)
     """
+    return jax.jit(_finetune_step_fn(cfg, num_classes, lr, weight_decay))
 
-    def loss_fn(lora, frozen, batch):
-        params = merge_lora(lora, frozen)
-        logits, aux = forward(params, cfg, {"tokens": batch["tokens"]})
-        cls = class_logits(logits[:, -1, :], num_classes)
-        logp = jax.nn.log_softmax(cls.astype(jnp.float32), axis=-1)
-        nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1).mean()
-        acc = jnp.mean((jnp.argmax(cls, -1) == batch["labels"]).astype(jnp.float32))
-        return nll + 0.01 * aux.moe_aux, acc
 
-    @jax.jit
-    def step(params, opt, batch):
-        lora, frozen = split_lora(params)
+@functools.lru_cache(maxsize=64)
+def make_batched_finetune_step(
+    cfg: ModelConfig,
+    num_classes: int,
+    *,
+    lr: float = 1e-3,
+    weight_decay: float = 1e-3,
+    shared_backbone: bool = True,
+) -> Callable:
+    """One fine-tune update for a whole cohort at once.
+
+    step(lora (C,...), frozen, opt (C,...), batch {tokens (C,B,L), labels (C,B)})
+    -> (lora, opt, metrics (C,))
+
+    Client-axis vmap over the same loss/update core as
+    :func:`make_finetune_step`, so every client's update (including its own
+    grad-clip global norm) is computed exactly as in the sequential path.
+    With ``shared_backbone`` (the paper's setting: one pretrained W' under
+    per-client LoRA deltas) the frozen tree is broadcast (``in_axes=None``)
+    — XLA then fuses the cohort's backbone matmuls into single wide ops
+    instead of C small ones, which is where the batched engine's speedup
+    comes from.  LoRA/opt buffers are donated.
+    """
+
+    loss_fn = _finetune_loss_fn(cfg, num_classes)
+
+    def step(lora, frozen, opt, batch):
         (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(lora, frozen, batch)
         new_lora, new_opt = adamw_update(
             grads, opt, lora, lr=lr, weight_decay=weight_decay
         )
-        return merge_lora(new_lora, frozen), new_opt, {"loss": loss, "acc": acc}
+        return new_lora, new_opt, {"loss": loss, "acc": acc}
+
+    frozen_ax = None if shared_backbone else 0
+    return jax.jit(jax.vmap(step, in_axes=(0, frozen_ax, 0, 0)), donate_argnums=(0, 2))
+
+
+def _distill_loss_fn(
+    cfg: ModelConfig, temperature: float, lam: float, restrict_to_support: bool
+) -> Callable:
+    """loss(lora, frozen, tokens, g_logits, g_h) -> (L_total, parts)."""
+
+    use_h = cfg.lora is not None
+
+    def loss_fn(lora, frozen, tokens, g_logits, g_h):
+        params = merge_lora(lora, frozen)
+        logits, aux = forward(params, cfg, {"tokens": tokens})
+        own = logits[:, -1, :]
+        loss, parts = total_distill_loss(
+            g_logits,
+            own,
+            g_h if use_h else None,
+            aux.lora_h if use_h else None,
+            temperature=temperature,
+            lam=lam,
+            restrict_to_support=restrict_to_support,
+        )
+        return loss + 0.01 * aux.moe_aux, parts
+
+    return loss_fn
+
+
+def _distill_step_fn(
+    cfg: ModelConfig,
+    lr: float,
+    temperature: float,
+    lam: float,
+    restrict_to_support: bool,
+) -> Callable:
+    """Unjitted single-model distillation step over merged params."""
+
+    loss_fn = _distill_loss_fn(cfg, temperature, lam, restrict_to_support)
+
+    def step(params, opt, tokens, g_logits, g_h):
+        lora, frozen = split_lora(params)
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            lora, frozen, tokens, g_logits, g_h
+        )
+        new_lora, new_opt = adamw_update(grads, opt, lora, lr=lr)
+        return merge_lora(new_lora, frozen), new_opt, {"loss": loss, **parts}
 
     return step
 
@@ -104,34 +206,57 @@ def make_distill_step(
     step(params, opt, public_tokens, g_logits, g_h) -> (params, opt, metrics)
     ``g_h`` may be None -> the λ-term drops (the 'Adaptive' baseline).
     """
+    return jax.jit(_distill_step_fn(cfg, lr, temperature, lam, restrict_to_support))
 
-    use_h = cfg.lora is not None
 
-    def loss_fn(lora, frozen, tokens, g_logits, g_h):
-        params = merge_lora(lora, frozen)
-        logits, aux = forward(params, cfg, {"tokens": tokens})
-        own = logits[:, -1, :]
-        loss, parts = total_distill_loss(
-            g_logits,
-            own,
-            g_h if use_h else None,
-            aux.lora_h if use_h else None,
-            temperature=temperature,
-            lam=lam,
-            restrict_to_support=restrict_to_support,
-        )
-        return loss + 0.01 * aux.moe_aux, parts
+@functools.lru_cache(maxsize=64)
+def make_batched_distill_step(
+    cfg: ModelConfig,
+    *,
+    lr: float = 1e-3,
+    temperature: float = 2.0,
+    lam: float = 0.03,
+    restrict_to_support: bool = False,
+    shared_backbone: bool = True,
+) -> Callable:
+    """Cohort distillation against one broadcast teacher.
 
-    @jax.jit
-    def step(params, opt, tokens, g_logits, g_h):
-        lora, frozen = split_lora(params)
+    step(lora (C,...), frozen, opt (C,...), tokens (P,L), g_logits (P,V), g_h)
+    -> (lora, opt, metrics (C,))
+
+    Teacher knowledge AND public tokens are broadcast (in_axes=None) —
+    every client distills against the same {K_g, h_g}, exactly as
+    Algorithm 1 lines 5-7; with ``shared_backbone`` the frozen W' is
+    broadcast too (see :func:`make_batched_finetune_step`).
+    """
+    loss_fn = _distill_loss_fn(cfg, temperature, lam, restrict_to_support)
+
+    def step(lora, frozen, opt, tokens, g_logits, g_h):
         (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             lora, frozen, tokens, g_logits, g_h
         )
         new_lora, new_opt = adamw_update(grads, opt, lora, lr=lr)
-        return merge_lora(new_lora, frozen), new_opt, {"loss": loss, **parts}
+        return new_lora, new_opt, {"loss": loss, **parts}
 
-    return step
+    frozen_ax = None if shared_backbone else 0
+    return jax.jit(
+        jax.vmap(step, in_axes=(0, frozen_ax, 0, None, None, None)),
+        donate_argnums=(0, 2),
+    )
+
+
+@functools.lru_cache(maxsize=64)
+def make_batched_public_logits(cfg: ModelConfig, *, shared_backbone: bool = True) -> Callable:
+    """Cohort public-set inference: (lora (C,...), frozen, tokens (P,L)) ->
+    (logits (C,P,V), h (C,P,r) or None) — Algorithm 1 line 9 for the whole
+    round's selected clients in one compiled call."""
+
+    def one(lora, frozen, tokens):
+        logits, aux = forward(merge_lora(lora, frozen), cfg, {"tokens": tokens})
+        return logits[:, -1, :], aux.lora_h
+
+    frozen_ax = None if shared_backbone else 0
+    return jax.jit(jax.vmap(one, in_axes=(0, frozen_ax, None)))
 
 
 @functools.lru_cache(maxsize=64)

@@ -22,6 +22,8 @@ from repro.fed.rounds import METHODS
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--method", choices=list(METHODS), default="adald")
+    ap.add_argument("--engine", choices=["sequential", "batched"], default="batched",
+                    help="client-phase executor (batched = vmapped cohort)")
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--per-round", type=int, default=4)
@@ -36,6 +38,7 @@ def main(argv=None) -> int:
     ds = make_banking77_like(vocab_size=REDUCED_CLIENT.vocab_size, seq_len=24, seed=args.seed)
     fed = FedConfig(
         method=args.method,
+        engine=args.engine,
         num_clients=args.clients,
         clients_per_round=args.per_round,
         rounds=args.rounds,

@@ -1,0 +1,179 @@
+"""Batched vs sequential round-engine parity + straggler/dropout scenarios.
+
+The keystone of the batched client-execution engine: under the same seed the
+two engines must agree round-for-round — identical per-client adaptive k,
+identical ledger bytes, identical accuracies.  Tiny configs (no backbone
+pretraining) keep this in the fast tier.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LoRAConfig
+from repro.configs.gpt2_paper import REDUCED_CLIENT, REDUCED_SERVER
+from repro.core import ChannelConfig
+from repro.core.channel import BatchedChannelState, ChannelState
+from repro.core.protocol import PayloadSpec
+from repro.data import make_banking77_like
+from repro.fed import BatchedEngine, FedConfig, SequentialEngine, run_federated
+from repro.fed.client import Client
+from repro.fed.server import Server
+
+LORA = LoRAConfig(rank=4, alpha=32.0, dropout=0.0, targets=("q", "v", "head"))
+CLIENT = REDUCED_CLIENT.with_overrides(
+    num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, d_ff=128,
+    vocab_size=256, max_seq_len=32, lora=LORA,
+)
+SERVER = REDUCED_SERVER.with_overrides(
+    num_layers=2, d_model=96, num_heads=2, num_kv_heads=2, d_ff=192,
+    vocab_size=256, max_seq_len=32, lora=LORA,
+)
+# Constrained uplink so the adaptive k actually varies per client/round.
+CHAN = ChannelConfig(bandwidth_hz=2e5, mean_snr_db=2.0)
+
+
+def _dataset():
+    return make_banking77_like(vocab_size=CLIENT.vocab_size, seq_len=12, total=500, seed=0)
+
+
+def _cfg(engine, method="adald", channel=CHAN, rounds=2, **kw):
+    return FedConfig(
+        method=method, engine=engine, num_clients=4, clients_per_round=2,
+        rounds=rounds, public_size=64, public_batch=16, eval_size=64,
+        local_steps=2, distill_steps=1, server_distill_steps=2,
+        pretrain_steps=0, seed=0, channel=channel, **kw,
+    )
+
+
+@pytest.mark.parametrize("method", ["adald", "adaptive", "zeropad", "all_logits"])
+def test_engine_parity(method):
+    """Batched engine == sequential engine under the same seed: per-client k,
+    ledger bytes, and accuracies match in every round."""
+    ds = _dataset()
+    seq = run_federated(CLIENT, SERVER, ds, _cfg("sequential", method))
+    bat = run_federated(CLIENT, SERVER, ds, _cfg("batched", method))
+    assert seq.per_client_k == bat.per_client_k
+    assert seq.mean_k == bat.mean_k
+    for rs, rb in zip(seq.ledger.rounds, bat.ledger.rounds):
+        assert rs.uplink_bytes == rb.uplink_bytes
+        assert rs.downlink_bytes == rb.downlink_bytes
+        assert rs.num_transmitters == rb.num_transmitters
+    np.testing.assert_allclose(seq.server_acc, bat.server_acc, atol=1e-6)
+    np.testing.assert_allclose(seq.client_acc, bat.client_acc, atol=1e-6)
+
+
+@pytest.mark.parametrize("engine", ["sequential", "batched"])
+def test_single_round_completes(engine):
+    """Regression for the old pub_tokens_prev/g_bits forward references: a
+    1-round run (no broadcast ever happens) must complete cleanly."""
+    run = run_federated(CLIENT, SERVER, _dataset(), _cfg(engine, rounds=1))
+    assert len(run.server_acc) == 1
+    assert run.ledger.rounds[0].downlink_bytes == 0
+    assert run.ledger.rounds[0].uplink_bytes > 0
+
+
+@pytest.mark.parametrize("engine", ["sequential", "batched"])
+def test_straggler_dropout(engine):
+    """With min_k=0 + outages, dropped clients transmit zero bytes: each
+    round's uplink equals the payload bytes of the k>0 clients only."""
+    chan = ChannelConfig(bandwidth_hz=2e5, mean_snr_db=2.0, min_k=0, dropout_prob=0.5)
+    run = run_federated(CLIENT, SERVER, _dataset(), _cfg(engine, channel=chan, rounds=3))
+    all_ks = [k for ks in run.per_client_k for k in ks]
+    assert 0 in all_ks, "expected at least one dropped client at p=0.5 over 6 slots"
+    assert any(k > 0 for k in all_ks)
+    for ks, stats in zip(run.per_client_k, run.ledger.rounds):
+        expected = sum(
+            PayloadSpec(num_samples=16, vocab=CLIENT.vocab_size, k=k,
+                        lora_rank=LORA.rank).uplink_bytes
+            for k in ks if k > 0
+        )
+        assert stats.uplink_bytes == expected
+        assert stats.num_transmitters == sum(1 for k in ks if k > 0)
+        assert stats.num_selected == len(ks)
+
+
+def test_dropout_parity():
+    """The two engines agree on which clients drop and on everything else."""
+    chan = ChannelConfig(bandwidth_hz=2e5, mean_snr_db=2.0, min_k=0, dropout_prob=0.5)
+    ds = _dataset()
+    seq = run_federated(CLIENT, SERVER, ds, _cfg("sequential", channel=chan, rounds=3))
+    bat = run_federated(CLIENT, SERVER, ds, _cfg("batched", channel=chan, rounds=3))
+    assert seq.per_client_k == bat.per_client_k
+    np.testing.assert_allclose(seq.server_acc, bat.server_acc, atol=1e-6)
+    np.testing.assert_allclose(seq.client_acc, bat.client_acc, atol=1e-6)
+
+
+@pytest.mark.parametrize("engine", ["sequential", "batched"])
+def test_all_clients_dropped_round(engine):
+    """A round where every selected client is in outage must complete: zero
+    uplink, zero transmitters, no aggregation/distillation that round.
+    Outage (zero capacity) drops the client even at the default min_k=1 —
+    the survival floor only applies to links that can transmit at all."""
+    chan = ChannelConfig(dropout_prob=1.0)
+    run = run_federated(CLIENT, SERVER, _dataset(), _cfg(engine, channel=chan, rounds=2))
+    for stats in run.ledger.rounds:
+        assert stats.uplink_bytes == 0
+        assert stats.num_transmitters == 0
+    assert all(np.isfinite(a) for a in run.server_acc)
+
+
+def _mini_cohort(n=3):
+    ds = _dataset()
+    clients = [
+        Client(i, CLIENT, ds.subset(np.arange(i * 60, (i + 1) * 60)),
+               num_classes=ds.num_classes, seed=i, local_steps=1, distill_steps=1)
+        for i in range(n)
+    ]
+    return ds, clients
+
+
+def test_dropped_client_absent_from_aggregation():
+    """Engine-level: a client in outage is excluded from the dense stack fed
+    to aggregation (not zero-padded in), so 'zeropad' averages over the
+    transmitters only."""
+    ds, clients = _mini_cohort(3)
+    engine = BatchedEngine(
+        clients, CLIENT, num_classes=ds.num_classes,
+        local_steps=1, distill_steps=1, k_min=0,
+    )
+    good = ChannelState(bandwidth_hz=1e6, snr_db=10.0, eta=0.5, deadline_s=1.0)
+    out = ChannelState(bandwidth_hz=1e6, snr_db=-float("inf"), eta=0.5, deadline_s=1.0)
+    states = BatchedChannelState.from_states([good, out, good])
+    pub = jnp.asarray(ds.tokens[:16])
+    phase = engine.run_round([0, 1, 2], pub, None, states, adaptive_k=True, send_h=True)
+    assert phase.ks[1] == 0 and phase.ks[0] > 0 and phase.ks[2] > 0
+    assert phase.dense.shape[0] == 2  # only the two transmitters
+    assert phase.h.shape[0] == 2
+    assert [p.client_id for p in phase.payloads] == [0, 2]
+
+    server = Server(SERVER, aggregation="zeropad", distill_steps=1)
+    k_g, _ = server.aggregate_dense(phase.dense, phase.h)
+    np.testing.assert_allclose(
+        np.asarray(k_g), np.asarray(jnp.mean(phase.dense, axis=0)), rtol=1e-6
+    )
+
+
+def test_engines_preserve_client_state():
+    """After a batched round, each client's params advance exactly as the
+    sequential engine's would (the engine is the source of truth; read back
+    through client_params)."""
+    ds, c_seq = _mini_cohort(2)
+    _, c_bat = _mini_cohort(2)
+    states = BatchedChannelState.from_states([
+        ChannelState(1e6, 10.0, 0.5, 1.0), ChannelState(1e6, 0.0, 0.5, 1.0),
+    ])
+    pub = jnp.asarray(ds.tokens[:16])
+    seq = SequentialEngine(c_seq, CLIENT)
+    bat = BatchedEngine(c_bat, CLIENT, num_classes=ds.num_classes,
+                        local_steps=1, distill_steps=1)
+    ps = seq.run_round([0, 1], pub, None, states, adaptive_k=True, send_h=True)
+    pb = bat.run_round([0, 1], pub, None, states, adaptive_k=True, send_h=True)
+    assert ps.ks == pb.ks
+    np.testing.assert_allclose(np.asarray(ps.dense), np.asarray(pb.dense), atol=1e-6)
+    import jax
+
+    for i in range(2):
+        for x, y in zip(jax.tree.leaves(seq.client_params(i)),
+                        jax.tree.leaves(bat.client_params(i))):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)

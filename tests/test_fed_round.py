@@ -1,4 +1,8 @@
-"""Integration: complete federated rounds for every method preset."""
+"""Integration: complete federated rounds for every method preset.
+
+Slow tier: full run_federated calls with backbone pretraining.  The fast
+tier covers the same round machinery on tiny configs in test_engine.py.
+"""
 
 import jax.numpy as jnp
 import numpy as np
@@ -9,6 +13,8 @@ from repro.core.channel import ChannelConfig
 from repro.data import make_banking77_like
 from repro.fed import FedConfig, run_federated
 from repro.fed.rounds import METHODS
+
+pytestmark = pytest.mark.slow
 
 CLIENT = REDUCED_CLIENT.with_overrides(num_layers=2, d_model=128, num_heads=4, d_ff=256)
 SERVER = REDUCED_SERVER.with_overrides(
@@ -21,7 +27,7 @@ def _run(method, rounds=2, **kw):
     fed = FedConfig(
         method=method, num_clients=4, clients_per_round=2, rounds=rounds,
         public_size=128, public_batch=32, eval_size=128, local_steps=1,
-        distill_steps=1, seed=0, **kw,
+        distill_steps=1, seed=0, pretrain_steps=24, server_pretrain_steps=16, **kw,
     )
     return run_federated(CLIENT, SERVER, ds, fed)
 

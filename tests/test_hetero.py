@@ -14,6 +14,8 @@ from repro.data import make_fed_benchmark_dataset, split_public_private
 from repro.fed.client import Client
 from repro.fed.server import Server
 
+pytestmark = pytest.mark.slow
+
 VOCAB = 512
 LORA = LoRAConfig(rank=8, targets=("q", "v", "head"))
 

@@ -1,0 +1,108 @@
+"""Edge-case parity: Pallas top-k kernel vs jnp oracle, sparse vs dense
+aggregation, and the batched per-client top-k used by the round engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import aggregate, aggregate_sparse
+from repro.core.topk import densify, topk_mask_batch, topk_sparsify
+from repro.kernels import ref
+from repro.kernels.topk_select import topk_mask_pallas
+
+
+class TestTopkKernelEdges:
+    """topk_mask_pallas(interpret=True) vs kernels/ref.py on the cases the
+    bisection is most likely to get wrong."""
+
+    def test_ties_at_threshold(self):
+        # four-way tie exactly at the k-th value: threshold semantics keeps
+        # every tied entry, in kernel and oracle alike
+        x = jnp.array([[5.0, 3.0, 3.0, 3.0, 3.0, 1.0, 0.0, -1.0]])
+        for k in (2, 3, 4):
+            got = topk_mask_pallas(x, k, interpret=True)
+            want = ref.topk_mask_ref(x, k)
+            np.testing.assert_allclose(got, want, atol=0)
+            assert int(jnp.sum(got != 0)) == 5  # 5.0 + the four tied 3.0s
+
+    def test_k_equals_one(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 333))
+        got = topk_mask_pallas(x, 1, interpret=True)
+        want = ref.topk_mask_ref(x, 1)
+        np.testing.assert_allclose(got, want, atol=0)
+        assert int(jnp.sum(got != 0)) == 4
+
+    def test_k_equals_vocab(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (3, 64))
+        got = topk_mask_pallas(x, 64, interpret=True)
+        np.testing.assert_allclose(got, x, atol=0)
+        # k > vocab clamps
+        got = topk_mask_pallas(x, 1000, interpret=True)
+        np.testing.assert_allclose(got, x, atol=0)
+
+    def test_all_negative_logits(self):
+        # masked-out entries become 0 which is LARGER than every kept value;
+        # the kernel must still threshold on the k-th value, not on zero
+        x = -jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (5, 200))) - 1.0
+        for k in (1, 7, 200):
+            got = topk_mask_pallas(x, k, interpret=True)
+            want = ref.topk_mask_ref(x, k)
+            np.testing.assert_allclose(got, want, atol=0)
+            if k < 200:
+                assert int(jnp.sum(got != 0)) == 5 * k
+
+    def test_mixed_sign_and_constant_rows(self):
+        const = jnp.full((2, 32), 3.5)
+        got = topk_mask_pallas(const, 4, interpret=True)
+        want = ref.topk_mask_ref(const, 4)
+        np.testing.assert_allclose(got, want, atol=0)
+        assert int(jnp.sum(got != 0)) == 2 * 32  # all tied -> all kept
+
+
+class TestSparseVsDenseAggregation:
+    """aggregate_sparse on raw (values, indices) payloads must equal the
+    densify-then-aggregate path for every mode."""
+
+    @pytest.mark.parametrize("mode", ["adaptive", "zeropad", "mean_nonzero"])
+    @pytest.mark.parametrize("n,rows,vocab,k", [(3, 4, 96, 9), (5, 2, 128, 17), (2, 1, 64, 1)])
+    def test_random_payloads(self, mode, n, rows, vocab, k):
+        key = jax.random.PRNGKey(n * rows + vocab)
+        logits = jax.random.normal(key, (n, rows, vocab)) * 3.0  # mixed sign
+        sparse = topk_sparsify(logits, k)
+        dense_out = aggregate(densify(sparse), mode)
+        sparse_out = aggregate_sparse(sparse.values, sparse.indices, vocab, mode)
+        np.testing.assert_allclose(dense_out, sparse_out, rtol=1e-4, atol=1e-6)
+
+    @pytest.mark.parametrize("mode", ["adaptive", "zeropad", "mean_nonzero"])
+    def test_full_k(self, mode):
+        logits = jax.random.normal(jax.random.PRNGKey(9), (4, 3, 50))
+        sparse = topk_sparsify(logits, 50)
+        np.testing.assert_allclose(
+            aggregate(densify(sparse), mode),
+            aggregate_sparse(sparse.values, sparse.indices, 50, mode),
+            rtol=1e-4, atol=1e-6,
+        )
+
+
+class TestTopkMaskBatch:
+    """The batched engine's per-client top-k must equal the stacked
+    per-client reference bit-for-bit."""
+
+    def test_matches_per_client_path(self):
+        logits = jax.random.normal(jax.random.PRNGKey(3), (4, 5, 128))
+        ks = [1, 17, 128, 64]
+        got = topk_mask_batch(logits, ks)
+        want = jnp.stack([densify(topk_sparsify(logits[i], k)) for i, k in enumerate(ks)])
+        np.testing.assert_allclose(got, want, atol=0)
+
+    def test_zero_budget_row_is_empty(self):
+        logits = jax.random.normal(jax.random.PRNGKey(4), (3, 2, 32)) + 5.0
+        got = topk_mask_batch(logits, [4, 0, 2])
+        assert int(jnp.sum(got[1] != 0)) == 0
+        assert int(jnp.sum(got[0] != 0)) == 2 * 4
+        assert int(jnp.sum(got[2] != 0)) == 2 * 2
+
+    def test_rejects_mismatched_budgets(self):
+        with pytest.raises(ValueError):
+            topk_mask_batch(jnp.zeros((2, 3, 8)), [1])

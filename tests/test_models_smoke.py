@@ -14,6 +14,8 @@ from repro.models import decode_step, forward, init, init_cache
 from repro.models.frontends import synth_frontend_embeddings
 from repro.optim import adamw_init
 
+pytestmark = pytest.mark.slow  # model-zoo/layer suites ride the slow tier
+
 ALL_ARCHS = list(ARCHITECTURES)
 
 

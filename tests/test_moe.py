@@ -7,6 +7,8 @@ import pytest
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.models.moe import moe_apply, moe_init
 
+pytestmark = pytest.mark.slow  # model-zoo/layer suites ride the slow tier
+
 
 def _cfg(experts=4, top_k=2, cf=1.25):
     return ModelConfig(

@@ -3,6 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.configs.gpt2_paper import REDUCED_CLIENT
 from repro.data import make_fed_benchmark_dataset

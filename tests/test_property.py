@@ -1,4 +1,12 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+Skipped cleanly (not a collection error) when hypothesis isn't installed —
+it is a dev-only dependency (see requirements-dev.txt).
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
 
 import jax
 import jax.numpy as jnp

@@ -7,6 +7,8 @@ import pytest
 
 from repro.models.ssm import _segsum, _ssd_chunked
 
+pytestmark = pytest.mark.slow  # model-zoo/layer suites ride the slow tier
+
 
 def naive_ssd(x, a, b_mat, c_mat, init_state=None):
     """Direct recurrence: state_t = exp(a_t)*state_{t-1} + B_t (x) x_t."""

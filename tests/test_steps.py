@@ -12,6 +12,8 @@ from repro.models import backbone, init
 from repro.models.model import _lm_logits
 from repro.optim import adamw_init
 
+pytestmark = pytest.mark.slow  # model-zoo/layer suites ride the slow tier
+
 
 def test_chunked_ce_equals_naive():
     cfg = get_smoke_config("yi-9b")

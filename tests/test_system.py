@@ -12,6 +12,8 @@ import pytest
 from repro.configs.gpt2_paper import REDUCED_CLIENT, REDUCED_SERVER
 from repro.fed import FedConfig, run_federated
 
+pytestmark = pytest.mark.slow
+
 CLIENT = REDUCED_CLIENT.with_overrides(num_layers=2, d_model=128, num_heads=4, d_ff=512)
 SERVER = REDUCED_SERVER.with_overrides(
     num_layers=3, d_model=192, num_heads=4, num_kv_heads=4, d_ff=768
