@@ -9,8 +9,11 @@ optimisation steps end-to-end.
 Run:  PYTHONPATH=src python examples/fed_finetune.py [rounds] [engine]
 
 ``engine`` is ``batched`` (default: the whole selected cohort advances as
-single vmapped/jitted steps) or ``sequential`` (the bit-compatible
-one-client-at-a-time reference) — see FedConfig.engine.
+single vmapped/jitted per-phase steps), ``fused`` (the entire client phase
+— distill, fine-tune, public inference, adaptive top-k — as ONE donated
+jitted call per round) or ``sequential`` (the bit-compatible
+one-client-at-a-time reference) — see FedConfig.engine.  All engines use
+the last-position-only LM head (FedConfig.last_only).
 """
 
 import os

@@ -26,10 +26,12 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
+    "BISECTION_ITERS",
     "SparseLogits",
     "topk_sparsify",
     "topk_mask_dense",
     "topk_mask_batch",
+    "topk_mask_dynamic",
     "densify",
     "sparsify_batch",
     "payload_entries",
@@ -125,6 +127,48 @@ def topk_mask_batch(logits: jax.Array, ks: Sequence[int]) -> jax.Array:
     values = jnp.where(mask, values, jnp.zeros_like(values))
     dense = jnp.zeros(logits.shape, dtype=logits.dtype)
     return _scatter_last(dense, indices.astype(jnp.int32), values)
+
+
+# Threshold-bisection iteration count, shared with the Pallas kernel
+# (repro.kernels.topk_select imports it): the jnp and kernel sparsifiers
+# must converge identically or their documented exact-parity contract
+# (test_fused_use_kernels_matches_jnp_sparsifier) silently breaks.
+BISECTION_ITERS = 30
+
+
+def topk_mask_dynamic(logits: jax.Array, k: jax.Array) -> jax.Array:
+    """Dense top-k mask with a TRACED budget ``k`` (int32, broadcastable to
+    ``logits.shape[:-1]`` — a scalar, or one budget per leading row).
+
+    The fused round engine bakes the whole client phase into one compiled
+    step, so the per-round adaptive ``k`` must be *data*, not a static shape
+    — recompiling per distinct ``k`` would defeat the single-jit design.
+    Implemented as the same vectorized threshold bisection as the Pallas
+    kernel (~30 whole-row passes; an ``jnp.sort`` formulation is ~18x slower
+    on XLA CPU): keeps every entry >= the k-th largest per row (threshold
+    semantics — exact ties at the threshold are all kept, matching
+    :func:`repro.kernels.ref.topk_mask_ref`); ``k == 0`` zeroes the row
+    entirely (a dropped straggler transmits nothing).  For distinct values
+    this equals ``topk_mask_dense(logits, k)`` exactly.
+    """
+    vocab = logits.shape[-1]
+    x = logits.astype(jnp.float32)
+    kk = jnp.broadcast_to(
+        jnp.clip(jnp.asarray(k, jnp.int32), 0, vocab), x.shape[:-1]
+    )
+    lo = jnp.min(x, axis=-1)
+    hi = jnp.max(x, axis=-1) + 1.0
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((x >= mid[..., None]).astype(jnp.int32), axis=-1)
+        take = cnt >= kk  # mid keeps enough -> move lo up
+        return jnp.where(take, mid, lo), jnp.where(take, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, BISECTION_ITERS, body, (lo, hi))
+    keep = (x >= lo[..., None]) & (kk > 0)[..., None]
+    return jnp.where(keep, logits, jnp.zeros_like(logits))
 
 
 def sparsify_batch(logits: jax.Array, k: int) -> SparseLogits:

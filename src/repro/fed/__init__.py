@@ -3,6 +3,7 @@ from repro.fed.engine import (
     BatchedEngine,
     BroadcastState,
     ClientPhase,
+    FusedEngine,
     SequentialEngine,
     make_engine,
 )
@@ -18,6 +19,7 @@ __all__ = [
     "FedRun",
     "run_federated",
     "BatchedEngine",
+    "FusedEngine",
     "SequentialEngine",
     "BroadcastState",
     "ClientPhase",

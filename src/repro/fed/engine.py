@@ -14,14 +14,25 @@ cohort.  Two interchangeable engines execute that phase:
   axis is the handle accelerator backends parallelise over (vmap →
   pmap/shard_map), which is what stops wall-clock scaling linearly with
   ``clients_per_round`` at the paper's cohort sizes.
+* :class:`FusedEngine` — collapses the batched engine's per-phase calls
+  into ONE donated, jitted round body (distill → fine-tune → public
+  last-position inference → adaptive Top-k with the budget as data): host
+  dispatches per round drop to O(1), and the client axis can optionally be
+  placed over devices with ``jax.experimental.shard_map``
+  (``shard_clients=True``; testable on CPU via
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
 
-Both engines are driven by :func:`repro.fed.rounds.run_federated` and are
-bit-compatible under the same seed: batches are drawn through the same
-per-client RNG streams, per-client adaptive ``k`` is resolved by the same
-scalar budget math, and the batched Top-k densification is exactly the
-stack of the per-client sparsifications (see ``topk_mask_batch``).
+All engines are driven by :func:`repro.fed.rounds.run_federated`.
+Sequential and batched are bit-compatible under the same seed; the fused
+engine is tolerance-compatible: identical per-client adaptive ``k`` and
+ledger bytes (the budget math is the same host-side scalar code), while
+accuracies/logits may drift by float round-off because XLA fuses the whole
+round into one program (different op scheduling) and the uplink
+sparsifier uses threshold semantics (exact ties at the k-th value are all
+kept — measure-zero for real logits).  Batches are drawn through the same
+per-client RNG streams in every engine.
 
-Straggler semantics (both engines): a client whose channel state yields
+Straggler semantics (all engines): a client whose channel state yields
 ``k == 0`` transmits nothing — it contributes zero uplink bytes and is
 excluded from the aggregation stack entirely rather than zero-padded in.
 """
@@ -48,6 +59,7 @@ __all__ = [
     "ClientPhase",
     "SequentialEngine",
     "BatchedEngine",
+    "FusedEngine",
     "make_engine",
     "tree_stack",
 ]
@@ -207,6 +219,7 @@ class BatchedEngine:
         restrict_to_support: bool = False,
         value_bits: int = 16,
         k_min: int = 1,
+        last_only: bool = True,
     ):
         self.clients = clients
         self.cfg = cfg
@@ -214,6 +227,7 @@ class BatchedEngine:
         self.distill_steps = distill_steps
         self.value_bits = value_bits
         self.k_min = k_min
+        self.last_only = last_only
 
         loras, frozens = zip(*(split_lora(c.params) for c in clients))
         self._shared = shared_frozen_backbone(frozens)
@@ -221,14 +235,15 @@ class BatchedEngine:
         self._frozen = frozens[0] if self._shared else tree_stack(frozens)
         self._opt = tree_stack([c.opt for c in clients])
         self._train = fed_steps.make_batched_finetune_step(
-            cfg, num_classes, lr=lr, shared_backbone=self._shared
+            cfg, num_classes, lr=lr, shared_backbone=self._shared, last_only=last_only
         )
         self._distill = fed_steps.make_batched_distill_step(
             cfg, lr=distill_lr, temperature=temperature, lam=lam,
             restrict_to_support=restrict_to_support, shared_backbone=self._shared,
+            last_only=last_only,
         )
         self._public = fed_steps.make_batched_public_logits(
-            cfg, shared_backbone=self._shared
+            cfg, shared_backbone=self._shared, last_only=last_only
         )
 
     def client_params(self, cid: int):
@@ -239,6 +254,73 @@ class BatchedEngine:
             else jax.tree.map(lambda x: x[cid], self._frozen)
         )
         return merge_lora(lora_i, frozen_i)
+
+    # -- round plumbing shared by the batched and fused engines ----------
+    def _gather_cohort(self, sel: Sequence[int]):
+        """One gather per leaf: the selected cohort's (lora, frozen, opt)."""
+        idx = jnp.asarray(list(sel))
+        lora = jax.tree.map(lambda x: x[idx], self._lora)
+        opt = jax.tree.map(lambda x: x[idx], self._opt)
+        frozen = (
+            self._frozen if self._shared
+            else jax.tree.map(lambda x: x[idx], self._frozen)
+        )
+        return idx, lora, frozen, opt
+
+    def _scatter_cohort(self, idx, lora, opt) -> None:
+        """Write the advanced cohort rows back into the fleet state."""
+        self._lora = jax.tree.map(
+            lambda full, new: full.at[idx].set(new), self._lora, lora
+        )
+        self._opt = jax.tree.map(
+            lambda full, new: full.at[idx].set(new), self._opt, opt
+        )
+
+    def _budgets(self, states, n_samples: int, adaptive_k: bool, n_cohort: int):
+        """Per-client adaptive k — the same host-side scalar math as the
+        sequential reference, so k (and bytes) can never drift."""
+        if not adaptive_k:
+            return [self.cfg.vocab_size] * n_cohort
+        return topk_budget_batch(
+            states, vocab_size=self.cfg.vocab_size, num_samples=n_samples,
+            value_bits=self.value_bits, k_min=self.k_min,
+        )
+
+    def _upload_manifests(self, cohort, states, ks, n_samples: int, send_h: bool):
+        """(active indices, payload manifests, lora rank) for the k > 0
+        transmitters — dropped stragglers contribute nothing."""
+        active = [i for i, k in enumerate(ks) if k > 0]
+        payloads: list[UplinkPayload] = []
+        rank = None
+        for i in active:
+            payload, rank = make_upload_payload(
+                self.cfg, cohort[i].client_id, n_samples, ks[i],
+                send_h=send_h, value_bits=self.value_bits,
+                snr_db=states[i].snr_db,
+            )
+            payloads.append(payload)
+        return active, payloads, rank
+
+    def _stacked_batches(self, cohort, *, step_major: bool):
+        """Each client's next ``local_steps`` private batches, drawn through
+        its OWN rng stream (identical to the sequential path).  Returns a
+        list of step-major dicts (one per step) or one client-major dict
+        with a (C, S, ...) leading layout."""
+        per_client = [c.next_train_batches(self.local_steps) for c in cohort]
+        keys = per_client[0][0].keys()
+        if step_major:
+            return [
+                {key: jnp.asarray(np.stack([b[s][key] for b in per_client]))
+                 for key in keys}
+                for s in range(self.local_steps)
+            ]
+        return {
+            key: jnp.asarray(
+                np.stack([np.stack([b[s][key] for s in range(self.local_steps)])
+                          for b in per_client])
+            )
+            for key in keys
+        }
 
     def run_round(
         self,
@@ -252,15 +334,7 @@ class BatchedEngine:
     ) -> ClientPhase:
         cohort = [self.clients[i] for i in sel]
         states = list(states)
-
-        # -- gather the cohort's rows: one gather per leaf --
-        idx = jnp.asarray(list(sel))
-        lora = jax.tree.map(lambda x: x[idx], self._lora)
-        opt = jax.tree.map(lambda x: x[idx], self._opt)
-        frozen = (
-            self._frozen if self._shared
-            else jax.tree.map(lambda x: x[idx], self._frozen)
-        )
+        idx, lora, frozen, opt = self._gather_cohort(sel)
 
         # -- lines 5-7: cohort distillation against the shared broadcast --
         if bcast is not None:
@@ -270,54 +344,157 @@ class BatchedEngine:
                 )
 
         # -- line 8: local fine-tuning, one vmapped update per step --
-        # Each client draws from its OWN rng stream (identical to the
-        # sequential path); the per-step batches are stacked client-major.
-        per_client = [c.next_train_batches(self.local_steps) for c in cohort]
-        for s in range(self.local_steps):
-            jb = {
-                key: jnp.asarray(np.stack([b[s][key] for b in per_client]))
-                for key in per_client[0][s]
-            }
+        for jb in self._stacked_batches(cohort, step_major=True):
             lora, opt, _ = self._train(lora, frozen, opt, jb)
 
         # -- lines 9-11: public inference + per-client adaptive top-k --
-        vocab = self.cfg.vocab_size
         n_samples = int(pub_tokens.shape[0])
-        if adaptive_k:
-            ks = topk_budget_batch(
-                states, vocab_size=vocab, num_samples=n_samples,
-                value_bits=self.value_bits, k_min=self.k_min,
-            )
-        else:
-            ks = [vocab] * len(cohort)
+        ks = self._budgets(states, n_samples, adaptive_k, len(cohort))
 
         logits, h = self._public(lora, frozen, pub_tokens)  # (C, P, V), (C, P, r)|None
 
-        active = [i for i, k in enumerate(ks) if k > 0]
+        active, payloads, rank = self._upload_manifests(
+            cohort, states, ks, n_samples, send_h
+        )
         dense = h_out = None
-        payloads: list[UplinkPayload] = []
         if active:
             take = jnp.asarray(active) if len(active) < len(cohort) else None
             act_logits = logits if take is None else logits[take]
             dense = topk_mask_batch(act_logits, [ks[i] for i in active])
-            rank = None
-            for i in active:
-                payload, rank = make_upload_payload(
-                    self.cfg, cohort[i].client_id, n_samples, ks[i],
-                    send_h=send_h, value_bits=self.value_bits,
-                    snr_db=states[i].snr_db,
-                )
-                payloads.append(payload)
             if rank is not None and h is not None:
                 h_out = h if take is None else h[take]
 
-        # -- scatter the advanced cohort rows back into the fleet state --
-        self._lora = jax.tree.map(
-            lambda full, new: full.at[idx].set(new), self._lora, lora
+        self._scatter_cohort(idx, lora, opt)
+        return ClientPhase(dense=dense, h=h_out, payloads=payloads, ks=ks)
+
+
+class FusedEngine(BatchedEngine):
+    """Single-jit round-body executor: the batched engine's per-phase calls
+    (distill steps, fine-tune steps, public inference, top-k) collapse into
+    ONE donated, compiled step per round (`fed_steps.make_fused_round_fn`).
+
+    Per-client adaptive ``k`` enters the program as DATA (int32 per client),
+    so one executable serves every round regardless of the channel
+    realisation; the uplink sparsifier is the threshold-semantics bisection
+    (ties at the k-th value are kept) — pure-jnp ``topk_mask_dynamic`` by
+    default, or the per-row-budget Pallas kernel with ``use_kernels=True``.
+    Byte accounting still uses the exact host-side ``k``s, so the ledger is
+    identical to the other engines.
+
+    ``shard_clients=True`` additionally places the leading client axis over
+    the process's devices with ``shard_map`` (cohort size must divide the
+    device count); on CPU this is testable via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+
+    name = "fused"
+
+    def __init__(
+        self,
+        clients: list[Client],
+        cfg: ModelConfig,
+        *,
+        num_classes: int,
+        lr: float = 1e-3,
+        distill_lr: float = 1e-3,
+        temperature: float = 2.0,
+        lam: float = 0.03,
+        local_steps: int = 4,
+        distill_steps: int = 2,
+        restrict_to_support: bool = False,
+        value_bits: int = 16,
+        k_min: int = 1,
+        last_only: bool = True,
+        shard_clients: bool = False,
+        use_kernels: bool = False,
+    ):
+        super().__init__(
+            clients, cfg, num_classes=num_classes, lr=lr, distill_lr=distill_lr,
+            temperature=temperature, lam=lam, local_steps=local_steps,
+            distill_steps=distill_steps, restrict_to_support=restrict_to_support,
+            value_bits=value_bits, k_min=k_min, last_only=last_only,
         )
-        self._opt = jax.tree.map(
-            lambda full, new: full.at[idx].set(new), self._opt, opt
+        self.shard_clients = shard_clients
+
+        def fused(n_distill: int):
+            fn = fed_steps.make_fused_round_fn(
+                cfg, num_classes, lr=lr, distill_lr=distill_lr,
+                temperature=temperature, lam=lam,
+                restrict_to_support=restrict_to_support,
+                local_steps=local_steps, distill_steps=n_distill,
+                shared_backbone=self._shared, last_only=last_only,
+                use_kernels=use_kernels,
+            )
+            if shard_clients:
+                fn = self._shard_over_clients(fn)
+            return jax.jit(fn, donate_argnums=(0, 2))
+
+        self._fused_warm = fused(distill_steps)
+        self._fused_cold = fused(0)  # round 0: no broadcast knowledge yet
+
+    def _shard_over_clients(self, fn):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        devs = jax.devices()
+        mesh = Mesh(np.array(devs), ("clients",))
+        c, r = P("clients"), P()
+        frozen_spec = r if self._shared else c
+        return shard_map(
+            fn,
+            mesh=mesh,
+            in_specs=(c, frozen_spec, c, r, r, r, c, r, c),
+            out_specs=(c, c, c, c),
+            check_rep=False,
         )
+
+    def run_round(
+        self,
+        sel: Sequence[int],
+        pub_tokens: jax.Array,
+        bcast: BroadcastState | None,
+        states: BatchedChannelState | Sequence[ChannelState],
+        *,
+        adaptive_k: bool,
+        send_h: bool,
+    ) -> ClientPhase:
+        cohort = [self.clients[i] for i in sel]
+        states = list(states)
+        if self.shard_clients and len(cohort) % jax.device_count() != 0:
+            raise ValueError(
+                f"shard_clients: cohort size {len(cohort)} must divide evenly "
+                f"over {jax.device_count()} devices"
+            )
+
+        idx, lora, frozen, opt = self._gather_cohort(sel)
+        batches = self._stacked_batches(cohort, step_major=False)  # (C, S, ...)
+        n_samples = int(pub_tokens.shape[0])
+        ks = self._budgets(states, n_samples, adaptive_k, len(cohort))
+
+        # -- the whole client phase: ONE compiled, donated call --
+        if bcast is not None:
+            step = self._fused_warm
+            g_tokens, g_logits, g_h = bcast.tokens, bcast.logits, bcast.h
+        else:
+            step = self._fused_cold  # g_* operands are unused and DCE'd
+            g_tokens, g_logits, g_h = pub_tokens, jnp.zeros(
+                (n_samples, self.cfg.vocab_size), jnp.float32), None
+        lora, opt, dense_all, h_all = step(
+            lora, frozen, opt, g_tokens, g_logits, g_h, batches, pub_tokens,
+            jnp.asarray(ks, jnp.int32),
+        )
+
+        active, payloads, rank = self._upload_manifests(
+            cohort, states, ks, n_samples, send_h
+        )
+        dense = h_out = None
+        if active:
+            take = jnp.asarray(active) if len(active) < len(cohort) else None
+            dense = dense_all if take is None else dense_all[take]
+            if rank is not None and h_all is not None:
+                h_out = h_all if take is None else h_all[take]
+
+        self._scatter_cohort(idx, lora, opt)
         return ClientPhase(dense=dense, h=h_out, payloads=payloads, ks=ks)
 
 
@@ -328,5 +505,11 @@ def make_engine(kind: str, clients: list[Client], cfg: ModelConfig, **kwargs):
             value_bits=kwargs.get("value_bits", 16), k_min=kwargs.get("k_min", 1),
         )
     if kind == "batched":
+        kwargs.pop("shard_clients", None)
+        kwargs.pop("use_kernels", None)
         return BatchedEngine(clients, cfg, **kwargs)
-    raise ValueError(f"unknown engine: {kind!r} (expected 'sequential' or 'batched')")
+    if kind == "fused":
+        return FusedEngine(clients, cfg, **kwargs)
+    raise ValueError(
+        f"unknown engine: {kind!r} (expected 'sequential', 'batched' or 'fused')"
+    )

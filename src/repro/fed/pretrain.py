@@ -32,10 +32,12 @@ __all__ = ["pretrain_classifier"]
 _CACHE: dict = {}
 
 
-def _supervised_step(cfg: ModelConfig, num_classes: int, lr: float):
+def _supervised_step(cfg: ModelConfig, num_classes: int, lr: float, last_only: bool):
     def loss_fn(params, batch):
-        logits, aux = forward(params, cfg, {"tokens": batch["tokens"]})
-        cls = fed_steps.class_logits(logits[:, -1, :], num_classes)
+        # last_only head: classification reads the final position exclusively
+        logits, aux = forward(params, cfg, {"tokens": batch["tokens"]}, last_only=last_only)
+        last = logits if last_only else logits[:, -1, :]
+        cls = fed_steps.class_logits(last, num_classes)
         logp = jax.nn.log_softmax(cls.astype(jnp.float32), axis=-1)
         nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1).mean()
         acc = jnp.mean((jnp.argmax(cls, -1) == batch["labels"]).astype(jnp.float32))
@@ -59,17 +61,19 @@ def pretrain_classifier(
     lr: float = 2e-3,
     batch_size: int = 64,
     seed: int = 0,
+    last_only: bool = True,
     verbose: bool = False,
 ):
     """Full-parameter supervised pretraining; returns params with fresh
     (zero-delta) LoRA adapters on top — the shared W' + θ_0 of eq. 1."""
-    key = (cfg.name, cfg.num_layers, cfg.d_model, steps, lr, seed, len(pretrain_data))
+    key = (cfg.name, cfg.num_layers, cfg.d_model, steps, lr, seed, len(pretrain_data),
+           num_classes, batch_size, last_only)
     if key in _CACHE:
         return jax.tree.map(lambda x: x, _CACHE[key])  # shallow copy semantics
 
     params = model_init(jax.random.PRNGKey(seed), cfg)
     opt = adamw_init(params, state_dtype=cfg.optimizer_state_dtype)
-    step = _supervised_step(cfg, num_classes, lr)
+    step = _supervised_step(cfg, num_classes, lr, last_only)
     rng = np.random.default_rng(seed)
     done = 0
     metrics = {}

@@ -36,7 +36,7 @@ from repro.fed.steps import make_eval_fn
 __all__ = ["FedConfig", "FedRun", "run_federated", "METHODS"]
 
 Method = Literal["adald", "adaptive", "zeropad", "all_logits"]
-Engine = Literal["sequential", "batched"]
+Engine = Literal["sequential", "batched", "fused"]
 
 METHODS: dict[str, dict] = {
     "adald": dict(aggregation="adaptive", send_h=True, adaptive_k=True),
@@ -53,8 +53,16 @@ class FedConfig:
     method: Method = "adald"
     # Client-phase executor: "batched" stacks the selected cohort along a
     # leading client axis and runs each phase as one vmapped/jitted step;
-    # "sequential" is the bit-compatible one-client-at-a-time reference.
+    # "fused" additionally collapses every phase into ONE jitted round body
+    # (adaptive k as data); "sequential" is the bit-compatible
+    # one-client-at-a-time reference.
     engine: Engine = "batched"
+    # Compute the LM head (class/public/distill logits) on the LAST position
+    # only — the task reads nothing else; cuts head FLOPs ~seq_len×.  False
+    # restores the seed behaviour of materialising (B, T, V).
+    last_only: bool = True
+    # Fused engine only: place the client axis over jax devices (shard_map).
+    shard_clients: bool = False
     num_clients: int = 50
     clients_per_round: int = 10
     rounds: int = 20
@@ -127,13 +135,13 @@ def run_federated(
         client_init = pretrain_classifier(
             client_cfg, pretrain_ds, num_classes=dataset.num_classes,
             steps=fed.pretrain_steps, lr=fed.pretrain_lr, seed=fed.seed,
-            verbose=verbose,
+            last_only=fed.last_only, verbose=verbose,
         )
         if fed.server_pretrain == "supervised":
             server_init = pretrain_classifier(
                 server_cfg, pretrain_ds, num_classes=dataset.num_classes,
                 steps=fed.server_pretrain_steps, lr=fed.pretrain_lr,
-                seed=fed.seed + 999, verbose=verbose,
+                seed=fed.seed + 999, last_only=fed.last_only, verbose=verbose,
             )
         elif fed.server_pretrain == "lm":
             server_init = pretrain_lm(
@@ -163,6 +171,7 @@ def run_federated(
             local_steps=fed.local_steps,
             distill_steps=fed.distill_steps,
             restrict_to_support=fed.restrict_to_support,
+            last_only=fed.last_only,
             initial_params=client_init,
         )
         for i in range(fed.num_clients)
@@ -177,6 +186,7 @@ def run_federated(
         distill_steps=fed.server_distill_steps,
         use_kernels=fed.use_kernels,
         restrict_to_support=fed.restrict_to_support,
+        last_only=fed.last_only,
         initial_params=server_init,
     )
     chan_sim = ChannelSimulator(fed.num_clients, fed.channel, seed=fed.seed)
@@ -185,8 +195,8 @@ def run_federated(
     # data only in expectation at reduced scale; standard FedD evaluation)
     eval_idx = rng.permutation(len(private))[: fed.eval_size]
     eval_tokens, eval_labels = private.tokens[eval_idx], private.labels[eval_idx]
-    evaluate = make_eval_fn(server_cfg, dataset.num_classes)
-    evaluate_client = make_eval_fn(client_cfg, dataset.num_classes)
+    evaluate = make_eval_fn(server_cfg, dataset.num_classes, last_only=fed.last_only)
+    evaluate_client = make_eval_fn(client_cfg, dataset.num_classes, last_only=fed.last_only)
 
     engine = make_engine(
         fed.engine,
@@ -202,6 +212,9 @@ def run_federated(
         restrict_to_support=fed.restrict_to_support,
         value_bits=fed.channel.value_bits,
         k_min=fed.channel.min_k,
+        last_only=fed.last_only,
+        shard_clients=fed.shard_clients,
+        use_kernels=fed.use_kernels,
     )
 
     ledger = CommLedger()

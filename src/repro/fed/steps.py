@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.distill import total_distill_loss
+from repro.core.topk import topk_mask_dynamic
 from repro.lora import merge_lora, split_lora
 from repro.models import forward
 from repro.optim import AdamWState, adamw_init, adamw_update
@@ -27,11 +28,13 @@ from repro.optim import AdamWState, adamw_init, adamw_update
 __all__ = [
     "class_logits",
     "public_logits",
+    "last_logits",
     "make_finetune_step",
     "make_distill_step",
     "make_batched_finetune_step",
     "make_batched_distill_step",
     "make_batched_public_logits",
+    "make_fused_round_fn",
     "make_eval_fn",
     "init_lora_opt",
 ]
@@ -42,15 +45,30 @@ def class_logits(logits_last: jax.Array, num_classes: int) -> jax.Array:
     return logits_last[..., :num_classes]
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def public_logits(params, cfg: ModelConfig, tokens: jax.Array):
+def last_logits(params, cfg: ModelConfig, batch: dict, *, last_only: bool = True):
+    """(B, V) last-position logits + Aux, via the cheap head when enabled.
+
+    ``last_only=True`` (default) computes the LM head on the final hidden
+    state only — a ~seq_len× cut in head FLOPs/memory, which dominates at
+    the paper's 50k+ vocabularies; ``False`` keeps the seed behaviour of
+    materialising (B, T, V) and slicing (the PR-1 reference, benchmarked
+    against in benchmarks/engine_bench.py).
+    """
+    if last_only:
+        return forward(params, cfg, batch, last_only=True)
+    logits, aux = forward(params, cfg, batch)
+    return logits[:, -1, :], aux
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "last_only"))
+def public_logits(params, cfg: ModelConfig, tokens: jax.Array, *, last_only: bool = True):
     """Last-position vocab logits + pooled LoRA projection on a public batch.
 
     Returns (logits (B, V), h (B, r) or None) — the client/server upload
     content (Algorithm 1 lines 4, 14).
     """
-    logits, aux = forward(params, cfg, {"tokens": tokens})
-    return logits[:, -1, :], aux.lora_h
+    logits, aux = last_logits(params, cfg, {"tokens": tokens}, last_only=last_only)
+    return logits, aux.lora_h
 
 
 def init_lora_opt(params, cfg: ModelConfig) -> AdamWState:
@@ -58,14 +76,14 @@ def init_lora_opt(params, cfg: ModelConfig) -> AdamWState:
     return adamw_init(lora, state_dtype=cfg.optimizer_state_dtype)
 
 
-def _finetune_loss_fn(cfg: ModelConfig, num_classes: int) -> Callable:
+def _finetune_loss_fn(cfg: ModelConfig, num_classes: int, last_only: bool = True) -> Callable:
     """loss(lora, frozen, batch) -> (nll + moe_aux, acc) — the shared core
-    of the sequential step and the batched cohort step."""
+    of the sequential step, the batched cohort step and the fused round."""
 
     def loss_fn(lora, frozen, batch):
         params = merge_lora(lora, frozen)
-        logits, aux = forward(params, cfg, {"tokens": batch["tokens"]})
-        cls = class_logits(logits[:, -1, :], num_classes)
+        last, aux = last_logits(params, cfg, {"tokens": batch["tokens"]}, last_only=last_only)
+        cls = class_logits(last, num_classes)
         logp = jax.nn.log_softmax(cls.astype(jnp.float32), axis=-1)
         nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1).mean()
         acc = jnp.mean((jnp.argmax(cls, -1) == batch["labels"]).astype(jnp.float32))
@@ -75,11 +93,11 @@ def _finetune_loss_fn(cfg: ModelConfig, num_classes: int) -> Callable:
 
 
 def _finetune_step_fn(
-    cfg: ModelConfig, num_classes: int, lr: float, weight_decay: float
+    cfg: ModelConfig, num_classes: int, lr: float, weight_decay: float, last_only: bool = True
 ) -> Callable:
     """Unjitted single-client fine-tune step over merged params."""
 
-    loss_fn = _finetune_loss_fn(cfg, num_classes)
+    loss_fn = _finetune_loss_fn(cfg, num_classes, last_only)
 
     def step(params, opt, batch):
         lora, frozen = split_lora(params)
@@ -99,12 +117,13 @@ def make_finetune_step(
     *,
     lr: float = 1e-3,
     weight_decay: float = 1e-3,
+    last_only: bool = True,
 ) -> Callable:
     """Supervised local fine-tuning on private data (paper eq. 2), LoRA-only.
 
     step(params, opt, batch{tokens,labels}) -> (params, opt, metrics)
     """
-    return jax.jit(_finetune_step_fn(cfg, num_classes, lr, weight_decay))
+    return jax.jit(_finetune_step_fn(cfg, num_classes, lr, weight_decay, last_only))
 
 
 @functools.lru_cache(maxsize=64)
@@ -115,6 +134,7 @@ def make_batched_finetune_step(
     lr: float = 1e-3,
     weight_decay: float = 1e-3,
     shared_backbone: bool = True,
+    last_only: bool = True,
 ) -> Callable:
     """One fine-tune update for a whole cohort at once.
 
@@ -131,7 +151,7 @@ def make_batched_finetune_step(
     comes from.  LoRA/opt buffers are donated.
     """
 
-    loss_fn = _finetune_loss_fn(cfg, num_classes)
+    loss_fn = _finetune_loss_fn(cfg, num_classes, last_only)
 
     def step(lora, frozen, opt, batch):
         (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(lora, frozen, batch)
@@ -145,7 +165,11 @@ def make_batched_finetune_step(
 
 
 def _distill_loss_fn(
-    cfg: ModelConfig, temperature: float, lam: float, restrict_to_support: bool
+    cfg: ModelConfig,
+    temperature: float,
+    lam: float,
+    restrict_to_support: bool,
+    last_only: bool = True,
 ) -> Callable:
     """loss(lora, frozen, tokens, g_logits, g_h) -> (L_total, parts)."""
 
@@ -153,8 +177,7 @@ def _distill_loss_fn(
 
     def loss_fn(lora, frozen, tokens, g_logits, g_h):
         params = merge_lora(lora, frozen)
-        logits, aux = forward(params, cfg, {"tokens": tokens})
-        own = logits[:, -1, :]
+        own, aux = last_logits(params, cfg, {"tokens": tokens}, last_only=last_only)
         loss, parts = total_distill_loss(
             g_logits,
             own,
@@ -175,10 +198,11 @@ def _distill_step_fn(
     temperature: float,
     lam: float,
     restrict_to_support: bool,
+    last_only: bool = True,
 ) -> Callable:
     """Unjitted single-model distillation step over merged params."""
 
-    loss_fn = _distill_loss_fn(cfg, temperature, lam, restrict_to_support)
+    loss_fn = _distill_loss_fn(cfg, temperature, lam, restrict_to_support, last_only)
 
     def step(params, opt, tokens, g_logits, g_h):
         lora, frozen = split_lora(params)
@@ -199,6 +223,7 @@ def make_distill_step(
     temperature: float = 2.0,
     lam: float = 0.03,
     restrict_to_support: bool = False,
+    last_only: bool = True,
 ) -> Callable:
     """Knowledge-distillation update against global teacher knowledge
     (Algorithm 1 lines 5-7 / 16): LoRA-only gradient on L_total (eq. 10).
@@ -206,7 +231,9 @@ def make_distill_step(
     step(params, opt, public_tokens, g_logits, g_h) -> (params, opt, metrics)
     ``g_h`` may be None -> the λ-term drops (the 'Adaptive' baseline).
     """
-    return jax.jit(_distill_step_fn(cfg, lr, temperature, lam, restrict_to_support))
+    return jax.jit(
+        _distill_step_fn(cfg, lr, temperature, lam, restrict_to_support, last_only)
+    )
 
 
 @functools.lru_cache(maxsize=64)
@@ -218,6 +245,7 @@ def make_batched_distill_step(
     lam: float = 0.03,
     restrict_to_support: bool = False,
     shared_backbone: bool = True,
+    last_only: bool = True,
 ) -> Callable:
     """Cohort distillation against one broadcast teacher.
 
@@ -229,7 +257,7 @@ def make_batched_distill_step(
     Algorithm 1 lines 5-7; with ``shared_backbone`` the frozen W' is
     broadcast too (see :func:`make_batched_finetune_step`).
     """
-    loss_fn = _distill_loss_fn(cfg, temperature, lam, restrict_to_support)
+    loss_fn = _distill_loss_fn(cfg, temperature, lam, restrict_to_support, last_only)
 
     def step(lora, frozen, opt, tokens, g_logits, g_h):
         (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
@@ -246,27 +274,125 @@ def make_batched_distill_step(
 
 
 @functools.lru_cache(maxsize=64)
-def make_batched_public_logits(cfg: ModelConfig, *, shared_backbone: bool = True) -> Callable:
+def make_batched_public_logits(
+    cfg: ModelConfig, *, shared_backbone: bool = True, last_only: bool = True
+) -> Callable:
     """Cohort public-set inference: (lora (C,...), frozen, tokens (P,L)) ->
     (logits (C,P,V), h (C,P,r) or None) — Algorithm 1 line 9 for the whole
     round's selected clients in one compiled call."""
 
     def one(lora, frozen, tokens):
-        logits, aux = forward(merge_lora(lora, frozen), cfg, {"tokens": tokens})
-        return logits[:, -1, :], aux.lora_h
+        last, aux = last_logits(
+            merge_lora(lora, frozen), cfg, {"tokens": tokens}, last_only=last_only
+        )
+        return last, aux.lora_h
 
     frozen_ax = None if shared_backbone else 0
     return jax.jit(jax.vmap(one, in_axes=(0, frozen_ax, None)))
 
 
 @functools.lru_cache(maxsize=64)
-def make_eval_fn(cfg: ModelConfig, num_classes: int, *, batch_size: int = 64) -> Callable:
+def make_fused_round_fn(
+    cfg: ModelConfig,
+    num_classes: int,
+    *,
+    lr: float = 1e-3,
+    weight_decay: float = 1e-3,
+    distill_lr: float = 1e-3,
+    temperature: float = 2.0,
+    lam: float = 0.03,
+    restrict_to_support: bool = False,
+    local_steps: int = 4,
+    distill_steps: int = 2,
+    shared_backbone: bool = True,
+    last_only: bool = True,
+    use_kernels: bool = False,
+) -> Callable:
+    """The whole client phase of Algorithm 1 as ONE function.
+
+    fn(lora (C,...), frozen, opt (C,...), g_tokens (P,L), g_logits (P,V),
+       g_h (P,r)|None, batches {tokens (C,S,B,L), labels (C,S,B)},
+       pub_tokens (P,L), ks (C,) int32)
+    -> (lora, opt, dense (C,P,V), h (C,P,r)|None)
+
+    Fuses lines 5-11 — ``distill_steps`` distillation updates against the
+    broadcast knowledge, ``local_steps`` supervised updates (``lax.scan``
+    over the per-step batch axis), public-set last-position inference (all
+    vmapped over the client axis), and the per-client adaptive Top-k
+    sparsification with the budget as DATA — so the round body is a single
+    compiled program: per-round dispatches drop from
+    O(distill_steps + local_steps + phases) to O(1) and no intermediate
+    state round-trips through the host.  The sparsifier is the pure-jnp
+    threshold bisection (:func:`repro.core.topk.topk_mask_dynamic`) or,
+    with ``use_kernels``, the per-row-budget Pallas kernel
+    (:func:`repro.kernels.ops.topk_mask_dynamic`) — identical threshold
+    (ties-kept) semantics.  ``distill_steps=0`` builds the cold-start
+    variant (round 0: no broadcast exists yet; the g_* operands are passed
+    but unused and DCE'd).  Returned unjitted so the round engine chooses
+    the compilation wrapper (plain ``jax.jit`` or a ``shard_map`` placement
+    of the client axis over devices).
+    """
+    ft_loss = _finetune_loss_fn(cfg, num_classes, last_only)
+    kd_loss = _distill_loss_fn(cfg, temperature, lam, restrict_to_support, last_only)
+
+    def client_round(lora, frozen, opt, g_tokens, g_logits, g_h, batches, pub_tokens):
+        # -- lines 5-7: local distillation against the broadcast knowledge --
+        for _ in range(distill_steps):
+            (_, _), grads = jax.value_and_grad(kd_loss, has_aux=True)(
+                lora, frozen, g_tokens, g_logits, g_h
+            )
+            lora, opt = adamw_update(grads, opt, lora, lr=distill_lr)
+
+        # -- line 8: local fine-tuning, scanned over the step axis --
+        def train_body(carry, batch):
+            lora, opt = carry
+            (_, _), grads = jax.value_and_grad(ft_loss, has_aux=True)(
+                lora, frozen, batch
+            )
+            lora, opt = adamw_update(grads, opt, lora, lr=lr, weight_decay=weight_decay)
+            return (lora, opt), None
+
+        (lora, opt), _ = jax.lax.scan(train_body, (lora, opt), batches, length=local_steps)
+
+        # -- line 9: public last-position inference --
+        last, aux = last_logits(
+            merge_lora(lora, frozen), cfg, {"tokens": pub_tokens}, last_only=last_only
+        )
+        return lora, opt, last, aux.lora_h
+
+    frozen_ax = None if shared_backbone else 0
+    vm = jax.vmap(client_round, in_axes=(0, frozen_ax, 0, None, None, None, 0, None))
+
+    def fn(lora, frozen, opt, g_tokens, g_logits, g_h, batches, pub_tokens, ks):
+        lora, opt, last, h = vm(
+            lora, frozen, opt, g_tokens, g_logits, g_h, batches, pub_tokens
+        )
+        # -- line 10: adaptive top-k, one budget per client row (k is data;
+        # applied outside the client vmap so the Pallas path stays a plain
+        # 2-D pallas_call) --
+        if use_kernels:
+            from repro.kernels import ops as kops
+
+            dense = kops.topk_mask_dynamic(
+                last, jnp.broadcast_to(ks[:, None], last.shape[:-1])
+            )
+        else:
+            dense = topk_mask_dynamic(last, ks[:, None])
+        return lora, opt, dense, h
+
+    return fn
+
+
+@functools.lru_cache(maxsize=64)
+def make_eval_fn(
+    cfg: ModelConfig, num_classes: int, *, batch_size: int = 64, last_only: bool = True
+) -> Callable:
     """Accuracy over an IntentDataset (numpy arrays), batched + jitted."""
 
     @functools.partial(jax.jit, static_argnames=())
     def batch_acc(params, tokens, labels):
-        logits, _ = forward(params, cfg, {"tokens": tokens})
-        cls = class_logits(logits[:, -1, :], num_classes)
+        last, _ = last_logits(params, cfg, {"tokens": tokens}, last_only=last_only)
+        cls = class_logits(last, num_classes)
         return jnp.sum((jnp.argmax(cls, -1) == labels).astype(jnp.float32))
 
     def evaluate(params, tokens, labels) -> float:

@@ -14,9 +14,16 @@ import jax.numpy as jnp
 from repro.kernels.distill_kl import distill_kl_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.sparse_agg import sparse_agg_pallas
-from repro.kernels.topk_select import topk_mask_pallas
+from repro.kernels.topk_select import topk_mask_dynamic_pallas, topk_mask_pallas
 
-__all__ = ["topk_mask", "distill_kl", "sparse_aggregate", "flash_attention", "interpret_mode"]
+__all__ = [
+    "topk_mask",
+    "topk_mask_dynamic",
+    "distill_kl",
+    "sparse_aggregate",
+    "flash_attention",
+    "interpret_mode",
+]
 
 
 def interpret_mode() -> bool:
@@ -32,6 +39,17 @@ def topk_mask(logits: jax.Array, k: int) -> jax.Array:
     """Dense top-k sparsification of (..., vocab) logits (paper eq. 4)."""
     flat, lead = _fold(logits)
     out = topk_mask_pallas(flat, k, interpret=interpret_mode())
+    return out.reshape(lead + (logits.shape[-1],))
+
+
+def topk_mask_dynamic(logits: jax.Array, ks: jax.Array) -> jax.Array:
+    """Per-row-budget top-k mask: ``logits (..., vocab)`` with int32 budgets
+    ``ks`` matching the leading shape — the fused round engine's uplink
+    sparsifier (k is data, so one compiled program serves every round)."""
+    flat, lead = _fold(logits)
+    out = topk_mask_dynamic_pallas(
+        flat, ks.reshape((-1,)), interpret=interpret_mode()
+    )
     return out.reshape(lead + (logits.shape[-1],))
 
 

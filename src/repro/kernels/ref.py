@@ -10,7 +10,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["topk_mask_ref", "distill_kl_ref", "sparse_agg_ref", "flash_attention_ref"]
+__all__ = [
+    "topk_mask_ref",
+    "topk_mask_dynamic_ref",
+    "distill_kl_ref",
+    "sparse_agg_ref",
+    "flash_attention_ref",
+]
 
 
 def topk_mask_ref(logits: jax.Array, k: int) -> jax.Array:
@@ -21,6 +27,20 @@ def topk_mask_ref(logits: jax.Array, k: int) -> jax.Array:
     """
     kth = jax.lax.top_k(logits, k)[0][..., -1:]
     return jnp.where(logits >= kth, logits, jnp.zeros_like(logits))
+
+
+def topk_mask_dynamic_ref(logits: jax.Array, ks: jax.Array) -> jax.Array:
+    """Per-row-budget threshold top-k of (rows, vocab); ``ks`` (rows,) int32.
+
+    Same threshold (ties-kept) semantics as :func:`topk_mask_ref`; a zero
+    budget zeroes the whole row.
+    """
+    vocab = logits.shape[-1]
+    ks = jnp.clip(ks.astype(jnp.int32), 0, vocab)
+    order = jnp.sort(logits, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(order, jnp.clip(ks - 1, 0, vocab - 1)[:, None], axis=-1)
+    out = jnp.where(logits >= kth, logits, jnp.zeros_like(logits))
+    return jnp.where((ks > 0)[:, None], out, jnp.zeros_like(out))
 
 
 def distill_kl_ref(

@@ -29,9 +29,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["topk_mask_pallas", "rows_block_for"]
+__all__ = ["topk_mask_pallas", "topk_mask_dynamic_pallas", "rows_block_for"]
 
-ITERS = 30
+# Single source of truth shared with the pure-jnp topk_mask_dynamic: the two
+# bisections must converge identically (exact-parity contract).
+from repro.core.topk import BISECTION_ITERS as ITERS  # noqa: E402
 
 
 def rows_block_for(vocab: int, dtype=jnp.float32) -> int:
@@ -58,6 +60,59 @@ def _topk_kernel(x_ref, out_ref, *, k: int):
     lo, hi = jax.lax.fori_loop(0, ITERS, body, (lo, hi))
     keep = x >= lo[:, None]
     out_ref[...] = jnp.where(keep, x_ref[...], jnp.zeros_like(x_ref[...]))
+
+
+def _topk_dynamic_kernel(x_ref, k_ref, out_ref):
+    """Per-row budget variant: k arrives as DATA (int32 per row), so one
+    compiled program serves every round of adaptive budgets — the fused
+    round engine's requirement (a static k would recompile per round)."""
+    x = x_ref[...].astype(jnp.float32)  # (R_b, V)
+    k = k_ref[...]  # (R_b,) int32, pre-clamped to [0, V]
+    lo = jnp.min(x, axis=-1)
+    hi = jnp.max(x, axis=-1) + 1.0
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((x >= mid[:, None]).astype(jnp.int32), axis=-1)
+        take = cnt >= k
+        return jnp.where(take, mid, lo), jnp.where(take, hi, mid)
+
+    # For k == 0 the loop drives lo toward max+1 -> nothing kept, which is
+    # exactly the dropped-straggler contract; the explicit k > 0 guard below
+    # makes it robust to the last-ulp of the bisection regardless.
+    lo, hi = jax.lax.fori_loop(0, ITERS, body, (lo, hi))
+    keep = (x >= lo[:, None]) & (k > 0)[:, None]
+    out_ref[...] = jnp.where(keep, x_ref[...], jnp.zeros_like(x_ref[...]))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def topk_mask_dynamic_pallas(
+    logits: jax.Array, ks: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    """Dense top-k mask of (rows, vocab) with a per-row int32 budget ``ks``
+    (threshold semantics; ``ks[i] == 0`` zeroes row i entirely)."""
+    assert logits.ndim == 2 and ks.ndim == 1, "fold batch dims before calling"
+    rows, vocab = logits.shape
+    ks = jnp.clip(ks.astype(jnp.int32), 0, vocab)
+    rb = rows_block_for(vocab, logits.dtype)
+    pad = (-rows) % rb
+    x = jnp.pad(logits, ((0, pad), (0, 0))) if pad else logits
+    kp = jnp.pad(ks, (0, pad)) if pad else ks
+    grid = (x.shape[0] // rb,)
+
+    out = pl.pallas_call(
+        _topk_dynamic_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb, vocab), lambda r: (r, 0)),
+            pl.BlockSpec((rb,), lambda r: (r,)),
+        ],
+        out_specs=pl.BlockSpec((rb, vocab), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, logits.dtype),
+        interpret=interpret,
+    )(x, kp)
+    return out[:rows] if pad else out
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))

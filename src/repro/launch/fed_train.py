@@ -22,8 +22,16 @@ from repro.fed.rounds import METHODS
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--method", choices=list(METHODS), default="adald")
-    ap.add_argument("--engine", choices=["sequential", "batched"], default="batched",
-                    help="client-phase executor (batched = vmapped cohort)")
+    ap.add_argument("--engine", choices=["sequential", "batched", "fused"],
+                    default="batched",
+                    help="client-phase executor (batched = vmapped per-phase "
+                         "cohort steps; fused = one jitted round body)")
+    ap.add_argument("--full-head", action="store_true",
+                    help="materialise full (B,T,V) logits instead of the "
+                         "last-only LM head (the pre-PR-2 behaviour)")
+    ap.add_argument("--shard-clients", action="store_true",
+                    help="fused engine: place the client axis over jax "
+                         "devices via shard_map")
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--per-round", type=int, default=4)
@@ -49,6 +57,8 @@ def main(argv=None) -> int:
         seed=args.seed,
         lam=args.lam,
         use_kernels=args.use_kernels,
+        last_only=not args.full_head,
+        shard_clients=args.shard_clients,
     )
     run = run_federated(REDUCED_CLIENT, REDUCED_SERVER, ds, fed, verbose=True)
 

@@ -133,12 +133,20 @@ def backbone(
     batch: dict,
     *,
     window: int | None = None,
+    last_only: bool = False,
 ) -> tuple[jax.Array, Aux]:
     """Full-sequence hidden states (post final-norm, pre LM head).
 
     For VLM the returned hidden covers the TEXT region only (frontend
     positions are processed but dropped before the head).  Training uses
     this + chunked cross-entropy so (B, S, vocab) logits never materialise.
+
+    ``last_only=True`` returns the FINAL text position only, shape
+    ``(B, 1, d_model)``: the stack still processes every position (causal
+    mixing needs them) but the final norm — and, downstream, the LM head —
+    touch one position instead of S.  ``Aux`` is identical to the full
+    forward: the pooled LoRA projection (paper eq. 8) always pools over the
+    whole sequence.
     """
     tokens = batch["tokens"]
     b, s_text = tokens.shape
@@ -166,19 +174,28 @@ def backbone(
     st, _ = stack_apply(
         params["stack"], x, cfg, cfg.num_layers, positions=pos, window=window, enc_out=enc_out
     )
-    h = norm_apply(params["final_norm"], st.x, kind=cfg.norm)
+    x_out = st.x
     if cfg.family == "vlm":
-        h = h[:, frontend.shape[1] :]  # text region only
+        x_out = x_out[:, frontend.shape[1] :]  # text region only
     lora_h = st.lora_h
-    if lora_h is None and "lora_head" in params:
-        # attention-free families (SSM) have no q/v adapters; the paper's
-        # projection h = A·x (eq. 8) comes from the head adapter instead —
-        # any low-rank adapter satisfies the cross-family exchange contract.
-        cd = jnp.dtype(cfg.compute_dtype)
-        lora_h = jnp.mean(
-            jnp.einsum("bsd,dr->bsr", h.astype(cd), params["lora_head"]["A"].astype(cd)),
-            axis=1,
-        )
+    # The SSM fallback projection pools over the FULL normalized sequence, so
+    # that path must norm every position even under last_only.
+    need_fallback_h = lora_h is None and "lora_head" in params
+    if last_only and not need_fallback_h:
+        h = norm_apply(params["final_norm"], x_out[:, -1:], kind=cfg.norm)
+    else:
+        h = norm_apply(params["final_norm"], x_out, kind=cfg.norm)
+        if need_fallback_h:
+            # attention-free families (SSM) have no q/v adapters; the paper's
+            # projection h = A·x (eq. 8) comes from the head adapter instead —
+            # any low-rank adapter satisfies the cross-family exchange contract.
+            cd = jnp.dtype(cfg.compute_dtype)
+            lora_h = jnp.mean(
+                jnp.einsum("bsd,dr->bsr", h.astype(cd), params["lora_head"]["A"].astype(cd)),
+                axis=1,
+            )
+        if last_only:
+            h = h[:, -1:]
     return h, Aux(moe_aux=st.moe_aux, lora_h=lora_h)
 
 
@@ -188,10 +205,21 @@ def forward(
     batch: dict,
     *,
     window: int | None = None,
+    last_only: bool = False,
 ) -> tuple[jax.Array, Aux]:
-    """Full-sequence forward returning (B, S_text, vocab) logits."""
-    h, aux = backbone(params, cfg, batch, window=window)
-    return _lm_logits(params, cfg, h), aux
+    """Full-sequence forward returning (B, S_text, vocab) logits.
+
+    ``last_only=True`` computes the LM head on the final position only and
+    returns ``(B, vocab)`` — identical (to float tolerance) to
+    ``forward(...)[0][:, -1, :]`` at ~1/S of the head FLOPs/memory.  This is
+    the mode every federated phase uses: the task convention (paper §IV)
+    reads class and distillation logits at the last position exclusively.
+    """
+    h, aux = backbone(params, cfg, batch, window=window, last_only=last_only)
+    logits = _lm_logits(params, cfg, h)
+    if last_only:
+        return logits[:, 0], aux
+    return logits, aux
 
 
 def init_cache(
@@ -262,6 +290,4 @@ def prefill(
     LAST-position logits (B, vocab) — what sampling needs.  (Cache writes
     during prefill are a serving-runtime concern; the full-sequence compute
     here dominates prefill cost, which is what the dry-run measures.)"""
-    h, aux = backbone(params, cfg, batch, window=window)
-    logits = _lm_logits(params, cfg, h[:, -1:, :])[:, 0]
-    return logits, aux
+    return forward(params, cfg, batch, window=window, last_only=True)

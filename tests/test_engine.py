@@ -1,10 +1,17 @@
-"""Batched vs sequential round-engine parity + straggler/dropout scenarios.
+"""Round-engine parity (sequential vs batched vs fused) + straggler/dropout
+scenarios.
 
-The keystone of the batched client-execution engine: under the same seed the
-two engines must agree round-for-round — identical per-client adaptive k,
-identical ledger bytes, identical accuracies.  Tiny configs (no backbone
-pretraining) keep this in the fast tier.
+The keystone of the batched/fused client-execution engines: under the same
+seed the engines must agree round-for-round — identical per-client adaptive
+k, identical ledger bytes, matching accuracies (sequential↔batched bitwise;
+the fused single-jit body is tolerance-compatible, see fed/engine.py).
+Tiny configs (no backbone pretraining) keep this in the fast tier.
 """
+
+import os
+import subprocess
+import sys
+import textwrap
 
 import jax.numpy as jnp
 import numpy as np
@@ -16,7 +23,7 @@ from repro.core import ChannelConfig
 from repro.core.channel import BatchedChannelState, ChannelState
 from repro.core.protocol import PayloadSpec
 from repro.data import make_banking77_like
-from repro.fed import BatchedEngine, FedConfig, SequentialEngine, run_federated
+from repro.fed import BatchedEngine, FedConfig, FusedEngine, SequentialEngine, run_federated
 from repro.fed.client import Client
 from repro.fed.server import Server
 
@@ -63,7 +70,30 @@ def test_engine_parity(method):
     np.testing.assert_allclose(seq.client_acc, bat.client_acc, atol=1e-6)
 
 
-@pytest.mark.parametrize("engine", ["sequential", "batched"])
+@pytest.mark.parametrize("method", ["adald", "zeropad"])
+def test_three_way_engine_parity(method):
+    """sequential vs batched vs fused: identical per-client adaptive k and
+    ledger bytes (host-side scalar math is shared); accuracies match to
+    float tolerance (the fused engine compiles the whole round as one
+    program, so op scheduling may differ in the last ulp)."""
+    ds = _dataset()
+    runs = {
+        e: run_federated(CLIENT, SERVER, ds, _cfg(e, method, rounds=2))
+        for e in ("sequential", "batched", "fused")
+    }
+    seq = runs["sequential"]
+    for name in ("batched", "fused"):
+        other = runs[name]
+        assert seq.per_client_k == other.per_client_k, name
+        for rs, ro in zip(seq.ledger.rounds, other.ledger.rounds):
+            assert rs.uplink_bytes == ro.uplink_bytes
+            assert rs.downlink_bytes == ro.downlink_bytes
+            assert rs.num_transmitters == ro.num_transmitters
+        np.testing.assert_allclose(seq.server_acc, other.server_acc, atol=1e-6)
+        np.testing.assert_allclose(seq.client_acc, other.client_acc, atol=1e-6)
+
+
+@pytest.mark.parametrize("engine", ["sequential", "batched", "fused"])
 def test_single_round_completes(engine):
     """Regression for the old pub_tokens_prev/g_bits forward references: a
     1-round run (no broadcast ever happens) must complete cleanly."""
@@ -73,7 +103,7 @@ def test_single_round_completes(engine):
     assert run.ledger.rounds[0].uplink_bytes > 0
 
 
-@pytest.mark.parametrize("engine", ["sequential", "batched"])
+@pytest.mark.parametrize("engine", ["sequential", "batched", "fused"])
 def test_straggler_dropout(engine):
     """With min_k=0 + outages, dropped clients transmit zero bytes: each
     round's uplink equals the payload bytes of the k>0 clients only."""
@@ -93,18 +123,19 @@ def test_straggler_dropout(engine):
         assert stats.num_selected == len(ks)
 
 
-def test_dropout_parity():
-    """The two engines agree on which clients drop and on everything else."""
+@pytest.mark.parametrize("other", ["batched", "fused"])
+def test_dropout_parity(other):
+    """The engines agree on which clients drop and on everything else."""
     chan = ChannelConfig(bandwidth_hz=2e5, mean_snr_db=2.0, min_k=0, dropout_prob=0.5)
     ds = _dataset()
     seq = run_federated(CLIENT, SERVER, ds, _cfg("sequential", channel=chan, rounds=3))
-    bat = run_federated(CLIENT, SERVER, ds, _cfg("batched", channel=chan, rounds=3))
-    assert seq.per_client_k == bat.per_client_k
-    np.testing.assert_allclose(seq.server_acc, bat.server_acc, atol=1e-6)
-    np.testing.assert_allclose(seq.client_acc, bat.client_acc, atol=1e-6)
+    oth = run_federated(CLIENT, SERVER, ds, _cfg(other, channel=chan, rounds=3))
+    assert seq.per_client_k == oth.per_client_k
+    np.testing.assert_allclose(seq.server_acc, oth.server_acc, atol=1e-6)
+    np.testing.assert_allclose(seq.client_acc, oth.client_acc, atol=1e-6)
 
 
-@pytest.mark.parametrize("engine", ["sequential", "batched"])
+@pytest.mark.parametrize("engine", ["sequential", "batched", "fused"])
 def test_all_clients_dropped_round(engine):
     """A round where every selected client is in outage must complete: zero
     uplink, zero transmitters, no aggregation/distillation that round.
@@ -154,26 +185,128 @@ def test_dropped_client_absent_from_aggregation():
     )
 
 
-def test_engines_preserve_client_state():
-    """After a batched round, each client's params advance exactly as the
-    sequential engine's would (the engine is the source of truth; read back
-    through client_params)."""
+@pytest.mark.parametrize("engine_cls", [BatchedEngine, FusedEngine])
+def test_engines_preserve_client_state(engine_cls):
+    """After a batched/fused round, each client's params advance exactly as
+    the sequential engine's would (the engine is the source of truth; read
+    back through client_params)."""
     ds, c_seq = _mini_cohort(2)
-    _, c_bat = _mini_cohort(2)
+    _, c_oth = _mini_cohort(2)
     states = BatchedChannelState.from_states([
         ChannelState(1e6, 10.0, 0.5, 1.0), ChannelState(1e6, 0.0, 0.5, 1.0),
     ])
     pub = jnp.asarray(ds.tokens[:16])
     seq = SequentialEngine(c_seq, CLIENT)
-    bat = BatchedEngine(c_bat, CLIENT, num_classes=ds.num_classes,
-                        local_steps=1, distill_steps=1)
+    oth = engine_cls(c_oth, CLIENT, num_classes=ds.num_classes,
+                     local_steps=1, distill_steps=1)
     ps = seq.run_round([0, 1], pub, None, states, adaptive_k=True, send_h=True)
-    pb = bat.run_round([0, 1], pub, None, states, adaptive_k=True, send_h=True)
-    assert ps.ks == pb.ks
-    np.testing.assert_allclose(np.asarray(ps.dense), np.asarray(pb.dense), atol=1e-6)
+    po = oth.run_round([0, 1], pub, None, states, adaptive_k=True, send_h=True)
+    assert ps.ks == po.ks
+    np.testing.assert_allclose(np.asarray(ps.dense), np.asarray(po.dense), atol=1e-6)
     import jax
 
     for i in range(2):
         for x, y in zip(jax.tree.leaves(seq.client_params(i)),
-                        jax.tree.leaves(bat.client_params(i))):
+                        jax.tree.leaves(oth.client_params(i))):
             np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+def test_fused_use_kernels_matches_jnp_sparsifier():
+    """use_kernels=True routes the fused uplink top-k through the per-row
+    budget Pallas bisection kernel (interpret mode on CPU) — same threshold
+    semantics, same dense output as the pure-jnp path."""
+    ds, c_a = _mini_cohort(2)
+    _, c_b = _mini_cohort(2)
+    states = BatchedChannelState.from_states([
+        ChannelState(1e6, 10.0, 0.5, 1.0), ChannelState(1e6, 0.0, 0.5, 1.0),
+    ])
+    pub = jnp.asarray(ds.tokens[:16])
+    plain = FusedEngine(c_a, CLIENT, num_classes=ds.num_classes,
+                        local_steps=1, distill_steps=1)
+    kern = FusedEngine(c_b, CLIENT, num_classes=ds.num_classes,
+                       local_steps=1, distill_steps=1, use_kernels=True)
+    pp = plain.run_round([0, 1], pub, None, states, adaptive_k=True, send_h=True)
+    pk = kern.run_round([0, 1], pub, None, states, adaptive_k=True, send_h=True)
+    assert pp.ks == pk.ks
+    np.testing.assert_allclose(np.asarray(pp.dense), np.asarray(pk.dense), atol=0)
+
+
+def test_fused_dropped_client_absent_from_aggregation():
+    """Fused engine: a k == 0 straggler yields a zeroed dense row inside the
+    compiled body, and the host phase excludes it from the dense stack."""
+    ds, clients = _mini_cohort(3)
+    engine = FusedEngine(
+        clients, CLIENT, num_classes=ds.num_classes,
+        local_steps=1, distill_steps=1, k_min=0,
+    )
+    good = ChannelState(bandwidth_hz=1e6, snr_db=10.0, eta=0.5, deadline_s=1.0)
+    out = ChannelState(bandwidth_hz=1e6, snr_db=-float("inf"), eta=0.5, deadline_s=1.0)
+    states = BatchedChannelState.from_states([good, out, good])
+    pub = jnp.asarray(ds.tokens[:16])
+    phase = engine.run_round([0, 1, 2], pub, None, states, adaptive_k=True, send_h=True)
+    assert phase.ks[1] == 0 and phase.ks[0] > 0 and phase.ks[2] > 0
+    assert phase.dense.shape[0] == 2  # only the two transmitters
+    assert phase.h.shape[0] == 2
+    assert [p.client_id for p in phase.payloads] == [0, 2]
+
+
+_SHARD_MAP_SCRIPT = textwrap.dedent(
+    """
+    import jax, numpy as np, jax.numpy as jnp
+    assert jax.device_count() == 2, jax.device_count()
+    from repro.configs.base import LoRAConfig
+    from repro.configs.gpt2_paper import REDUCED_CLIENT
+    from repro.core.channel import BatchedChannelState, ChannelState
+    from repro.data import make_banking77_like
+    from repro.fed.client import Client
+    from repro.fed.engine import FusedEngine
+
+    lora = LoRAConfig(rank=4, alpha=32.0, dropout=0.0, targets=("q", "v", "head"))
+    cfg = REDUCED_CLIENT.with_overrides(
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, d_ff=128,
+        vocab_size=256, max_seq_len=32, lora=lora,
+    )
+    ds = make_banking77_like(vocab_size=256, seq_len=12, total=200, seed=0)
+
+    def cohort():
+        return [Client(i, cfg, ds.subset(np.arange(i * 60, (i + 1) * 60)),
+                       num_classes=ds.num_classes, seed=i,
+                       local_steps=1, distill_steps=1) for i in range(2)]
+
+    states = BatchedChannelState.from_states([
+        ChannelState(1e6, 10.0, 0.5, 1.0), ChannelState(1e6, 0.0, 0.5, 1.0)])
+    pub = jnp.asarray(ds.tokens[:16])
+    plain = FusedEngine(cohort(), cfg, num_classes=ds.num_classes,
+                        local_steps=1, distill_steps=1)
+    shard = FusedEngine(cohort(), cfg, num_classes=ds.num_classes,
+                        local_steps=1, distill_steps=1, shard_clients=True)
+    pp = plain.run_round([0, 1], pub, None, states, adaptive_k=True, send_h=True)
+    ps = shard.run_round([0, 1], pub, None, states, adaptive_k=True, send_h=True)
+    assert pp.ks == ps.ks
+    np.testing.assert_allclose(np.asarray(pp.dense), np.asarray(ps.dense), atol=1e-5)
+    for i in range(2):
+        for a, b in zip(jax.tree.leaves(plain.client_params(i)),
+                        jax.tree.leaves(shard.client_params(i))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    print("SHARD_MAP_OK")
+    """
+)
+
+
+def test_fused_shard_map_two_host_devices():
+    """shard_clients=True places the client axis over devices (shard_map) and
+    reproduces the single-device fused round.  XLA_FLAGS must be set before
+    jax initialises, hence the subprocess."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=2"
+    ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARD_MAP_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "SHARD_MAP_OK" in proc.stdout

@@ -7,9 +7,9 @@ import numpy as np
 import pytest
 
 from repro.core.aggregation import aggregate, aggregate_sparse
-from repro.core.topk import densify, topk_mask_batch, topk_sparsify
+from repro.core.topk import densify, topk_mask_batch, topk_mask_dynamic, topk_sparsify
 from repro.kernels import ref
-from repro.kernels.topk_select import topk_mask_pallas
+from repro.kernels.topk_select import topk_mask_dynamic_pallas, topk_mask_pallas
 
 
 class TestTopkKernelEdges:
@@ -58,6 +58,45 @@ class TestTopkKernelEdges:
         want = ref.topk_mask_ref(const, 4)
         np.testing.assert_allclose(got, want, atol=0)
         assert int(jnp.sum(got != 0)) == 2 * 32  # all tied -> all kept
+
+
+class TestTopkDynamicKernelEdges:
+    """topk_mask_dynamic_pallas(interpret=True) — the per-row-budget
+    bisection (k as data, the fused engine's uplink sparsifier) — vs the
+    jnp oracle and the pure-jnp traced-k implementation."""
+
+    def test_mixed_budgets_per_row(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (5, 257))
+        ks = jnp.asarray([0, 1, 17, 257, 300], jnp.int32)  # incl. 0 and > vocab
+        got = topk_mask_dynamic_pallas(x, ks, interpret=True)
+        want = ref.topk_mask_dynamic_ref(x, ks)
+        np.testing.assert_allclose(got, want, atol=0)
+        assert int(jnp.sum(got[0] != 0)) == 0  # k == 0: dropped straggler row
+        assert int(jnp.sum(got[1] != 0)) == 1
+        assert int(jnp.sum(got[3] != 0)) == 257  # k == vocab keeps everything
+
+    def test_matches_pure_jnp_traced_k(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (3, 101)) * 4.0
+        for k in (0, 1, 33, 101):
+            got = topk_mask_dynamic_pallas(
+                x, jnp.full((3,), k, jnp.int32), interpret=True
+            )
+            want = topk_mask_dynamic(x, jnp.int32(k))
+            np.testing.assert_allclose(got, want, atol=0)
+
+    def test_ties_at_threshold(self):
+        x = jnp.array([[5.0, 3.0, 3.0, 3.0, 3.0, 1.0, 0.0, -1.0]])
+        for k in (2, 3, 4):
+            got = topk_mask_dynamic_pallas(x, jnp.asarray([k], jnp.int32), interpret=True)
+            np.testing.assert_allclose(got, ref.topk_mask_ref(x, k), atol=0)
+            assert int(jnp.sum(got != 0)) == 5  # threshold keeps all tied 3.0s
+
+    def test_all_negative_rows(self):
+        x = -jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (4, 64))) - 1.0
+        ks = jnp.asarray([1, 7, 0, 64], jnp.int32)
+        got = topk_mask_dynamic_pallas(x, ks, interpret=True)
+        np.testing.assert_allclose(got, ref.topk_mask_dynamic_ref(x, ks), atol=0)
+        assert int(jnp.sum(got[2] != 0)) == 0
 
 
 class TestSparseVsDenseAggregation:

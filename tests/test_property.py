@@ -13,13 +13,32 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core.aggregation import aggregate_adaptive, aggregate_zeropad
+from repro.core.aggregation import aggregate, aggregate_adaptive, aggregate_zeropad
 from repro.core.channel import ChannelState, bits_per_entry, topk_budget
 from repro.core.distill import kl_divergence
-from repro.core.protocol import PayloadSpec
-from repro.core.topk import densify, topk_sparsify
+from repro.core.protocol import CommLedger, PayloadSpec, RoundStats, UplinkPayload
+from repro.core.topk import (
+    densify,
+    topk_mask_batch,
+    topk_mask_dense,
+    topk_mask_dynamic,
+    topk_sparsify,
+)
 
 SETTINGS = settings(max_examples=30, deadline=None)
+
+
+def _distinct_logits(rows: int, vocab: int, seed: int) -> jax.Array:
+    """Rows of pairwise-distinct values (a scaled random permutation), so
+    static top-k and the threshold-semantics dynamic mask agree exactly
+    (ties are the only divergence point and are measure-zero for real
+    logits)."""
+    key = jax.random.PRNGKey(seed)
+    perms = jnp.stack(
+        [jax.random.permutation(jax.random.fold_in(key, r), vocab) for r in range(rows)]
+    )
+    offset = jax.random.normal(jax.random.fold_in(key, 10_000), (rows, 1))
+    return perms.astype(jnp.float32) * 0.37 + offset
 
 
 @given(
@@ -93,6 +112,98 @@ def test_kl_nonnegative_property(rows, vocab, temp, seed):
     t = jax.random.normal(key, (rows, vocab)) * 5
     s = jax.random.normal(jax.random.fold_in(key, 1), (rows, vocab)) * 5
     assert float(kl_divergence(t, s, temp)) >= -1e-5
+
+
+# ---- fused-path round-trip invariants -------------------------------------
+
+
+@given(
+    n=st.integers(1, 5),
+    vocab=st.integers(8, 96),
+    seed=st.integers(0, 2**30),
+    data=st.data(),
+)
+@SETTINGS
+def test_dynamic_topk_equals_dense_reference_per_client(n, vocab, seed, data):
+    """INVARIANT (fused engine): the traced-k sparsifier applied per client
+    (k == 0 dropout included) equals both the static per-client reference
+    and the batched k_max path, on distinct-valued rows."""
+    ks = data.draw(st.lists(st.integers(0, vocab), min_size=n, max_size=n))
+    logits = jnp.stack([_distinct_logits(3, vocab, seed + i) for i in range(n)])
+    got = jnp.stack(
+        [topk_mask_dynamic(logits[i], jnp.int32(k)) for i, k in enumerate(ks)]
+    )
+    want = jnp.stack(
+        [
+            topk_mask_dense(logits[i], k) if k > 0 else jnp.zeros_like(logits[i])
+            for i, k in enumerate(ks)
+        ]
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+    np.testing.assert_allclose(
+        np.asarray(topk_mask_batch(logits, ks)), np.asarray(want), atol=0
+    )
+
+
+@given(
+    n=st.integers(1, 5),
+    vocab=st.integers(8, 96),
+    seed=st.integers(0, 2**30),
+    mode=st.sampled_from(["adaptive", "zeropad"]),
+    data=st.data(),
+)
+@SETTINGS
+def test_sparse_aggregation_of_transmitters_matches_dense(n, vocab, seed, mode, data):
+    """INVARIANT (round pipeline): aggregating only the k > 0 transmitters of
+    the batched top-k equals aggregating the per-client densified uploads —
+    dropped stragglers never enter the stack."""
+    ks = data.draw(st.lists(st.integers(0, vocab), min_size=n, max_size=n))
+    logits = jnp.stack([_distinct_logits(2, vocab, seed + 7 * i) for i in range(n)])
+    dense_all = topk_mask_batch(logits, ks)
+    active = [i for i, k in enumerate(ks) if k > 0]
+    if not active:
+        assert float(jnp.sum(jnp.abs(dense_all))) == 0.0
+        return
+    got = aggregate(dense_all[jnp.asarray(active)], mode)
+    want = aggregate(
+        jnp.stack([densify(topk_sparsify(logits[i], ks[i])) for i in active]), mode
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-7)
+
+
+@given(
+    n=st.integers(1, 6),
+    vocab=st.integers(4, 50_000),
+    samples=st.integers(1, 512),
+    rank=st.one_of(st.none(), st.integers(1, 16)),
+    value_bits=st.sampled_from([8, 16, 32]),
+    data=st.data(),
+)
+@SETTINGS
+def test_uplink_byte_accounting_matches_ledger(n, vocab, samples, rank, value_bits, data):
+    """INVARIANT (§III-C): the ledger total equals the closed-form bit cost
+    of the k > 0 payloads — k == 0 stragglers contribute exactly nothing."""
+    ks = data.draw(st.lists(st.integers(0, vocab), min_size=n, max_size=n))
+    payloads = [
+        UplinkPayload(
+            client_id=i,
+            spec=PayloadSpec(
+                num_samples=samples, vocab=vocab, k=k,
+                lora_rank=rank, value_bits=value_bits,
+            ),
+        )
+        for i, k in enumerate(ks)
+        if k > 0
+    ]
+    ledger = CommLedger()
+    ledger.record(
+        RoundStats(round_index=0, uplink_bytes=sum(p.bytes for p in payloads))
+    )
+    d = bits_per_entry(value_bits, vocab)
+    h_bits = samples * rank * value_bits if rank is not None else 0
+    expect_bits = sum(samples * k * d + h_bits for k in ks if k > 0)
+    assert ledger.uplink_mb * 1e6 == pytest.approx(expect_bits / 8.0)
+    assert ledger.rounds[0].total_bytes == pytest.approx(expect_bits / 8.0)
 
 
 @given(
