@@ -1,6 +1,20 @@
-"""Round-engine benchmark: sequential vs batched vs fused client-phase
-wall-clock, plus the PR-1 full-head batched engine as the historical
-reference.
+"""Round-engine benchmarks.
+
+Two benches live here:
+
+* ``bench``       — client-phase wall-clock: sequential vs batched vs fused,
+                    plus the PR-1 full-head batched engine as the historical
+                    reference (writes BENCH_engine[.quick].json).
+* ``bench_round`` — WHOLE-round wall-clock (client phase + server phase:
+                    aggregation + server distillation + broadcast): the PR-2
+                    "fused client phase + host server phase over densified
+                    (N, B, V) stacks" against the PR-3 fused-e2e single
+                    compiled call over the sparse (values, indices, mask)
+                    wire, and the ``run_rounds`` multi-round lax.scan driver
+                    (writes BENCH_round[.quick].json, incl. the aggregation
+                    working-set bytes and a trace-inspection proof that the
+                    sparse aggregation path materialises no (N, B, V) dense
+                    stack).
 
 The paper's Algorithm 1 selects 10 of 50 clients per round.  Engines:
 
@@ -156,18 +170,265 @@ def bench(quick: bool = True, out_json: str | None = None):
     ]
 
 
+def _assert_agg_dense_stack_free(n: int, rows: int, vocab: int, k_cap: int) -> int:
+    """Trace-inspect the sparse aggregation path: build its jaxpr at the
+    round's shapes and verify NO intermediate (sub-jaxprs included) reaches
+    the (N, rows, V) dense stack's element count (the dense oracle's
+    working set).  Returns the largest intermediate element count seen.
+    Uses the same shared inspection as the CI test
+    (tests/test_engine.py::test_e2e_aggregation_path_never_densifies_stack)."""
+    from repro.core.aggregation import aggregate_wire, max_intermediate_elems
+    from repro.core.topk import SparseWire
+
+    def agg(values, indices, mask, n_tx):
+        wire = SparseWire(values=values, indices=indices, mask=mask, vocab=vocab)
+        return aggregate_wire(wire, "adaptive", num_transmitters=n_tx)
+
+    jaxpr = jax.make_jaxpr(agg)(
+        jnp.zeros((n, rows, k_cap)), jnp.zeros((n, rows, k_cap), jnp.int32),
+        jnp.zeros((n, rows, k_cap), bool), jnp.int32(n),
+    )
+    worst = max_intermediate_elems(jaxpr)
+    dense_stack = n * rows * vocab
+    assert worst < dense_stack, (
+        f"sparse aggregation materialised {worst} elements >= the dense "
+        f"(N, B, V) stack's {dense_stack}"
+    )
+    return worst
+
+
+def bench_round(quick: bool = True, out_json: str | None = None):
+    """Whole-round wall-clock (client + server phases), three executions:
+
+    fused_host — PR-2 fused client phase (ONE call) + HOST server phase:
+                 densified (N, P, V) stack -> aggregate_dense -> per-step
+                 server distill dispatches -> broadcast inference.
+    fused_e2e  — PR-3: the whole round as ONE donated compiled call over the
+                 sparse (values, indices, mask) wire.
+    e2e_scanR  — R whole rounds inside one lax.scan dispatch
+                 (``FusedE2EEngine.run_rounds``), reported per round.
+    """
+    from repro.core import ChannelConfig, ChannelSimulator
+    from repro.fed.engine import BroadcastState, FusedE2EEngine, k_cap_bucket
+    from repro.fed.server import Server
+
+    num_clients = 10  # the paper's clients_per_round
+    # P = 256 is the FedConfig default public_batch — at that size the round
+    # is aggregation/sparsifier-bound (the regime the sparse wire targets),
+    # not model-GEMM-bound like a P=64 toy batch.  Both modes use the d64
+    # reduced model: the round bench measures ROUND ARCHITECTURE (dispatch,
+    # wire vs dense stacks), not model size; full mode adds reps.
+    d_model, vocab, seq_len, pub_batch = 64, 8192, 16, 256
+    # the container's noise events last minutes: only several interleaved
+    # reps with a min give each variant a shot at a clean window
+    reps = 4 if quick else 6
+    scan_rounds = 3
+    server_distill_steps = 12  # FedConfig default: the server LLM's phase
+
+    from repro.configs.base import LoRAConfig
+    from repro.configs.gpt2_paper import REDUCED_CLIENT
+    from repro.data import make_banking77_like
+    from repro.fed.client import Client
+    from repro.fed.engine import FusedEngine
+    from repro.models import init as model_init
+
+    lora = LoRAConfig(rank=8, alpha=32.0, dropout=0.0, targets=("q", "v", "head"))
+    cfg = REDUCED_CLIENT.with_overrides(
+        num_layers=2, d_model=d_model, num_heads=4, num_kv_heads=4,
+        d_ff=2 * d_model, vocab_size=vocab, max_seq_len=max(seq_len, 32), lora=lora,
+    )
+    ds = make_banking77_like(
+        vocab_size=vocab, seq_len=seq_len, total=60 * num_clients + pub_batch + 100,
+        seed=0,
+    )
+    backbone = model_init(jax.random.PRNGKey(123), cfg)
+
+    def cohort():
+        return [
+            Client(i, cfg, ds.subset(np.arange(i * 60, (i + 1) * 60)),
+                   num_classes=ds.num_classes, seed=i, local_steps=4,
+                   distill_steps=2, initial_params=backbone)
+            for i in range(num_clients)
+        ]
+
+    pub = jnp.asarray(ds.tokens[-pub_batch:])
+    n_samples = int(pub.shape[0])
+    sim = ChannelSimulator(
+        num_clients, ChannelConfig(bandwidth_hz=5e5, mean_snr_db=5.0), seed=0
+    )
+    sel = list(range(num_clients))
+    states = sim.states_batched(0, sel)
+    mk = dict(num_classes=ds.num_classes, local_steps=4, distill_steps=2)
+
+    # -- PR-2 reference: fused client phase AS SHIPPED (full-vocab
+    # supervised head) + host server phase over the dense (N, P, V) stack --
+    host_engine = FusedEngine(cohort(), cfg, class_head_only=False, **mk)
+    host_server = Server(cfg, aggregation="adaptive",
+                         distill_steps=server_distill_steps)
+    # -- same host pipeline but with this PR's class-column supervised head
+    # (isolates the e2e-specific win from the shared head-FLOP cut) --
+    host_cls_engine = FusedEngine(cohort(), cfg, **mk)
+    host_cls_server = Server(cfg, aggregation="adaptive",
+                             distill_steps=server_distill_steps)
+
+    def make_host_round(engine, server):
+        def host_round(bcast):
+            phase = engine.run_round(
+                sel, pub, bcast, states, adaptive_k=True, send_h=True
+            )
+            k_g, h_g = server.aggregate_dense(phase.dense, phase.h)
+            server.distill(pub, k_g, h_g)
+            g_logits, g_h, bits = server.broadcast(pub)
+            jax.block_until_ready(g_logits)
+            return BroadcastState(tokens=pub, logits=g_logits, h=g_h, bits=bits)
+        return host_round
+
+    host_round = make_host_round(host_engine, host_server)
+    host_cls_round = make_host_round(host_cls_engine, host_cls_server)
+
+    # -- PR-3: the whole round as one compiled call ------------------------
+    e2e_engine = FusedE2EEngine(
+        cohort(), cfg,
+        server=Server(cfg, aggregation="adaptive",
+                      distill_steps=server_distill_steps),
+        server_distill_steps=server_distill_steps, aggregation="adaptive", **mk,
+    )
+
+    def e2e_round(bcast):
+        e2e_engine.run_round(sel, pub, bcast, states, adaptive_k=True, send_h=True)
+        jax.block_until_ready(e2e_engine._b_logits)
+        return e2e_engine.broadcast_state(pub)
+
+    # -- R rounds per dispatch (steady-state amortisation) -----------------
+    scan_engine = FusedE2EEngine(
+        cohort(), cfg,
+        server=Server(cfg, aggregation="adaptive",
+                      distill_steps=server_distill_steps),
+        server_distill_steps=server_distill_steps, aggregation="adaptive", **mk,
+    )
+    sels = [sel] * scan_rounds
+    pubs = [pub] * scan_rounds
+    states_r = [sim.states_batched(r, sel) for r in range(scan_rounds)]
+
+    def scan_block():
+        scan_engine.run_rounds(sels, pubs, states_r, adaptive_k=True, send_h=True)
+        jax.block_until_ready(scan_engine._b_logits)
+
+    # Interleave ALL variants in one loop and keep the MIN per variant: this
+    # 2-core container's round-to-round noise (scheduler, neighbours) is
+    # 20-50%, and interleaving makes every variant sample the same noise
+    # environment instead of whichever regime its back-to-back block hit.
+    bc_host = host_round(None)
+    bc_host = host_round(bc_host)  # warm-up: cold + warm executables
+    bc_cls = host_cls_round(None)
+    bc_cls = host_cls_round(bc_cls)
+    bc_e2e = e2e_round(None)
+    bc_e2e = e2e_round(bc_e2e)
+    scan_block()  # compile
+    t_host, t_cls, t_e2e, t_scan = [], [], [], []
+    for _ in range(reps):
+        t0 = time.time()
+        bc_host = host_round(bc_host)
+        t_host.append(time.time() - t0)
+        t0 = time.time()
+        bc_cls = host_cls_round(bc_cls)
+        t_cls.append(time.time() - t0)
+        t0 = time.time()
+        bc_e2e = e2e_round(bc_e2e)
+        t_e2e.append(time.time() - t0)
+        t0 = time.time()
+        scan_block()
+        t_scan.append(time.time() - t0)
+    us = {
+        "fused_host": min(t_host) * 1e6,
+        "fused_host_cls": min(t_cls) * 1e6,
+        "fused_e2e": min(t_e2e) * 1e6,
+        f"e2e_scan{scan_rounds}": min(t_scan) / scan_rounds * 1e6,
+    }
+
+    # -- aggregation working set + dense-stack-free proof ------------------
+    ks = host_engine._budgets(list(states), n_samples, True, num_clients)
+    k_cap = k_cap_bucket(ks, vocab)
+    n_tx = sum(1 for k in ks if k > 0)
+    dense_stack_bytes = n_tx * n_samples * vocab * 4
+    wire_bytes = num_clients * n_samples * k_cap * (4 + 4 + 1)
+    max_agg_elems = _assert_agg_dense_stack_free(num_clients, n_samples, vocab, k_cap)
+
+    speedups = {
+        "e2e_vs_fused_host": us["fused_host"] / us["fused_e2e"],
+        "e2e_vs_fused_host_cls": us["fused_host_cls"] / us["fused_e2e"],
+        f"scan{scan_rounds}_vs_fused_host": us["fused_host"] / us[f"e2e_scan{scan_rounds}"],
+        f"scan{scan_rounds}_vs_e2e": us["fused_e2e"] / us[f"e2e_scan{scan_rounds}"],
+    }
+    shape = (
+        f"C={num_clients};L2;d{d_model};V{vocab};T{seq_len};P{n_samples};"
+        f"steps=4+2;srv={server_distill_steps};k_cap={k_cap}"
+    )
+
+    if out_json:
+        record = {
+            "bench": "whole_round",
+            "shape": shape,
+            "quick": quick,
+            "reps": reps,
+            "backend": jax.default_backend(),
+            "cpu_count": os.cpu_count(),
+            "us_per_round": {k: round(v) for k, v in us.items()},
+            "speedups": {k: round(v, 2) for k, v in speedups.items()},
+            "aggregation": {
+                "mean_k": round(float(np.mean(ks)), 1),
+                "k_cap": k_cap,
+                "num_transmitters": n_tx,
+                "dense_stack_bytes": dense_stack_bytes,
+                "sparse_wire_bytes": wire_bytes,
+                "wire_vs_dense_ratio": round(wire_bytes / dense_stack_bytes, 4),
+                "max_agg_intermediate_elems": max_agg_elems,
+                "dense_stack_elems": n_tx * n_samples * vocab,
+                "agg_dense_stack_free": True,  # asserted above
+            },
+            "notes": (
+                "fused_host = PR-2 fused client phase AS SHIPPED (full-vocab "
+                "supervised head) + host server phase over densified (N,P,V) "
+                "stacks; fused_host_cls = same host pipeline with this PR's "
+                "class-column supervised head (isolates the e2e-specific "
+                "win); fused_e2e = whole round as ONE compiled call over the "
+                f"sparse (values,indices,mask) wire; e2e_scan{scan_rounds} = "
+                f"{scan_rounds} rounds per dispatch (run_rounds), per-round "
+                "figure.  Interleaved min-of-reps on this noisy 2-core CPU "
+                "container."
+            ),
+        }
+        with open(out_json, "w") as f:
+            json.dump(record, f, indent=1)
+
+    return [
+        ("round_fused_host", us["fused_host"], f"{shape};pr2-as-shipped"),
+        ("round_fused_host_cls", us["fused_host_cls"], f"{shape};cls-head"),
+        ("round_fused_e2e", us["fused_e2e"],
+         f"{shape};vs_host={speedups['e2e_vs_fused_host']:.2f}x"),
+        (f"round_e2e_scan{scan_rounds}", us[f"e2e_scan{scan_rounds}"],
+         f"{shape};vs_host={speedups[f'scan{scan_rounds}_vs_fused_host']:.2f}x"),
+    ]
+
+
 if __name__ == "__main__":
     quick = "--quick" in sys.argv
+    round_only = "--round-only" in sys.argv
+    engine_only = "--engine-only" in sys.argv
     # quick runs get their own file so they never clobber the committed
     # full-size record that README cites
-    out = os.path.join(
-        _REPO_ROOT, "BENCH_engine.quick.json" if quick else "BENCH_engine.json"
-    )
-    rows = bench(quick=quick, out_json=out)
-    for name, us, derived in rows:
-        print(f"{name},{us:.0f},{derived}")
-    with open(out) as f:
-        rec = json.load(f)
-    for k, v in rec["speedups"].items():
-        print(f"{k}: {v:.2f}x")
-    print(f"-> {out}")
+    suffix = "quick.json" if quick else "json"
+    jobs = []
+    if not round_only:
+        jobs.append((bench, os.path.join(_REPO_ROOT, f"BENCH_engine.{suffix}")))
+    if not engine_only:
+        jobs.append((bench_round, os.path.join(_REPO_ROOT, f"BENCH_round.{suffix}")))
+    for fn, out in jobs:
+        rows = fn(quick=quick, out_json=out)
+        for name, us, derived in rows:
+            print(f"{name},{us:.0f},{derived}")
+        with open(out) as f:
+            rec = json.load(f)
+        for k, v in rec["speedups"].items():
+            print(f"{k}: {v:.2f}x")
+        print(f"-> {out}")

@@ -33,6 +33,7 @@ def main() -> None:
     benches = {
         "kernel": kernel_bench.bench,
         "engine": engine_bench.bench,
+        "round": engine_bench.bench_round,
         "agg": agg_ablation.bench,
         "fig2": fig2_accuracy.bench,
         "fig3": fig3_comm.bench,

@@ -11,9 +11,11 @@ Run:  PYTHONPATH=src python examples/fed_finetune.py [rounds] [engine]
 ``engine`` is ``batched`` (default: the whole selected cohort advances as
 single vmapped/jitted per-phase steps), ``fused`` (the entire client phase
 — distill, fine-tune, public inference, adaptive top-k — as ONE donated
-jitted call per round) or ``sequential`` (the bit-compatible
-one-client-at-a-time reference) — see FedConfig.engine.  All engines use
-the last-position-only LM head (FedConfig.last_only).
+jitted call per round), ``fused_e2e`` (the WHOLE round — client phase plus
+sparse-wire aggregation, server distillation and broadcast — as one
+compiled call) or ``sequential`` (the bit-compatible one-client-at-a-time
+reference) — see FedConfig.engine.  All engines use the
+last-position-only LM head (FedConfig.last_only).
 """
 
 import os

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 
 __all__ = [
     "kl_divergence",
+    "teacher_log_probs",
+    "kl_divergence_from_log_probs",
     "logits_distill_loss",
     "lora_projection_loss",
     "total_distill_loss",
@@ -73,6 +75,50 @@ def kl_divergence(
     log_q = _log_softmax(s)
     p = jnp.exp(log_p)
     per_row = jnp.sum(p * (log_p - log_q), axis=-1)
+    kl = jnp.mean(per_row)
+    if scale_by_t2:
+        kl = kl * (temperature**2)
+    return kl
+
+
+def teacher_log_probs(
+    logits: jax.Array,
+    temperature: float = DEFAULT_TEMPERATURE,
+    *,
+    mask: jax.Array | None = None,
+) -> jax.Array:
+    """Precompute the TEACHER side of eq. 9, ``log σ(t/T)``.
+
+    Within one round the teacher (the broadcast K_g for the clients, the
+    aggregated K_g for the server) is a constant: recomputing its softmax
+    inside every client's vmapped loss and every distill step is pure waste
+    — the fused-e2e round computes it ONCE and reuses it across the whole
+    cohort and every server step.  Bit-identical to the log-softmax
+    :func:`kl_divergence` performs internally on the same inputs.
+    """
+    t = logits / temperature
+    if mask is not None:
+        t = jnp.where(mask, t, jnp.asarray(-1e30, dtype=t.dtype))
+    return _log_softmax(t)
+
+
+def kl_divergence_from_log_probs(
+    teacher_log_p: jax.Array,
+    student_logits: jax.Array,
+    temperature: float = DEFAULT_TEMPERATURE,
+    *,
+    mask: jax.Array | None = None,
+    scale_by_t2: bool = True,
+) -> jax.Array:
+    """:func:`kl_divergence` with the teacher distribution precomputed by
+    :func:`teacher_log_probs` (same ``mask``/``temperature``); identical
+    math on the student side, so the two agree bit-for-bit."""
+    s = student_logits / temperature
+    if mask is not None:
+        s = jnp.where(mask, s, jnp.asarray(-1e30, dtype=s.dtype))
+    log_q = _log_softmax(s)
+    p = jnp.exp(teacher_log_p)
+    per_row = jnp.sum(p * (teacher_log_p - log_q), axis=-1)
     kl = jnp.mean(per_row)
     if scale_by_t2:
         kl = kl * (temperature**2)

@@ -32,6 +32,7 @@ __all__ = [
     "topk_upload_bits",
     "full_logits_bits",
     "lora_projection_bits",
+    "wire_uplink_bits",
 ]
 
 
@@ -45,6 +46,20 @@ def topk_upload_bits(num_samples: int, k: int, vocab: int, value_bits: int = 16)
 
 def lora_projection_bits(num_samples: int, rank: int, value_bits: int = 16) -> int:
     return num_samples * rank * value_bits
+
+
+def wire_uplink_bits(
+    num_samples: int, ks: Iterable[int], vocab: int, value_bits: int = 16
+) -> int:
+    """On-air bits of a whole cohort's sparse wire payload
+    (:class:`repro.core.topk.SparseWire`): only the MASKED-IN (value, index)
+    entries are transmitted — the static ``k_cap`` padding is a server-side
+    representation artifact, exactly like dense zero-padding, so the wire
+    format costs byte-for-byte what the per-client top-k manifests say:
+    ``Σ_n samples · k_n · d`` (k == 0 stragglers contribute nothing)."""
+    return sum(
+        topk_upload_bits(num_samples, k, vocab, value_bits) for k in ks if k > 0
+    )
 
 
 @dataclasses.dataclass(frozen=True)

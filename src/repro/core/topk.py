@@ -28,12 +28,16 @@ import jax.numpy as jnp
 __all__ = [
     "BISECTION_ITERS",
     "SparseLogits",
+    "SparseWire",
     "topk_sparsify",
     "topk_mask_dense",
     "topk_mask_batch",
     "topk_mask_dynamic",
     "densify",
     "sparsify_batch",
+    "sparsify_wire",
+    "wire_densify",
+    "wire_support",
     "payload_entries",
 ]
 
@@ -169,6 +173,83 @@ def topk_mask_dynamic(logits: jax.Array, k: jax.Array) -> jax.Array:
     lo, hi = jax.lax.fori_loop(0, BISECTION_ITERS, body, (lo, hi))
     keep = (x >= lo[..., None]) & (kk > 0)[..., None]
     return jnp.where(keep, logits, jnp.zeros_like(logits))
+
+
+class SparseWire(NamedTuple):
+    """The cohort's sparse uplink as ONE fixed-width wire format (PR-3).
+
+    What the paper's clients actually put on the air is ``(value, index)``
+    pairs; the server never needs the ``(N, B, V)`` densified stacks the
+    dense engines build — at 50k+ vocabularies those stacks are the dominant
+    aggregation memory traffic.  This triple carries every client's upload
+    at a common static width ``k_cap`` (>= every client's adaptive ``k``),
+    with the *explicit* per-entry transmit mask that the dense ``!= 0``
+    sentinel could only approximate (a transmitted logit that is exactly 0.0
+    is still transmitted):
+
+    values:  (N, ..., k_cap) top-k logit values (0 where not transmitted).
+    indices: (N, ..., k_cap) int32 vocab indices (valid even when masked).
+    mask:    (N, ..., k_cap) bool — True for entries actually transmitted;
+             client n's row budget ``k_n`` masks entries ``[k_n:]``; a
+             dropped straggler (k == 0) is all-False.
+    vocab:   static python int — full dimensionality c.
+    """
+
+    values: jax.Array
+    indices: jax.Array
+    mask: jax.Array
+    vocab: int
+
+    @property
+    def k_cap(self) -> int:
+        return int(self.values.shape[-1])
+
+
+def sparsify_wire(logits: jax.Array, ks: jax.Array, k_cap: int) -> SparseWire:
+    """Per-client adaptive top-k of a stacked ``(N, ..., vocab)`` tensor as
+    the sparse wire format, with the budgets ``ks`` as DATA (int32,
+    broadcastable to ``logits.shape[:-1]``; typically ``(N,)`` — one budget
+    per client).
+
+    One ``lax.top_k`` at the static width ``k_cap`` serves every client;
+    client i's entries beyond its own ``ks[i]`` are masked out.  Because
+    ``lax.top_k`` is a stable total-order select, the unmasked entries equal
+    ``topk_sparsify(logits[i], ks[i])`` exactly — including ties — so
+    ``wire_densify(sparsify_wire(x, ks, k_cap)) == topk_mask_batch(x, ks)``
+    bit-for-bit whenever ``k_cap >= max(ks)``.
+    """
+    vocab = logits.shape[-1]
+    k_cap = int(min(k_cap, vocab))
+    values, indices = jax.lax.top_k(logits, k_cap)
+    kk = jnp.clip(jnp.asarray(ks, jnp.int32), 0, vocab)
+    # pad trailing sample axes so a (N,) budget broadcasts over (N, ..., k_cap)
+    kk = kk.reshape(kk.shape + (1,) * (values.ndim - kk.ndim))
+    mask = jnp.broadcast_to(
+        jnp.arange(k_cap, dtype=jnp.int32) < kk, values.shape
+    )
+    return SparseWire(
+        values=jnp.where(mask, values, jnp.zeros_like(values)),
+        indices=indices.astype(jnp.int32),
+        mask=mask,
+        vocab=vocab,
+    )
+
+
+def wire_densify(wire: SparseWire) -> jax.Array:
+    """Scatter a wire payload back to the dense ``(N, ..., vocab)`` stack the
+    dense aggregation oracle consumes (zeros off the transmitted support)."""
+    batch_shape = wire.values.shape[:-1]
+    dense = jnp.zeros(batch_shape + (wire.vocab,), dtype=wire.values.dtype)
+    return _scatter_last(dense, wire.indices, jnp.where(wire.mask, wire.values, 0))
+
+
+def wire_support(wire: SparseWire) -> jax.Array:
+    """Dense ``(N, ..., vocab)`` bool transmit mask — which dimensions each
+    client actually transmitted (the explicit-sentinel companion of
+    :func:`wire_densify`; True even where the transmitted value is 0.0)."""
+    batch_shape = wire.values.shape[:-1]
+    dense = jnp.zeros(batch_shape + (wire.vocab,), dtype=jnp.float32)
+    return _scatter_last(dense, wire.indices, wire.mask.astype(jnp.float32)) > 0
 
 
 def sparsify_batch(logits: jax.Array, k: int) -> SparseLogits:

@@ -3,6 +3,7 @@ from repro.fed.engine import (
     BatchedEngine,
     BroadcastState,
     ClientPhase,
+    FusedE2EEngine,
     FusedEngine,
     SequentialEngine,
     make_engine,
@@ -20,6 +21,7 @@ __all__ = [
     "run_federated",
     "BatchedEngine",
     "FusedEngine",
+    "FusedE2EEngine",
     "SequentialEngine",
     "BroadcastState",
     "ClientPhase",

@@ -48,8 +48,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.channel import BatchedChannelState, ChannelState, topk_budget_batch
-from repro.core.protocol import UplinkPayload
-from repro.core.topk import densify, topk_mask_batch
+from repro.core.protocol import UplinkPayload, downlink_bits
+from repro.core.topk import SparseWire, densify, topk_mask_batch
 from repro.fed import steps as fed_steps
 from repro.fed.client import Client, make_upload_payload
 from repro.lora import merge_lora, split_lora
@@ -60,9 +60,23 @@ __all__ = [
     "SequentialEngine",
     "BatchedEngine",
     "FusedEngine",
+    "FusedE2EEngine",
     "make_engine",
     "tree_stack",
+    "k_cap_bucket",
 ]
+
+
+def k_cap_bucket(ks: Sequence[int], vocab: int) -> int:
+    """Static sparse-wire width for a round: the next power of two >=
+    max(ks), clamped to the vocabulary.  Bucketing keeps the number of
+    distinct compiled round executables at O(log2 V) while the adaptive
+    budgets themselves stay DATA (the transmit mask)."""
+    need = max([k for k in ks] + [1])
+    cap = 1
+    while cap < need:
+        cap *= 2
+    return min(cap, vocab)
 
 
 def tree_stack(trees: Sequence) -> object:
@@ -104,13 +118,16 @@ class ClientPhase:
 
     ``dense``/``h`` hold only the ``num_transmitters`` clients that actually
     uploaded (leading axis), in cohort order; ``ks`` covers every *selected*
-    client (0 marks a dropped straggler).
+    client (0 marks a dropped straggler).  The fused-e2e engine reports the
+    uplink as the sparse wire format instead (``sparse``; ``dense`` stays
+    None — no (T, P, V) stack exists on that path).
     """
 
     dense: jax.Array | None  # (T, P, V) densified top-k logits
     h: jax.Array | None  # (T, P, r) LoRA projections
     payloads: list[UplinkPayload]
     ks: list[int]
+    sparse: SparseWire | None = None  # (T, P, k_cap) wire triple
 
     @property
     def uplink_bytes(self) -> float:
@@ -220,6 +237,7 @@ class BatchedEngine:
         value_bits: int = 16,
         k_min: int = 1,
         last_only: bool = True,
+        class_head_only: bool = True,
     ):
         self.clients = clients
         self.cfg = cfg
@@ -235,7 +253,8 @@ class BatchedEngine:
         self._frozen = frozens[0] if self._shared else tree_stack(frozens)
         self._opt = tree_stack([c.opt for c in clients])
         self._train = fed_steps.make_batched_finetune_step(
-            cfg, num_classes, lr=lr, shared_backbone=self._shared, last_only=last_only
+            cfg, num_classes, lr=lr, shared_backbone=self._shared, last_only=last_only,
+            class_head_only=class_head_only,
         )
         self._distill = fed_steps.make_batched_distill_step(
             cfg, lr=distill_lr, temperature=temperature, lam=lam,
@@ -382,9 +401,11 @@ class FusedEngine(BatchedEngine):
     identical to the other engines.
 
     ``shard_clients=True`` additionally places the leading client axis over
-    the process's devices with ``shard_map`` (cohort size must divide the
-    device count); on CPU this is testable via
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    the process's devices with ``shard_map``; a cohort that does not divide
+    the device count is padded with masked duplicate rows (``k = 0`` — they
+    transmit nothing, are excluded from aggregation, and their advanced
+    state is discarded before the scatter-back).  On CPU this is testable
+    via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
     """
 
     name = "fused"
@@ -407,12 +428,14 @@ class FusedEngine(BatchedEngine):
         last_only: bool = True,
         shard_clients: bool = False,
         use_kernels: bool = False,
+        class_head_only: bool = True,
     ):
         super().__init__(
             clients, cfg, num_classes=num_classes, lr=lr, distill_lr=distill_lr,
             temperature=temperature, lam=lam, local_steps=local_steps,
             distill_steps=distill_steps, restrict_to_support=restrict_to_support,
             value_bits=value_bits, k_min=k_min, last_only=last_only,
+            class_head_only=class_head_only,
         )
         self.shard_clients = shard_clients
 
@@ -423,7 +446,7 @@ class FusedEngine(BatchedEngine):
                 restrict_to_support=restrict_to_support,
                 local_steps=local_steps, distill_steps=n_distill,
                 shared_backbone=self._shared, last_only=last_only,
-                use_kernels=use_kernels,
+                use_kernels=use_kernels, class_head_only=class_head_only,
             )
             if shard_clients:
                 fn = self._shard_over_clients(fn)
@@ -460,14 +483,23 @@ class FusedEngine(BatchedEngine):
     ) -> ClientPhase:
         cohort = [self.clients[i] for i in sel]
         states = list(states)
-        if self.shard_clients and len(cohort) % jax.device_count() != 0:
-            raise ValueError(
-                f"shard_clients: cohort size {len(cohort)} must divide evenly "
-                f"over {jax.device_count()} devices"
-            )
+        # Cohort sizes that do not divide the device count are padded with
+        # duplicate rows of client sel[0] at k = 0: they compute alongside
+        # the cohort but transmit nothing, and everything about them is
+        # discarded below (their batches are COPIES — sel[0]'s rng stream
+        # advances exactly once).
+        pad = (
+            (-len(cohort)) % jax.device_count() if self.shard_clients else 0
+        )
+        sel_call = list(sel) + [sel[0]] * pad
 
-        idx, lora, frozen, opt = self._gather_cohort(sel)
+        idx, lora, frozen, opt = self._gather_cohort(sel_call)
         batches = self._stacked_batches(cohort, step_major=False)  # (C, S, ...)
+        if pad:
+            batches = {
+                key: jnp.concatenate([v, jnp.repeat(v[:1], pad, axis=0)])
+                for key, v in batches.items()
+            }
         n_samples = int(pub_tokens.shape[0])
         ks = self._budgets(states, n_samples, adaptive_k, len(cohort))
 
@@ -481,8 +513,15 @@ class FusedEngine(BatchedEngine):
                 (n_samples, self.cfg.vocab_size), jnp.float32), None
         lora, opt, dense_all, h_all = step(
             lora, frozen, opt, g_tokens, g_logits, g_h, batches, pub_tokens,
-            jnp.asarray(ks, jnp.int32),
+            jnp.asarray(ks + [0] * pad, jnp.int32),
         )
+        if pad:  # drop the padded rows before anything observes them
+            real = jnp.arange(len(cohort))
+            lora = jax.tree.map(lambda x: x[real], lora)
+            opt = jax.tree.map(lambda x: x[real], opt)
+            dense_all = dense_all[real]
+            h_all = h_all[real] if h_all is not None else None
+            idx = idx[: len(cohort)]
 
         active, payloads, rank = self._upload_manifests(
             cohort, states, ks, n_samples, send_h
@@ -498,7 +537,300 @@ class FusedEngine(BatchedEngine):
         return ClientPhase(dense=dense, h=h_out, payloads=payloads, ks=ks)
 
 
+class FusedE2EEngine(FusedEngine):
+    """Whole-round single-executable engine: client phase AND server phase
+    (adaptive aggregation, server distillation, broadcast recomputation) as
+    ONE donated, compiled call per round — and the uplink crosses the
+    engine/server boundary as the sparse wire format ``(values, indices,
+    transmit mask)`` of width ``k_cap`` instead of a densified ``(C, P, V)``
+    stack, so the aggregation working set is O(C·P·k_cap).
+
+    The engine owns the server LLM's state for the duration of the run
+    (pulled from the :class:`repro.fed.server.Server` at construction);
+    :meth:`sync_server` writes the merged parameters back for evaluation,
+    and :meth:`broadcast_state` exposes the in-program-computed broadcast to
+    the round loop.  Cold-server round 0 and all-dropped rounds are DATA
+    (masks) inside the executable, not Python control flow, so one
+    executable serves every round of a run (per power-of-two ``k_cap``
+    bucket — see :func:`k_cap_bucket`).
+
+    :meth:`run_rounds` additionally scans R whole rounds inside one
+    compiled call (steady-state dispatch fully amortised; no per-round
+    evaluation inside).
+    """
+
+    name = "fused_e2e"
+    handles_server = True
+
+    def __init__(
+        self,
+        clients: list[Client],
+        cfg: ModelConfig,
+        *,
+        server,
+        num_classes: int,
+        lr: float = 1e-3,
+        distill_lr: float = 1e-3,
+        temperature: float = 2.0,
+        lam: float = 0.03,
+        local_steps: int = 4,
+        distill_steps: int = 2,
+        server_distill_steps: int = 12,
+        aggregation: str = "adaptive",
+        restrict_to_support: bool = False,
+        value_bits: int = 16,
+        k_min: int = 1,
+        last_only: bool = True,
+        shard_clients: bool = False,
+        use_kernels: bool = False,
+    ):
+        if shard_clients:
+            raise NotImplementedError(
+                "fused_e2e does not place the client axis over devices yet "
+                "(the server phase is single-model); use engine='fused' for "
+                "shard_clients"
+            )
+        super().__init__(
+            clients, cfg, num_classes=num_classes, lr=lr, distill_lr=distill_lr,
+            temperature=temperature, lam=lam, local_steps=local_steps,
+            distill_steps=distill_steps, restrict_to_support=restrict_to_support,
+            value_bits=value_bits, k_min=k_min, last_only=last_only,
+            use_kernels=use_kernels,
+        )
+        self.server = server
+        self._fn_kwargs = dict(
+            lr=lr, distill_lr=distill_lr, temperature=temperature, lam=lam,
+            restrict_to_support=restrict_to_support, local_steps=local_steps,
+            distill_steps=distill_steps,
+            server_distill_steps=server_distill_steps,
+            aggregation=aggregation, shared_backbone=self._shared,
+            last_only=last_only, use_kernels=use_kernels,
+        )
+        self._num_classes = num_classes
+        self._s_lora, self._s_frozen = split_lora(server.params)
+        self._s_opt = server.opt
+        # broadcast knowledge computed in-program, carried across rounds
+        self._b_tokens: jax.Array | None = None
+        self._b_logits: jax.Array | None = None
+        self._b_h: jax.Array | None = None
+        self._steps: dict = {}
+        self._drivers: dict = {}
+
+    # -- compiled-step caches -------------------------------------------
+    def _e2e_fn(self, k_cap: int, send_h: bool):
+        """The unjitted whole-round body for one (k_cap, send_h) bucket."""
+        return fed_steps.make_fused_e2e_round_fn(
+            self.cfg, self.server.cfg, self._num_classes,
+            k_cap=k_cap, send_h=send_h, **self._fn_kwargs,
+        )
+
+    def _e2e_step(self, k_cap: int, send_h: bool):
+        key = (k_cap, send_h)
+        if key not in self._steps:
+            self._steps[key] = jax.jit(
+                self._e2e_fn(k_cap, send_h), donate_argnums=(0, 2, 3, 5)
+            )
+        return self._steps[key]
+
+    def _cold_broadcast(self, pub_tokens: jax.Array, n_samples: int):
+        """Round-0 placeholder g_* operands (same arg structure as a warm
+        round; ``g_valid=False`` discards their effect in-program)."""
+        g_logits = jnp.zeros((n_samples, self.server.cfg.vocab_size), jnp.float32)
+        if self.server.cfg.lora is not None:
+            g_h = jnp.zeros((n_samples, self.server.cfg.lora.rank), jnp.float32)
+        else:
+            g_h = None
+        return pub_tokens, g_logits, g_h
+
+    # -- single whole round: ONE compiled call ---------------------------
+    def run_round(
+        self,
+        sel: Sequence[int],
+        pub_tokens: jax.Array,
+        bcast: BroadcastState | None,
+        states: BatchedChannelState | Sequence[ChannelState],
+        *,
+        adaptive_k: bool,
+        send_h: bool,
+    ) -> ClientPhase:
+        cohort = [self.clients[i] for i in sel]
+        states = list(states)
+        idx, lora, frozen, opt = self._gather_cohort(sel)
+        batches = self._stacked_batches(cohort, step_major=False)
+        n_samples = int(pub_tokens.shape[0])
+        ks = self._budgets(states, n_samples, adaptive_k, len(cohort))
+        k_cap = k_cap_bucket(ks, self.cfg.vocab_size)
+
+        if bcast is not None:
+            g_tokens, g_logits, g_h = bcast.tokens, bcast.logits, bcast.h
+            g_valid = True
+        else:
+            g_tokens, g_logits, g_h = self._cold_broadcast(pub_tokens, n_samples)
+            g_valid = False
+
+        step = self._e2e_step(k_cap, send_h)
+        (lora, opt, self._s_lora, self._s_opt,
+         values, indices, b_logits, b_h) = step(
+            lora, frozen, opt, self._s_lora, self._s_frozen, self._s_opt,
+            g_tokens, g_logits, g_h, jnp.asarray(g_valid),
+            batches, pub_tokens, jnp.asarray(ks, jnp.int32),
+        )
+        self._b_tokens, self._b_logits, self._b_h = pub_tokens, b_logits, b_h
+
+        active, payloads, _rank = self._upload_manifests(
+            cohort, states, ks, n_samples, send_h
+        )
+        sparse = None
+        if active:
+            take = jnp.asarray(active)
+            ks_active = jnp.asarray([ks[i] for i in active], jnp.int32)
+            mask = (
+                jnp.arange(k_cap, dtype=jnp.int32)[None, None, :]
+                < ks_active[:, None, None]
+            )
+            sparse = SparseWire(
+                values=values[take],
+                indices=indices[take],
+                mask=jnp.broadcast_to(mask, values[take].shape),
+                vocab=self.cfg.vocab_size,
+            )
+
+        self._scatter_cohort(idx, lora, opt)
+        return ClientPhase(dense=None, h=None, payloads=payloads, ks=ks, sparse=sparse)
+
+    # -- multi-round scan driver ------------------------------------------
+    def _rounds_driver(self, k_cap: int, send_h: bool, num_rounds: int):
+        key = (k_cap, send_h, num_rounds)
+        if key in self._drivers:
+            return self._drivers[key]
+        fn = self._e2e_fn(k_cap, send_h)
+        has_h = self.server.cfg.lora is not None
+
+        def driver(fleet_lora, fleet_opt, s_lora, s_opt, frozen, s_frozen,
+                   g_tokens, g_logits, g_h, g_valid, sels, kss, pubs, batches):
+            def body(carry, xs):
+                fleet_lora, fleet_opt, s_lora, s_opt, g_tokens, g_logits, g_h, g_valid = carry
+                sel, ks, pub, bat = xs
+                lora = jax.tree.map(lambda x: x[sel], fleet_lora)
+                opt = jax.tree.map(lambda x: x[sel], fleet_opt)
+                lora, opt, s_lora, s_opt, _v, _i, b_logits, b_h = fn(
+                    lora, frozen, opt, s_lora, s_frozen, s_opt,
+                    g_tokens, g_logits, g_h if has_h else None, g_valid,
+                    bat, pub, ks,
+                )
+                fleet_lora = jax.tree.map(
+                    lambda full, new: full.at[sel].set(new), fleet_lora, lora
+                )
+                fleet_opt = jax.tree.map(
+                    lambda full, new: full.at[sel].set(new), fleet_opt, opt
+                )
+                carry = (
+                    fleet_lora, fleet_opt, s_lora, s_opt,
+                    pub, b_logits, b_h if has_h else g_h, jnp.ones((), bool),
+                )
+                return carry, None
+
+            carry, _ = jax.lax.scan(
+                body,
+                (fleet_lora, fleet_opt, s_lora, s_opt,
+                 g_tokens, g_logits, g_h, g_valid),
+                (sels, kss, pubs, batches),
+                length=num_rounds,
+            )
+            return carry
+
+        jitted = jax.jit(driver, donate_argnums=(0, 1, 2, 3))
+        self._drivers[key] = jitted
+        return jitted
+
+    def run_rounds(
+        self,
+        sels: Sequence[Sequence[int]],
+        pubs: Sequence[jax.Array],
+        states_per_round: Sequence,
+        *,
+        adaptive_k: bool,
+        send_h: bool,
+    ) -> list[tuple[list[int], list[UplinkPayload]]]:
+        """Run R whole federated rounds as ONE compiled ``lax.scan`` — the
+        steady-state amortised driver (dispatch cost O(1) for the block).
+
+        Per-round cohort selection/channel budgets stay host-side scalar
+        math (ledger parity with the round-at-a-time path); there is no
+        per-round evaluation inside the block.  Returns the per-round
+        ``(ks, payload manifests)`` for accounting; fleet/server/broadcast
+        state advance in place exactly as R ``run_round`` calls would.
+        """
+        # check BEFORE consuming any client's private rng/batch stream, so
+        # a caller can fall back to per-round run_round with intact state
+        if not self._shared:
+            raise NotImplementedError("run_rounds requires a shared backbone")
+        num_rounds = len(sels)
+        n_samples = int(pubs[0].shape[0])
+        all_ks, all_payloads, batch_list = [], [], []
+        for sel, states in zip(sels, states_per_round):
+            cohort = [self.clients[i] for i in sel]
+            states = list(states)
+            ks = self._budgets(states, n_samples, adaptive_k, len(cohort))
+            _active, payloads, _rank = self._upload_manifests(
+                cohort, states, ks, n_samples, send_h
+            )
+            all_ks.append(ks)
+            all_payloads.append(payloads)
+            batch_list.append(self._stacked_batches(cohort, step_major=False))
+        k_cap = k_cap_bucket([k for ks in all_ks for k in ks], self.cfg.vocab_size)
+
+        sels_arr = jnp.asarray(np.asarray(sels), jnp.int32)  # (R, C)
+        kss_arr = jnp.asarray(np.asarray(all_ks), jnp.int32)  # (R, C)
+        pubs_arr = jnp.stack([jnp.asarray(p) for p in pubs])  # (R, P, L)
+        batches = jax.tree.map(lambda *xs: jnp.stack(xs), *batch_list)
+
+        if self._b_logits is not None:
+            g_tokens, g_logits, g_h = self._b_tokens, self._b_logits, self._b_h
+            g_valid = True
+        else:
+            g_tokens, g_logits, g_h = self._cold_broadcast(pubs_arr[0], n_samples)
+            g_valid = False
+
+        driver = self._rounds_driver(k_cap, send_h, num_rounds)
+        (self._lora, self._opt, self._s_lora, self._s_opt,
+         self._b_tokens, self._b_logits, self._b_h, _valid) = driver(
+            self._lora, self._opt, self._s_lora, self._s_opt,
+            self._frozen, self._s_frozen,
+            g_tokens, g_logits, g_h, jnp.asarray(g_valid),
+            sels_arr, kss_arr, pubs_arr, batches,
+        )
+        return list(zip(all_ks, all_payloads))
+
+    # -- server-state plumbing for the round loop ------------------------
+    def broadcast_state(self, pub_tokens: jax.Array) -> BroadcastState:
+        """The in-program-refreshed broadcast of the LAST executed round, as
+        the host-side carrier (byte accounting identical to
+        :meth:`repro.fed.server.Server.broadcast`)."""
+        assert self._b_logits is not None, "no round has run yet"
+        rank = (
+            self.server.cfg.lora.rank
+            if (self.server.cfg.lora is not None and self._b_h is not None)
+            else None
+        )
+        bits = downlink_bits(
+            int(self._b_logits.shape[0]), int(self._b_logits.shape[-1]), rank
+        )
+        return BroadcastState(
+            tokens=pub_tokens, logits=self._b_logits, h=self._b_h, bits=bits
+        )
+
+    def sync_server(self) -> None:
+        """Materialise the engine-held server state back onto the Server
+        object (for evaluation / checkpointing)."""
+        self.server.params = merge_lora(self._s_lora, self._s_frozen)
+        self.server.opt = self._s_opt
+
+
 def make_engine(kind: str, clients: list[Client], cfg: ModelConfig, **kwargs):
+    if kind != "fused_e2e":
+        for e2e_only in ("server", "server_distill_steps", "aggregation"):
+            kwargs.pop(e2e_only, None)
     if kind == "sequential":
         return SequentialEngine(
             clients, cfg,
@@ -510,6 +842,9 @@ def make_engine(kind: str, clients: list[Client], cfg: ModelConfig, **kwargs):
         return BatchedEngine(clients, cfg, **kwargs)
     if kind == "fused":
         return FusedEngine(clients, cfg, **kwargs)
+    if kind == "fused_e2e":
+        return FusedE2EEngine(clients, cfg, **kwargs)
     raise ValueError(
-        f"unknown engine: {kind!r} (expected 'sequential', 'batched' or 'fused')"
+        f"unknown engine: {kind!r} (expected 'sequential', 'batched', 'fused'"
+        " or 'fused_e2e')"
     )

@@ -34,8 +34,12 @@ _CACHE: dict = {}
 
 def _supervised_step(cfg: ModelConfig, num_classes: int, lr: float, last_only: bool):
     def loss_fn(params, batch):
-        # last_only head: classification reads the final position exclusively
-        logits, aux = forward(params, cfg, {"tokens": batch["tokens"]}, last_only=last_only)
+        # last_only head: classification reads the final position exclusively,
+        # and only the num_classes head columns (bit-identical to slicing)
+        logits, aux = forward(
+            params, cfg, {"tokens": batch["tokens"]}, last_only=last_only,
+            head_cols=num_classes if last_only else None,
+        )
         last = logits if last_only else logits[:, -1, :]
         cls = fed_steps.class_logits(last, num_classes)
         logp = jax.nn.log_softmax(cls.astype(jnp.float32), axis=-1)

@@ -36,7 +36,7 @@ from repro.fed.steps import make_eval_fn
 __all__ = ["FedConfig", "FedRun", "run_federated", "METHODS"]
 
 Method = Literal["adald", "adaptive", "zeropad", "all_logits"]
-Engine = Literal["sequential", "batched", "fused"]
+Engine = Literal["sequential", "batched", "fused", "fused_e2e"]
 
 METHODS: dict[str, dict] = {
     "adald": dict(aggregation="adaptive", send_h=True, adaptive_k=True),
@@ -51,10 +51,12 @@ class FedConfig:
     """Paper Table I defaults (reduced-scale knobs exposed)."""
 
     method: Method = "adald"
-    # Client-phase executor: "batched" stacks the selected cohort along a
-    # leading client axis and runs each phase as one vmapped/jitted step;
-    # "fused" additionally collapses every phase into ONE jitted round body
-    # (adaptive k as data); "sequential" is the bit-compatible
+    # Round executor: "batched" stacks the selected cohort along a leading
+    # client axis and runs each phase as one vmapped/jitted step; "fused"
+    # additionally collapses the whole CLIENT phase into ONE jitted round
+    # body (adaptive k as data); "fused_e2e" folds the SERVER phase in too
+    # (sparse-wire aggregation + server distillation + broadcast — a whole
+    # round is one compiled call); "sequential" is the bit-compatible
     # one-client-at-a-time reference.
     engine: Engine = "batched"
     # Compute the LM head (class/public/distill logits) on the LAST position
@@ -215,7 +217,12 @@ def run_federated(
         last_only=fed.last_only,
         shard_clients=fed.shard_clients,
         use_kernels=fed.use_kernels,
+        # fused_e2e only: the engine owns the server phase too
+        server=server,
+        server_distill_steps=fed.server_distill_steps,
+        aggregation=preset["aggregation"],
     )
+    handles_server = getattr(engine, "handles_server", False)
 
     ledger = CommLedger()
     run = FedRun(ledger=ledger, server_acc=[], client_acc=[], mean_k=[])
@@ -239,13 +246,19 @@ def run_federated(
             adaptive_k=preset["adaptive_k"], send_h=preset["send_h"],
         )
 
-        if phase.dense is not None:
-            k_g, h_g = server.aggregate_dense(phase.dense, phase.h)
-            server.distill(pub_tokens, k_g, h_g)
-        # else: every selected client dropped this round -> no aggregation,
-        # the server's knowledge simply carries over.
-        g_logits, g_h, g_bits = server.broadcast(pub_tokens)
-        bcast = BroadcastState(tokens=pub_tokens, logits=g_logits, h=g_h, bits=g_bits)
+        if handles_server:
+            # fused_e2e: aggregation + server distillation + broadcast all
+            # happened inside the engine's single compiled round call.
+            bcast = engine.broadcast_state(pub_tokens)
+            engine.sync_server()
+        else:
+            if phase.dense is not None:
+                k_g, h_g = server.aggregate_dense(phase.dense, phase.h)
+                server.distill(pub_tokens, k_g, h_g)
+            # else: every selected client dropped this round -> no
+            # aggregation, the server's knowledge simply carries over.
+            g_logits, g_h, g_bits = server.broadcast(pub_tokens)
+            bcast = BroadcastState(tokens=pub_tokens, logits=g_logits, h=g_h, bits=g_bits)
 
         s_acc = evaluate(server.params, jnp.asarray(eval_tokens), jnp.asarray(eval_labels))
         c_acc = evaluate_client(

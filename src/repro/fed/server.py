@@ -7,9 +7,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.aggregation import AggregationMode, aggregate
+from repro.core.aggregation import AggregationMode, aggregate, aggregate_wire
 from repro.core.protocol import downlink_bits
-from repro.core.topk import densify
+from repro.core.topk import SparseWire, densify
 from repro.fed import steps as fed_steps
 from repro.fed.client import ClientUpload
 from repro.models import init as model_init
@@ -52,12 +52,32 @@ class Server:
         hs = [u.h for u in uploads if u.h is not None]
         return self.aggregate_dense(stack, jnp.stack(hs) if hs else None)
 
-    def aggregate_dense(self, stack: jax.Array, h_stack: jax.Array | None = None):
+    def aggregate_dense(
+        self,
+        stack: jax.Array,
+        h_stack: jax.Array | None = None,
+        *,
+        mask: jax.Array | None = None,
+    ):
         """Aggregate an already-densified (N, P, V) stack (+ optional (N, P, r)
         projection stack) — the batched engine's path; only clients that
         actually transmitted may appear in the stack (dropped stragglers are
-        excluded, never zero-padded in)."""
-        k_g = aggregate(stack, self.aggregation, use_kernel=self.use_kernels)
+        excluded, never zero-padded in).  ``mask`` is the optional explicit
+        (N, P, V) transmit mask; without it "transmitted" falls back to the
+        ``!= 0`` sentinel (which cannot see transmitted true zeros — see
+        :mod:`repro.core.aggregation`)."""
+        k_g = aggregate(stack, self.aggregation, mask=mask, use_kernel=self.use_kernels)
+        h_g = jnp.mean(h_stack, axis=0) if h_stack is not None else None
+        return k_g, h_g
+
+    def aggregate_sparse_wire(
+        self, wire: SparseWire, h_stack: jax.Array | None = None
+    ):
+        """Aggregate straight from the sparse (values, indices, mask) wire
+        format — O(N·P·k_cap) working set, no densified stack (the fused-e2e
+        engine runs this same math inside its compiled round; this entry
+        point serves callers holding a wire payload outside it)."""
+        k_g = aggregate_wire(wire, self.aggregation, use_kernel=self.use_kernels)
         h_g = jnp.mean(h_stack, axis=0) if h_stack is not None else None
         return k_g, h_g
 

@@ -19,8 +19,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.distill import total_distill_loss
-from repro.core.topk import topk_mask_dynamic
+from repro.core.aggregation import AggregationMode, aggregate_wire
+from repro.core.distill import (
+    kl_divergence_from_log_probs,
+    teacher_log_probs,
+    total_distill_loss,
+)
+from repro.core.topk import sparsify_wire, topk_mask_dynamic
 from repro.lora import merge_lora, split_lora
 from repro.models import forward
 from repro.optim import AdamWState, adamw_init, adamw_update
@@ -35,6 +40,7 @@ __all__ = [
     "make_batched_distill_step",
     "make_batched_public_logits",
     "make_fused_round_fn",
+    "make_fused_e2e_round_fn",
     "make_eval_fn",
     "init_lora_opt",
 ]
@@ -45,17 +51,29 @@ def class_logits(logits_last: jax.Array, num_classes: int) -> jax.Array:
     return logits_last[..., :num_classes]
 
 
-def last_logits(params, cfg: ModelConfig, batch: dict, *, last_only: bool = True):
+def last_logits(
+    params,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    last_only: bool = True,
+    head_cols: int | None = None,
+):
     """(B, V) last-position logits + Aux, via the cheap head when enabled.
 
     ``last_only=True`` (default) computes the LM head on the final hidden
     state only — a ~seq_len× cut in head FLOPs/memory, which dominates at
     the paper's 50k+ vocabularies; ``False`` keeps the seed behaviour of
     materialising (B, T, V) and slicing (the PR-1 reference, benchmarked
-    against in benchmarks/engine_bench.py).
+    against in benchmarks/engine_bench.py — ``head_cols`` is ignored there
+    so the historical reference keeps its full cost).
+
+    ``head_cols=k`` (with ``last_only``) computes only the first k head
+    columns — bit-identical to slicing, at k/V of the head FLOPs; the
+    supervised class losses/eval read ``num_classes`` columns only.
     """
     if last_only:
-        return forward(params, cfg, batch, last_only=True)
+        return forward(params, cfg, batch, last_only=True, head_cols=head_cols)
     logits, aux = forward(params, cfg, batch)
     return logits[:, -1, :], aux
 
@@ -76,13 +94,28 @@ def init_lora_opt(params, cfg: ModelConfig) -> AdamWState:
     return adamw_init(lora, state_dtype=cfg.optimizer_state_dtype)
 
 
-def _finetune_loss_fn(cfg: ModelConfig, num_classes: int, last_only: bool = True) -> Callable:
+def _finetune_loss_fn(
+    cfg: ModelConfig,
+    num_classes: int,
+    last_only: bool = True,
+    class_head_only: bool = True,
+) -> Callable:
     """loss(lora, frozen, batch) -> (nll + moe_aux, acc) — the shared core
-    of the sequential step, the batched cohort step and the fused round."""
+    of the sequential step, the batched cohort step and the fused round.
+
+    The supervised loss reads ``num_classes`` class logits only, so the
+    last-only path restricts the LM head to those columns (``head_cols`` —
+    bit-identical logits/gradients at num_classes/V of the head FLOPs).
+    ``class_head_only=False`` restores the full-vocab head of the PR-2
+    pipeline (kept benchable as the historical reference, like the PR-1
+    full-(B,T,V) head before it)."""
 
     def loss_fn(lora, frozen, batch):
         params = merge_lora(lora, frozen)
-        last, aux = last_logits(params, cfg, {"tokens": batch["tokens"]}, last_only=last_only)
+        last, aux = last_logits(
+            params, cfg, {"tokens": batch["tokens"]}, last_only=last_only,
+            head_cols=num_classes if (last_only and class_head_only) else None,
+        )
         cls = class_logits(last, num_classes)
         logp = jax.nn.log_softmax(cls.astype(jnp.float32), axis=-1)
         nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1).mean()
@@ -93,11 +126,16 @@ def _finetune_loss_fn(cfg: ModelConfig, num_classes: int, last_only: bool = True
 
 
 def _finetune_step_fn(
-    cfg: ModelConfig, num_classes: int, lr: float, weight_decay: float, last_only: bool = True
+    cfg: ModelConfig,
+    num_classes: int,
+    lr: float,
+    weight_decay: float,
+    last_only: bool = True,
+    class_head_only: bool = True,
 ) -> Callable:
     """Unjitted single-client fine-tune step over merged params."""
 
-    loss_fn = _finetune_loss_fn(cfg, num_classes, last_only)
+    loss_fn = _finetune_loss_fn(cfg, num_classes, last_only, class_head_only)
 
     def step(params, opt, batch):
         lora, frozen = split_lora(params)
@@ -118,12 +156,15 @@ def make_finetune_step(
     lr: float = 1e-3,
     weight_decay: float = 1e-3,
     last_only: bool = True,
+    class_head_only: bool = True,
 ) -> Callable:
     """Supervised local fine-tuning on private data (paper eq. 2), LoRA-only.
 
     step(params, opt, batch{tokens,labels}) -> (params, opt, metrics)
     """
-    return jax.jit(_finetune_step_fn(cfg, num_classes, lr, weight_decay, last_only))
+    return jax.jit(
+        _finetune_step_fn(cfg, num_classes, lr, weight_decay, last_only, class_head_only)
+    )
 
 
 @functools.lru_cache(maxsize=64)
@@ -135,6 +176,7 @@ def make_batched_finetune_step(
     weight_decay: float = 1e-3,
     shared_backbone: bool = True,
     last_only: bool = True,
+    class_head_only: bool = True,
 ) -> Callable:
     """One fine-tune update for a whole cohort at once.
 
@@ -151,7 +193,7 @@ def make_batched_finetune_step(
     comes from.  LoRA/opt buffers are donated.
     """
 
-    loss_fn = _finetune_loss_fn(cfg, num_classes, last_only)
+    loss_fn = _finetune_loss_fn(cfg, num_classes, last_only, class_head_only)
 
     def step(lora, frozen, opt, batch):
         (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(lora, frozen, batch)
@@ -188,6 +230,37 @@ def _distill_loss_fn(
             restrict_to_support=restrict_to_support,
         )
         return loss + 0.01 * aux.moe_aux, parts
+
+    return loss_fn
+
+
+def _distill_loss_cached_fn(
+    cfg: ModelConfig,
+    temperature: float,
+    lam: float,
+    last_only: bool = True,
+) -> Callable:
+    """loss(lora, frozen, tokens, t_logp, th_logp, support_mask) with the
+    TEACHER log-probs precomputed (:func:`repro.core.distill.
+    teacher_log_probs`) — the round-fused engines compute them once per
+    round instead of once per (client, step).  Bit-identical losses and
+    gradients to :func:`_distill_loss_fn` on the same teacher inputs (the
+    teacher side is a constant of the round; only the student side carries
+    gradients)."""
+
+    use_h = cfg.lora is not None
+
+    def loss_fn(lora, frozen, tokens, t_logp, th_logp, support_mask):
+        params = merge_lora(lora, frozen)
+        own, aux = last_logits(params, cfg, {"tokens": tokens}, last_only=last_only)
+        loss = kl_divergence_from_log_probs(
+            t_logp, own, temperature, mask=support_mask
+        )
+        if use_h and th_logp is not None:
+            loss = loss + lam * kl_divergence_from_log_probs(
+                th_logp, aux.lora_h, temperature
+            )
+        return loss + 0.01 * aux.moe_aux, {}
 
     return loss_fn
 
@@ -291,6 +364,79 @@ def make_batched_public_logits(
     return jax.jit(jax.vmap(one, in_axes=(0, frozen_ax, None)))
 
 
+def _client_round_core(
+    cfg: ModelConfig,
+    num_classes: int,
+    *,
+    lr: float,
+    weight_decay: float,
+    distill_lr: float,
+    temperature: float,
+    lam: float,
+    restrict_to_support: bool,
+    local_steps: int,
+    distill_steps: int,
+    last_only: bool,
+    gate_distill: bool,
+    kd_loss: Callable | None = None,
+    class_head_only: bool = True,
+) -> Callable:
+    """Per-client round body shared by the fused and fused-e2e round fns:
+    ``distill_steps`` distillation updates, ``local_steps`` supervised
+    updates (``lax.scan``), public last-position inference.
+
+    ``gate_distill=True`` makes the cold-server round DATA instead of
+    control flow: the distillation updates always run, and the traced bool
+    ``g_valid`` selects between the distilled and the untouched
+    (lora, opt) — one executable serves round 0 (no broadcast exists yet)
+    and every later round.  With ``gate_distill=False`` the caller bakes
+    ``distill_steps`` statically (the PR-2 two-variant scheme) and
+    ``g_valid`` is ignored.
+
+    ``kd_loss`` overrides the distillation loss; it is called as
+    ``kd_loss(lora, frozen, g_tokens, *kd_args)`` where ``kd_args`` is the
+    opaque teacher-knowledge tuple the caller threads through ``client_round``
+    (default: ``(g_logits, g_h)`` into :func:`_distill_loss_fn`; the e2e
+    round passes precomputed teacher log-probs into
+    :func:`_distill_loss_cached_fn` instead).
+    """
+    ft_loss = _finetune_loss_fn(cfg, num_classes, last_only, class_head_only)
+    if kd_loss is None:
+        kd_loss = _distill_loss_fn(cfg, temperature, lam, restrict_to_support, last_only)
+
+    def client_round(lora, frozen, opt, g_tokens, kd_args, g_valid, batches, pub_tokens):
+        # -- lines 5-7: local distillation against the broadcast knowledge --
+        lora0, opt0 = lora, opt
+        for _ in range(distill_steps):
+            (_, _), grads = jax.value_and_grad(kd_loss, has_aux=True)(
+                lora, frozen, g_tokens, *kd_args
+            )
+            lora, opt = adamw_update(grads, opt, lora, lr=distill_lr)
+        if gate_distill and distill_steps:
+            pick = lambda new, old: jnp.where(g_valid, new, old)
+            lora = jax.tree.map(pick, lora, lora0)
+            opt = jax.tree.map(pick, opt, opt0)
+
+        # -- line 8: local fine-tuning, scanned over the step axis --
+        def train_body(carry, batch):
+            lora, opt = carry
+            (_, _), grads = jax.value_and_grad(ft_loss, has_aux=True)(
+                lora, frozen, batch
+            )
+            lora, opt = adamw_update(grads, opt, lora, lr=lr, weight_decay=weight_decay)
+            return (lora, opt), None
+
+        (lora, opt), _ = jax.lax.scan(train_body, (lora, opt), batches, length=local_steps)
+
+        # -- line 9: public last-position inference --
+        last, aux = last_logits(
+            merge_lora(lora, frozen), cfg, {"tokens": pub_tokens}, last_only=last_only
+        )
+        return lora, opt, last, aux.lora_h
+
+    return client_round
+
+
 @functools.lru_cache(maxsize=64)
 def make_fused_round_fn(
     cfg: ModelConfig,
@@ -307,6 +453,7 @@ def make_fused_round_fn(
     shared_backbone: bool = True,
     last_only: bool = True,
     use_kernels: bool = False,
+    class_head_only: bool = True,
 ) -> Callable:
     """The whole client phase of Algorithm 1 as ONE function.
 
@@ -332,40 +479,19 @@ def make_fused_round_fn(
     the compilation wrapper (plain ``jax.jit`` or a ``shard_map`` placement
     of the client axis over devices).
     """
-    ft_loss = _finetune_loss_fn(cfg, num_classes, last_only)
-    kd_loss = _distill_loss_fn(cfg, temperature, lam, restrict_to_support, last_only)
-
-    def client_round(lora, frozen, opt, g_tokens, g_logits, g_h, batches, pub_tokens):
-        # -- lines 5-7: local distillation against the broadcast knowledge --
-        for _ in range(distill_steps):
-            (_, _), grads = jax.value_and_grad(kd_loss, has_aux=True)(
-                lora, frozen, g_tokens, g_logits, g_h
-            )
-            lora, opt = adamw_update(grads, opt, lora, lr=distill_lr)
-
-        # -- line 8: local fine-tuning, scanned over the step axis --
-        def train_body(carry, batch):
-            lora, opt = carry
-            (_, _), grads = jax.value_and_grad(ft_loss, has_aux=True)(
-                lora, frozen, batch
-            )
-            lora, opt = adamw_update(grads, opt, lora, lr=lr, weight_decay=weight_decay)
-            return (lora, opt), None
-
-        (lora, opt), _ = jax.lax.scan(train_body, (lora, opt), batches, length=local_steps)
-
-        # -- line 9: public last-position inference --
-        last, aux = last_logits(
-            merge_lora(lora, frozen), cfg, {"tokens": pub_tokens}, last_only=last_only
-        )
-        return lora, opt, last, aux.lora_h
+    client_round = _client_round_core(
+        cfg, num_classes, lr=lr, weight_decay=weight_decay, distill_lr=distill_lr,
+        temperature=temperature, lam=lam, restrict_to_support=restrict_to_support,
+        local_steps=local_steps, distill_steps=distill_steps, last_only=last_only,
+        gate_distill=False, class_head_only=class_head_only,
+    )
 
     frozen_ax = None if shared_backbone else 0
     vm = jax.vmap(client_round, in_axes=(0, frozen_ax, 0, None, None, None, 0, None))
 
     def fn(lora, frozen, opt, g_tokens, g_logits, g_h, batches, pub_tokens, ks):
         lora, opt, last, h = vm(
-            lora, frozen, opt, g_tokens, g_logits, g_h, batches, pub_tokens
+            lora, frozen, opt, g_tokens, (g_logits, g_h), True, batches, pub_tokens
         )
         # -- line 10: adaptive top-k, one budget per client row (k is data;
         # applied outside the client vmap so the Pallas path stays a plain
@@ -384,6 +510,148 @@ def make_fused_round_fn(
 
 
 @functools.lru_cache(maxsize=64)
+def make_fused_e2e_round_fn(
+    client_cfg: ModelConfig,
+    server_cfg: ModelConfig,
+    num_classes: int,
+    *,
+    k_cap: int,
+    lr: float = 1e-3,
+    weight_decay: float = 1e-3,
+    distill_lr: float = 1e-3,
+    temperature: float = 2.0,
+    lam: float = 0.03,
+    restrict_to_support: bool = False,
+    local_steps: int = 4,
+    distill_steps: int = 2,
+    server_distill_steps: int = 12,
+    aggregation: AggregationMode = "adaptive",
+    send_h: bool = True,
+    shared_backbone: bool = True,
+    last_only: bool = True,
+    use_kernels: bool = False,
+) -> Callable:
+    """ONE whole federated round — client phase AND server phase — as ONE
+    function (Fig. 1 steps 1-10 / Algorithm 1 lines 3-16).
+
+    fn(lora (C,...), frozen, opt (C,...),
+       s_lora, s_frozen, s_opt,                       # server LLM state
+       g_tokens (P,L), g_logits (P,V), g_h (P,r)|None, g_valid () bool,
+       batches {tokens (C,S,B,L), labels (C,S,B)}, pub_tokens (P,L),
+       ks (C,) int32)
+    -> (lora, opt, s_lora, s_opt,
+        values (C,P,k_cap), indices (C,P,k_cap),      # sparse uplink wire
+        b_logits (P,V), b_h (P,r)|None)               # next-round broadcast
+
+    Extends :func:`make_fused_round_fn` past the server boundary:
+
+    * the uplink leaves the client phase as the sparse wire format
+      ``(values, indices, transmit mask)`` of static width ``k_cap`` (one
+      ``lax.top_k``; per-client adaptive ``k`` enters as int32 DATA and
+      becomes the mask) — the ``(C, P, V)`` densified stack of the PR-2
+      path is never built;
+    * adaptive aggregation (eqs. 6-7) scatter-accumulates straight from the
+      wire (:func:`repro.core.aggregation.aggregate_wire`; the Pallas
+      scatter kernel with ``use_kernels``) — the single ``(P, V)``
+      densification of the round is the aggregated teacher itself;
+    * the server-side distillation (line 16) runs as a
+      ``server_distill_steps``-long ``lax.scan``, and the next round's
+      broadcast knowledge (line 1) is recomputed in-program;
+    * the two data-dependent control decisions of the round loop are DATA,
+      not Python branches: ``g_valid=False`` (cold server, round 0)
+      discards the client distillation updates, and a round where every
+      selected client dropped (all ``ks == 0``) discards the server
+      update — the broadcast still refreshes on the current public batch,
+      exactly as the host round loop behaves.
+
+    One executable therefore serves every round of a run (per ``k_cap``
+    bucket), and a steady-state round is a single dispatch.
+
+    Round-level CSE the split pipeline cannot do: the teacher side of every
+    distillation KL (eq. 9) is a CONSTANT of the round, so its log-softmax
+    is computed ONCE here — the broadcast teacher is reused across all C
+    clients × ``distill_steps`` updates, the aggregated teacher across all
+    ``server_distill_steps`` — instead of once per (model, step) as the
+    per-step host pipeline does.  Bit-identical losses/gradients (the
+    teacher carries no gradient).
+    """
+    use_h = client_cfg.lora is not None
+    cached_kd = _distill_loss_cached_fn(client_cfg, temperature, lam, last_only)
+    client_round = _client_round_core(
+        client_cfg, num_classes, lr=lr, weight_decay=weight_decay,
+        distill_lr=distill_lr, temperature=temperature, lam=lam,
+        restrict_to_support=restrict_to_support, local_steps=local_steps,
+        distill_steps=distill_steps, last_only=last_only, gate_distill=True,
+        kd_loss=cached_kd,
+    )
+    frozen_ax = None if shared_backbone else 0
+    vm = jax.vmap(
+        client_round, in_axes=(0, frozen_ax, 0, None, None, None, 0, None)
+    )
+    server_kd_loss = _distill_loss_cached_fn(server_cfg, temperature, lam, last_only)
+
+    def teacher_cache(logits, h):
+        support = (logits != 0) if restrict_to_support else None
+        t_logp = teacher_log_probs(logits, temperature, mask=support)
+        th_logp = (
+            teacher_log_probs(h, temperature) if (use_h and h is not None) else None
+        )
+        return t_logp, th_logp, support
+
+    def fn(lora, frozen, opt, s_lora, s_frozen, s_opt,
+           g_tokens, g_logits, g_h, g_valid, batches, pub_tokens, ks):
+        # -- client phase (lines 3-9); broadcast teacher softmaxed ONCE --
+        lora, opt, last, h = vm(
+            lora, frozen, opt, g_tokens, teacher_cache(g_logits, g_h), g_valid,
+            batches, pub_tokens
+        )
+
+        # -- lines 10-11: adaptive top-k as the sparse uplink wire --
+        wire = sparsify_wire(last, ks, k_cap)
+        n_tx = jnp.sum((ks > 0).astype(jnp.int32))
+
+        # -- line 15: aggregation from the wire (eqs. 6-7) --
+        k_g = aggregate_wire(
+            wire, aggregation, num_transmitters=n_tx, use_kernel=use_kernels
+        )
+        if send_h and h is not None:
+            tx = (ks > 0).astype(h.dtype)[:, None, None]
+            h_g = jnp.sum(h * tx, axis=0) / jnp.maximum(n_tx, 1).astype(h.dtype)
+        else:
+            h_g = None
+
+        # -- line 16: server-side distillation, scanned over its steps; the
+        # aggregated teacher is softmaxed ONCE for all steps --
+        kg_logp, kg_h_logp, kg_support = teacher_cache(k_g, h_g)
+
+        def server_body(carry, _):
+            sl, so = carry
+            (_, _), grads = jax.value_and_grad(server_kd_loss, has_aux=True)(
+                sl, s_frozen, pub_tokens, kg_logp, kg_h_logp, kg_support
+            )
+            sl, so = adamw_update(grads, so, sl, lr=distill_lr)
+            return (sl, so), None
+
+        (new_sl, new_so), _ = jax.lax.scan(
+            server_body, (s_lora, s_opt), None, length=server_distill_steps
+        )
+        # every selected client dropped -> no aggregation, no server update
+        has_tx = n_tx > 0
+        keep = lambda new, old: jnp.where(has_tx, new, old)
+        s_lora = jax.tree.map(keep, new_sl, s_lora)
+        s_opt = jax.tree.map(keep, new_so, s_opt)
+
+        # -- lines 1-2 of the NEXT round: refreshed broadcast knowledge --
+        b_last, b_aux = last_logits(
+            merge_lora(s_lora, s_frozen), server_cfg,
+            {"tokens": pub_tokens}, last_only=last_only,
+        )
+        return lora, opt, s_lora, s_opt, wire.values, wire.indices, b_last, b_aux.lora_h
+
+    return fn
+
+
+@functools.lru_cache(maxsize=64)
 def make_eval_fn(
     cfg: ModelConfig, num_classes: int, *, batch_size: int = 64, last_only: bool = True
 ) -> Callable:
@@ -391,7 +659,10 @@ def make_eval_fn(
 
     @functools.partial(jax.jit, static_argnames=())
     def batch_acc(params, tokens, labels):
-        last, _ = last_logits(params, cfg, {"tokens": tokens}, last_only=last_only)
+        last, _ = last_logits(
+            params, cfg, {"tokens": tokens}, last_only=last_only,
+            head_cols=num_classes if last_only else None,
+        )
         cls = class_logits(last, num_classes)
         return jnp.sum((jnp.argmax(cls, -1) == labels).astype(jnp.float32))
 

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels.distill_kl import distill_kl_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.sparse_agg import sparse_agg_pallas
+from repro.kernels.sparse_agg import scatter_wire_sums_pallas, sparse_agg_pallas
 from repro.kernels.topk_select import topk_mask_dynamic_pallas, topk_mask_pallas
 
 __all__ = [
@@ -21,6 +21,7 @@ __all__ = [
     "topk_mask_dynamic",
     "distill_kl",
     "sparse_aggregate",
+    "scatter_wire_sums",
     "flash_attention",
     "interpret_mode",
 ]
@@ -69,6 +70,25 @@ def sparse_aggregate(stack: jax.Array) -> jax.Array:
     flat = stack.reshape((n, -1, vocab))
     out = sparse_agg_pallas(flat, interpret=interpret_mode())
     return out.reshape(stack.shape[1:]).astype(stack.dtype)
+
+
+def scatter_wire_sums(
+    a: jax.Array, b: jax.Array, indices: jax.Array, vocab: int
+) -> tuple[jax.Array, jax.Array]:
+    """Two-channel scatter-accumulate from the sparse uplink wire format:
+    ``a, b, indices (N, ..., k)`` -> ``(num, den)`` each ``(..., vocab)`` —
+    the O(N·B·k) aggregation primitive (no dense (N, B, V) stack is ever
+    formed; see :func:`repro.core.aggregation.aggregate_wire`)."""
+    n, k = a.shape[0], a.shape[-1]
+    lead = a.shape[1:-1]
+    fold = lambda x: x.reshape((n, -1, k))
+    num, den = scatter_wire_sums_pallas(
+        fold(a), fold(b), fold(indices), vocab, interpret=interpret_mode()
+    )
+    return (
+        num.reshape(lead + (vocab,)).astype(a.dtype),
+        den.reshape(lead + (vocab,)).astype(b.dtype),
+    )
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:

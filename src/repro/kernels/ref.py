@@ -15,6 +15,7 @@ __all__ = [
     "topk_mask_dynamic_ref",
     "distill_kl_ref",
     "sparse_agg_ref",
+    "scatter_wire_sums_ref",
     "flash_attention_ref",
 ]
 
@@ -64,6 +65,30 @@ def sparse_agg_ref(stack: jax.Array, *, eps: float = 1e-12) -> jax.Array:
     den = jnp.sum(s, axis=0)
     num = jnp.sum(s * x, axis=0)
     return num / (den + eps)
+
+
+def scatter_wire_sums_ref(
+    a: jax.Array, b: jax.Array, indices: jax.Array, vocab: int
+) -> tuple[jax.Array, jax.Array]:
+    """Two-channel scatter-accumulate of sparse wire entries, fp32.
+
+    ``a, b, indices: (N, rows, k)`` -> ``(num, den)`` each ``(rows, vocab)``:
+    ``num[r, indices[n, r, j]] += a[n, r, j]`` (and b into den).  Indices are
+    distinct per (n, r) row (a top-k support); masked-out entries must carry
+    zero contributions.  This is the whole aggregation memory contract: only
+    the (rows, vocab) OUTPUT is dense — never an (N, rows, vocab) stack.
+    """
+    n, rows, k = a.shape
+    row_ix = jnp.broadcast_to(
+        jnp.arange(rows, dtype=jnp.int32)[None, :, None], indices.shape
+    )
+    num = jnp.zeros((rows, vocab), jnp.float32).at[row_ix, indices].add(
+        a.astype(jnp.float32)
+    )
+    den = jnp.zeros((rows, vocab), jnp.float32).at[row_ix, indices].add(
+        b.astype(jnp.float32)
+    )
+    return num, den
 
 
 def flash_attention_ref(

@@ -22,10 +22,14 @@ from repro.fed.rounds import METHODS
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--method", choices=list(METHODS), default="adald")
-    ap.add_argument("--engine", choices=["sequential", "batched", "fused"],
+    ap.add_argument("--engine",
+                    choices=["sequential", "batched", "fused", "fused_e2e"],
                     default="batched",
-                    help="client-phase executor (batched = vmapped per-phase "
-                         "cohort steps; fused = one jitted round body)")
+                    help="round executor (batched = vmapped per-phase cohort "
+                         "steps; fused = one jitted CLIENT-phase body; "
+                         "fused_e2e = one jitted call for the WHOLE round — "
+                         "sparse-wire aggregation + server distill + "
+                         "broadcast folded in)")
     ap.add_argument("--full-head", action="store_true",
                     help="materialise full (B,T,V) logits instead of the "
                          "last-only LM head (the pre-PR-2 behaviour)")

@@ -101,14 +101,24 @@ def _embed_tokens(params: dict, cfg: ModelConfig, tokens: jax.Array, positions: 
     return x
 
 
-def _lm_logits(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+def _lm_logits(
+    params: dict, cfg: ModelConfig, x: jax.Array, head_cols: int | None = None
+) -> jax.Array:
+    """LM-head logits; ``head_cols`` restricts the head to its FIRST
+    ``head_cols`` vocab columns (each retained logit is the identical dot
+    product, so this equals slicing the full output — at head_cols/V of the
+    FLOPs).  The classification readout (paper §IV: class logits = the first
+    num_classes vocab ids) only ever consumes those columns."""
     cd = jnp.dtype(cfg.compute_dtype)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if head_cols is not None:
+        head = head[:head_cols]
     logits = jnp.einsum("bsd,vd->bsv", x.astype(cd), head.astype(cd))
     if "lora_head" in params:  # LoRA on the LM head (PEFT-standard target)
         lh = params["lora_head"]
+        lb = lh["B"] if head_cols is None else lh["B"][:, :head_cols]
         h = jnp.einsum("bsd,dr->bsr", x.astype(cd), lh["A"].astype(cd))
-        logits = logits + jnp.einsum("bsr,rv->bsv", h, lh["B"].astype(cd)) * (
+        logits = logits + jnp.einsum("bsr,rv->bsv", h, lb.astype(cd)) * (
             cfg.lora.alpha / cfg.lora.rank
         )
     return logits
@@ -206,6 +216,7 @@ def forward(
     *,
     window: int | None = None,
     last_only: bool = False,
+    head_cols: int | None = None,
 ) -> tuple[jax.Array, Aux]:
     """Full-sequence forward returning (B, S_text, vocab) logits.
 
@@ -214,9 +225,14 @@ def forward(
     ``forward(...)[0][:, -1, :]`` at ~1/S of the head FLOPs/memory.  This is
     the mode every federated phase uses: the task convention (paper §IV)
     reads class and distillation logits at the last position exclusively.
+
+    ``head_cols=k`` computes only the first k head columns (bit-identical to
+    slicing ``[..., :k]`` of the full logits) — the supervised
+    classification losses/eval read ``num_classes`` of the 50k+ vocab
+    logits, a ~V/num_classes head-FLOP cut on those phases.
     """
     h, aux = backbone(params, cfg, batch, window=window, last_only=last_only)
-    logits = _lm_logits(params, cfg, h)
+    logits = _lm_logits(params, cfg, h, head_cols)
     if last_only:
         return logits[:, 0], aux
     return logits, aux

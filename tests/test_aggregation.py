@@ -1,4 +1,4 @@
-"""Adaptive aggregation (paper eqs. 6-7) vs baselines."""
+"""Adaptive aggregation (paper eqs. 6-7) vs baselines, dense and sparse-wire."""
 
 import jax
 import jax.numpy as jnp
@@ -10,9 +10,17 @@ from repro.core.aggregation import (
     aggregate_adaptive,
     aggregate_mean_nonzero,
     aggregate_sparse,
+    aggregate_wire,
     aggregate_zeropad,
 )
-from repro.core.topk import topk_sparsify
+from repro.core.topk import (
+    SparseWire,
+    sparsify_wire,
+    topk_mask_batch,
+    topk_sparsify,
+    wire_densify,
+    wire_support,
+)
 
 
 def _sparse_stack(key, n=5, rows=4, vocab=64, keep=0.2):
@@ -82,3 +90,90 @@ def test_sparse_equals_dense_aggregation():
 def test_unknown_mode_raises():
     with pytest.raises(ValueError):
         aggregate(jnp.zeros((2, 3, 4)), "bogus")  # type: ignore[arg-type]
+    with pytest.raises(ValueError):
+        aggregate_wire(
+            SparseWire(jnp.zeros((1, 1, 2)), jnp.zeros((1, 1, 2), jnp.int32),
+                       jnp.ones((1, 1, 2), bool), 4),
+            "bogus",  # type: ignore[arg-type]
+        )
+
+
+# ---- explicit transmit mask vs the `!= 0` sentinel (PR-3 satellite) --------
+
+
+def test_true_zero_transmitted_logit_counts_with_explicit_mask():
+    """REGRESSION: a transmitted logit that is exactly 0.0 was silently
+    treated as untransmitted by the `stack != 0` sentinel — it fell out of
+    the mean_nonzero denominator.  With the explicit transmit mask it counts
+    (it was on the air): mean over {0.0, 3.0} is 1.5, not 3.0."""
+    stack = jnp.asarray([[[0.0, 1.0]], [[3.0, 0.0]]])  # (N=2, B=1, V=2)
+    # client 0 transmitted BOTH dims (dim 0 with value exactly 0.0);
+    # client 1 transmitted dim 0 only.
+    mask = jnp.asarray([[[True, True]], [[True, False]]])
+
+    legacy = aggregate_mean_nonzero(stack)  # sentinel path
+    np.testing.assert_allclose(np.asarray(legacy[0]), [3.0, 1.0], rtol=1e-6)
+
+    fixed = aggregate_mean_nonzero(stack, mask=mask)
+    np.testing.assert_allclose(np.asarray(fixed[0]), [1.5, 1.0], rtol=1e-6)
+
+    # the sparse wire carries the mask natively -> same fixed result
+    wire = SparseWire(
+        values=jnp.asarray([[[0.0, 1.0]], [[3.0, 0.0]]]),
+        indices=jnp.asarray([[[0, 1]], [[0, 1]]], jnp.int32),
+        mask=mask,
+        vocab=2,
+    )
+    np.testing.assert_allclose(
+        np.asarray(aggregate_wire(wire, "mean_nonzero")[0]), [1.5, 1.0], rtol=1e-6
+    )
+    # adaptive/zeropad values are insensitive to the zero (|0| confidence /
+    # zero summand) but must accept the mask without changing results
+    for mode in ("adaptive", "zeropad"):
+        np.testing.assert_allclose(
+            np.asarray(aggregate(stack, mode, mask=mask)),
+            np.asarray(aggregate(stack, mode)),
+            rtol=1e-6,
+        )
+
+
+def test_true_zero_logit_round_trips_through_wire():
+    """End-to-end through the wire format: a selected logit that is exactly
+    0.0 stays masked-IN (sparsify_wire masks by RANK, not by value), so it
+    drags the mean_nonzero average down exactly as an on-air zero should —
+    the densified sentinel path would have averaged without it."""
+    # client 0's top-2: values {5, 0} at dims {0, 2};
+    # client 1's top-2: values {4, 1} at dims {2, 0}
+    logits = jnp.asarray(
+        [[[5.0, -1.0, 0.0, -2.0]], [[1.0, -3.0, 4.0, -1.0]]]
+    )  # (2, 1, 4)
+    wire = sparsify_wire(logits, jnp.asarray([2, 2], jnp.int32), 2)
+    assert bool(jnp.all(wire.mask))  # all four entries transmitted
+    sup = np.asarray(wire_support(wire))
+    assert sup[0, 0, 2]  # the true-zero entry IS support
+    out = aggregate_wire(wire, "mean_nonzero")
+    # dim 2: client 0 sent 0.0 (counts!), client 1 sent 4.0 -> mean = 2.0;
+    # the sentinel path would report 4.0 (zero invisible in the dense stack)
+    np.testing.assert_allclose(np.asarray(out[0]), [3.0, 0.0, 2.0, 0.0], atol=1e-6)
+    legacy = aggregate_mean_nonzero(wire_densify(wire))
+    np.testing.assert_allclose(np.asarray(legacy[0]), [3.0, 0.0, 4.0, 0.0], atol=1e-6)
+
+
+def test_wire_matches_dense_oracle_all_modes():
+    """sparsify_wire -> aggregate_wire == topk_mask_batch -> masked dense
+    aggregate, for mixed budgets including a k = 0 straggler."""
+    key = jax.random.PRNGKey(5)
+    logits = jax.random.normal(key, (4, 3, 50))
+    ks = [8, 0, 50, 1]
+    wire = sparsify_wire(logits, jnp.asarray(ks, jnp.int32), 50)
+    np.testing.assert_allclose(
+        np.asarray(wire_densify(wire)), np.asarray(topk_mask_batch(logits, ks)), atol=0
+    )
+    dense, sup = wire_densify(wire), wire_support(wire)
+    active = jnp.asarray([0, 2, 3])
+    for mode in ("adaptive", "zeropad", "mean_nonzero"):
+        got = aggregate_wire(wire, mode)
+        want = aggregate(dense[active], mode, mask=sup[active])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+        gotk = aggregate_wire(wire, mode, use_kernel=True)
+        np.testing.assert_allclose(np.asarray(gotk), np.asarray(got), rtol=1e-5, atol=1e-6)

@@ -22,8 +22,16 @@ from repro.configs.gpt2_paper import REDUCED_CLIENT, REDUCED_SERVER
 from repro.core import ChannelConfig
 from repro.core.channel import BatchedChannelState, ChannelState
 from repro.core.protocol import PayloadSpec
+from repro.core.topk import wire_densify
 from repro.data import make_banking77_like
-from repro.fed import BatchedEngine, FedConfig, FusedEngine, SequentialEngine, run_federated
+from repro.fed import (
+    BatchedEngine,
+    FedConfig,
+    FusedE2EEngine,
+    FusedEngine,
+    SequentialEngine,
+    run_federated,
+)
 from repro.fed.client import Client
 from repro.fed.server import Server
 
@@ -72,17 +80,19 @@ def test_engine_parity(method):
 
 @pytest.mark.parametrize("method", ["adald", "zeropad"])
 def test_three_way_engine_parity(method):
-    """sequential vs batched vs fused: identical per-client adaptive k and
+    """sequential vs fused vs fused_e2e: identical per-client adaptive k and
     ledger bytes (host-side scalar math is shared); accuracies match to
-    float tolerance (the fused engine compiles the whole round as one
-    program, so op scheduling may differ in the last ulp)."""
+    float tolerance (the fused engines compile the round — for fused_e2e the
+    WHOLE round including aggregation/server distill/broadcast — as one
+    program, so op scheduling may differ in the last ulp; the e2e path also
+    aggregates from the sparse wire instead of the dense stack)."""
     ds = _dataset()
     runs = {
         e: run_federated(CLIENT, SERVER, ds, _cfg(e, method, rounds=2))
-        for e in ("sequential", "batched", "fused")
+        for e in ("sequential", "batched", "fused", "fused_e2e")
     }
     seq = runs["sequential"]
-    for name in ("batched", "fused"):
+    for name in ("batched", "fused", "fused_e2e"):
         other = runs[name]
         assert seq.per_client_k == other.per_client_k, name
         for rs, ro in zip(seq.ledger.rounds, other.ledger.rounds):
@@ -93,7 +103,7 @@ def test_three_way_engine_parity(method):
         np.testing.assert_allclose(seq.client_acc, other.client_acc, atol=1e-6)
 
 
-@pytest.mark.parametrize("engine", ["sequential", "batched", "fused"])
+@pytest.mark.parametrize("engine", ["sequential", "batched", "fused", "fused_e2e"])
 def test_single_round_completes(engine):
     """Regression for the old pub_tokens_prev/g_bits forward references: a
     1-round run (no broadcast ever happens) must complete cleanly."""
@@ -103,7 +113,7 @@ def test_single_round_completes(engine):
     assert run.ledger.rounds[0].uplink_bytes > 0
 
 
-@pytest.mark.parametrize("engine", ["sequential", "batched", "fused"])
+@pytest.mark.parametrize("engine", ["sequential", "batched", "fused", "fused_e2e"])
 def test_straggler_dropout(engine):
     """With min_k=0 + outages, dropped clients transmit zero bytes: each
     round's uplink equals the payload bytes of the k>0 clients only."""
@@ -123,7 +133,7 @@ def test_straggler_dropout(engine):
         assert stats.num_selected == len(ks)
 
 
-@pytest.mark.parametrize("other", ["batched", "fused"])
+@pytest.mark.parametrize("other", ["batched", "fused", "fused_e2e"])
 def test_dropout_parity(other):
     """The engines agree on which clients drop and on everything else."""
     chan = ChannelConfig(bandwidth_hz=2e5, mean_snr_db=2.0, min_k=0, dropout_prob=0.5)
@@ -135,7 +145,7 @@ def test_dropout_parity(other):
     np.testing.assert_allclose(seq.client_acc, oth.client_acc, atol=1e-6)
 
 
-@pytest.mark.parametrize("engine", ["sequential", "batched", "fused"])
+@pytest.mark.parametrize("engine", ["sequential", "batched", "fused", "fused_e2e"])
 def test_all_clients_dropped_round(engine):
     """A round where every selected client is in outage must complete: zero
     uplink, zero transmitters, no aggregation/distillation that round.
@@ -250,6 +260,149 @@ def test_fused_dropped_client_absent_from_aggregation():
     assert [p.client_id for p in phase.payloads] == [0, 2]
 
 
+def _shared_cohort(n=3, seed=7):
+    """Cohort riding ONE pretrained-like backbone W' (the paper's setting;
+    what run_federated produces after pretraining) — required by the e2e
+    multi-round scan driver."""
+    import jax
+
+    from repro.models import init as model_init
+
+    ds = _dataset()
+    backbone = model_init(jax.random.PRNGKey(seed), CLIENT)
+    clients = [
+        Client(i, CLIENT, ds.subset(np.arange(i * 60, (i + 1) * 60)),
+               num_classes=ds.num_classes, seed=i, local_steps=1,
+               distill_steps=1, initial_params=backbone)
+        for i in range(n)
+    ]
+    return ds, clients
+
+
+def _e2e_engine(clients, ds, **kw):
+    from repro.fed.server import Server
+
+    server = Server(SERVER, aggregation=kw.pop("aggregation", "adaptive"),
+                    distill_steps=2)
+    return FusedE2EEngine(
+        clients, CLIENT, server=server, num_classes=ds.num_classes,
+        local_steps=1, distill_steps=1, server_distill_steps=2, **kw,
+    )
+
+
+def test_fused_e2e_sparse_wire_matches_dense_uplink():
+    """The e2e engine's sparse (values, indices, mask) uplink densifies to
+    exactly the sequential engine's per-client dense upload (modulo float
+    drift of the fused model math); a k == 0 straggler is absent from the
+    wire, and each wire row carries exactly k transmitted entries."""
+    ds, c_seq = _mini_cohort(3)
+    _, c_e2e = _mini_cohort(3)
+    good = ChannelState(bandwidth_hz=1e6, snr_db=10.0, eta=0.5, deadline_s=1.0)
+    out = ChannelState(bandwidth_hz=1e6, snr_db=-float("inf"), eta=0.5, deadline_s=1.0)
+    states = BatchedChannelState.from_states([good, out, good])
+    pub = jnp.asarray(ds.tokens[:16])
+
+    seq = SequentialEngine(c_seq, CLIENT, k_min=0)
+    e2e = _e2e_engine(c_e2e, ds, k_min=0)
+    ps = seq.run_round([0, 1, 2], pub, None, states, adaptive_k=True, send_h=True)
+    pe = e2e.run_round([0, 1, 2], pub, None, states, adaptive_k=True, send_h=True)
+    assert ps.ks == pe.ks and pe.ks[1] == 0
+    assert pe.dense is None  # no densified stack exists on this path
+    wire = pe.sparse
+    assert wire.values.shape[0] == 2  # transmitters only
+    # per-row transmitted-entry counts == the adaptive budgets
+    counts = np.asarray(jnp.sum(wire.mask, axis=-1))
+    assert set(np.unique(counts[0])) == {pe.ks[0]}
+    assert set(np.unique(counts[1])) == {pe.ks[2]}
+    np.testing.assert_allclose(
+        np.asarray(wire_densify(wire)), np.asarray(ps.dense), atol=1e-5
+    )
+
+    # the Server's wire entry point == its dense path fed the densified wire
+    server = Server(SERVER, aggregation="adaptive", distill_steps=1)
+    k_g_wire, h_g = server.aggregate_sparse_wire(wire, ps.h)
+    k_g_dense, h_g_dense = server.aggregate_dense(wire_densify(wire), ps.h)
+    np.testing.assert_allclose(
+        np.asarray(k_g_wire), np.asarray(k_g_dense), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(np.asarray(h_g), np.asarray(h_g_dense), atol=0)
+
+
+def test_fused_e2e_run_rounds_matches_per_round():
+    """run_rounds(R) — R whole rounds inside ONE lax.scan dispatch — leaves
+    the fleet, the server and the broadcast exactly where R single
+    run_round calls do, and reports identical (ks, payload) accounting."""
+    import jax
+
+    from repro.core import ChannelConfig as CC, ChannelSimulator
+
+    ds, c_a = _shared_cohort(4)
+    _, c_b = _shared_cohort(4)
+    a, b = _e2e_engine(c_a, ds), _e2e_engine(c_b, ds)
+    sim = ChannelSimulator(4, CC(bandwidth_hz=2e5, mean_snr_db=2.0), seed=0)
+    sels = [[0, 1], [2, 3]]
+    pubs = [jnp.asarray(ds.tokens[:16]), jnp.asarray(ds.tokens[16:32])]
+    states = [sim.states_batched(r, sels[r]) for r in range(2)]
+
+    p0 = a.run_round(sels[0], pubs[0], None, states[0], adaptive_k=True, send_h=True)
+    p1 = a.run_round(
+        sels[1], pubs[1], a.broadcast_state(pubs[0]), states[1],
+        adaptive_k=True, send_h=True,
+    )
+    a.sync_server()
+
+    out = b.run_rounds(sels, pubs, states, adaptive_k=True, send_h=True)
+    b.sync_server()
+
+    assert [ks for ks, _ in out] == [p0.ks, p1.ks]
+    assert [[p.bytes for p in pl] for _, pl in out] == [
+        [p.bytes for p in p0.payloads], [p.bytes for p in p1.payloads]
+    ]
+    for i in range(4):
+        for x, y in zip(jax.tree.leaves(a.client_params(i)),
+                        jax.tree.leaves(b.client_params(i))):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=2e-5)
+    for x, y in zip(jax.tree.leaves(a.server.params),
+                    jax.tree.leaves(b.server.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(a._b_logits), np.asarray(b._b_logits), atol=1e-4
+    )
+
+
+def test_e2e_aggregation_path_never_densifies_stack():
+    """Trace-inspection acceptance check: at bench-like shapes, no
+    intermediate of the sparse aggregation path — sub-jaxprs included —
+    reaches the (N, B, V) dense stack's element count; the working set is
+    O(N·B·k_cap) + the single (B, V) output.  Same shared inspection
+    (max_intermediate_elems) as the BENCH_round.json record, for both the
+    pure-jnp scatter and the Pallas kernel route."""
+    import jax
+
+    from repro.core.aggregation import aggregate_wire, max_intermediate_elems
+    from repro.core.topk import SparseWire
+
+    n, rows, vocab, k_cap = 10, 64, 8192, 256
+
+    def make_agg(use_kernel):
+        def agg(values, indices, mask, n_tx):
+            wire = SparseWire(values=values, indices=indices, mask=mask, vocab=vocab)
+            return aggregate_wire(
+                wire, "adaptive", num_transmitters=n_tx, use_kernel=use_kernel
+            )
+        return agg
+
+    for use_kernel in (False, True):
+        jaxpr = jax.make_jaxpr(make_agg(use_kernel))(
+            jnp.zeros((n, rows, k_cap)), jnp.zeros((n, rows, k_cap), jnp.int32),
+            jnp.zeros((n, rows, k_cap), bool), jnp.int32(n),
+        )
+        worst = max_intermediate_elems(jaxpr)
+        assert worst < n * rows * vocab, use_kernel
+        # nothing bigger than the (B, V) output (num/den accumulators)
+        assert worst <= rows * vocab, use_kernel
+
+
 _SHARD_MAP_SCRIPT = textwrap.dedent(
     """
     import jax, numpy as np, jax.numpy as jnp
@@ -268,35 +421,42 @@ _SHARD_MAP_SCRIPT = textwrap.dedent(
     )
     ds = make_banking77_like(vocab_size=256, seq_len=12, total=200, seed=0)
 
-    def cohort():
+    def cohort(n):
         return [Client(i, cfg, ds.subset(np.arange(i * 60, (i + 1) * 60)),
                        num_classes=ds.num_classes, seed=i,
-                       local_steps=1, distill_steps=1) for i in range(2)]
+                       local_steps=1, distill_steps=1) for i in range(n)]
 
-    states = BatchedChannelState.from_states([
-        ChannelState(1e6, 10.0, 0.5, 1.0), ChannelState(1e6, 0.0, 0.5, 1.0)])
+    chans = [ChannelState(1e6, 10.0, 0.5, 1.0), ChannelState(1e6, 0.0, 0.5, 1.0),
+             ChannelState(1e6, 5.0, 0.5, 1.0)]
     pub = jnp.asarray(ds.tokens[:16])
-    plain = FusedEngine(cohort(), cfg, num_classes=ds.num_classes,
-                        local_steps=1, distill_steps=1)
-    shard = FusedEngine(cohort(), cfg, num_classes=ds.num_classes,
-                        local_steps=1, distill_steps=1, shard_clients=True)
-    pp = plain.run_round([0, 1], pub, None, states, adaptive_k=True, send_h=True)
-    ps = shard.run_round([0, 1], pub, None, states, adaptive_k=True, send_h=True)
-    assert pp.ks == ps.ks
-    np.testing.assert_allclose(np.asarray(pp.dense), np.asarray(ps.dense), atol=1e-5)
-    for i in range(2):
-        for a, b in zip(jax.tree.leaves(plain.client_params(i)),
-                        jax.tree.leaves(shard.client_params(i))):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
-    print("SHARD_MAP_OK")
+    # n=2 divides the 2 devices exactly; n=3 exercises the masked padding
+    # (the pad row rides at k=0 and is discarded before the scatter-back).
+    for n in (2, 3):
+        states = BatchedChannelState.from_states(chans[:n])
+        sel = list(range(n))
+        plain = FusedEngine(cohort(n), cfg, num_classes=ds.num_classes,
+                            local_steps=1, distill_steps=1)
+        shard = FusedEngine(cohort(n), cfg, num_classes=ds.num_classes,
+                            local_steps=1, distill_steps=1, shard_clients=True)
+        pp = plain.run_round(sel, pub, None, states, adaptive_k=True, send_h=True)
+        ps = shard.run_round(sel, pub, None, states, adaptive_k=True, send_h=True)
+        assert pp.ks == ps.ks
+        assert ps.dense.shape[0] == pp.dense.shape[0]
+        np.testing.assert_allclose(np.asarray(pp.dense), np.asarray(ps.dense), atol=1e-5)
+        for i in range(n):
+            for a, b in zip(jax.tree.leaves(plain.client_params(i)),
+                            jax.tree.leaves(shard.client_params(i))):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+        print(f"SHARD_MAP_OK_{n}")
     """
 )
 
 
 def test_fused_shard_map_two_host_devices():
     """shard_clients=True places the client axis over devices (shard_map) and
-    reproduces the single-device fused round.  XLA_FLAGS must be set before
-    jax initialises, hence the subprocess."""
+    reproduces the single-device fused round — for an even cohort AND an odd
+    cohort (client-axis padding).  XLA_FLAGS must be set before jax
+    initialises, hence the subprocess."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = (
         env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=2"
@@ -309,4 +469,5 @@ def test_fused_shard_map_two_host_devices():
         capture_output=True, text=True, env=env, timeout=600,
     )
     assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
-    assert "SHARD_MAP_OK" in proc.stdout
+    assert "SHARD_MAP_OK_2" in proc.stdout
+    assert "SHARD_MAP_OK_3" in proc.stdout

@@ -13,16 +13,30 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core.aggregation import aggregate, aggregate_adaptive, aggregate_zeropad
+from repro.core.aggregation import (
+    aggregate,
+    aggregate_adaptive,
+    aggregate_wire,
+    aggregate_zeropad,
+)
 from repro.core.channel import ChannelState, bits_per_entry, topk_budget
 from repro.core.distill import kl_divergence
-from repro.core.protocol import CommLedger, PayloadSpec, RoundStats, UplinkPayload
+from repro.core.protocol import (
+    CommLedger,
+    PayloadSpec,
+    RoundStats,
+    UplinkPayload,
+    wire_uplink_bits,
+)
 from repro.core.topk import (
     densify,
+    sparsify_wire,
     topk_mask_batch,
     topk_mask_dense,
     topk_mask_dynamic,
     topk_sparsify,
+    wire_densify,
+    wire_support,
 )
 
 SETTINGS = settings(max_examples=30, deadline=None)
@@ -204,6 +218,55 @@ def test_uplink_byte_accounting_matches_ledger(n, vocab, samples, rank, value_bi
     expect_bits = sum(samples * k * d + h_bits for k in ks if k > 0)
     assert ledger.uplink_mb * 1e6 == pytest.approx(expect_bits / 8.0)
     assert ledger.rounds[0].total_bytes == pytest.approx(expect_bits / 8.0)
+    # the sparse wire's cohort accounting (k_cap padding is free) must agree
+    # with the manifests' logit term exactly
+    n_h = sum(1 for k in ks if k > 0)
+    assert wire_uplink_bits(samples, ks, vocab, value_bits) == expect_bits - n_h * h_bits
+
+
+@given(
+    n=st.integers(1, 5),
+    rows=st.integers(1, 3),
+    vocab=st.integers(8, 96),
+    mode=st.sampled_from(["adaptive", "zeropad", "mean_nonzero"]),
+    tie_levels=st.integers(2, 6),
+    seed=st.integers(0, 2**30),
+    data=st.data(),
+)
+@SETTINGS
+def test_wire_aggregation_matches_masked_dense(
+    n, rows, vocab, mode, tie_levels, seed, data
+):
+    """INVARIANT (PR-3 sparse uplink): aggregating straight from the
+    (values, indices, mask) wire equals the dense-stack oracle fed the SAME
+    explicit transmit mask, in all three modes — on deliberately hostile
+    inputs: heavy ties (few distinct levels), transmitted TRUE-ZERO logits,
+    and random per-client budgets including k = 0 stragglers.  (The Pallas
+    scatter kernel route is pinned separately at fixed shapes in
+    tests/test_kernel_parity.py — per-example interpret-mode compiles are
+    too slow for a property sweep.)"""
+    ks = data.draw(st.lists(st.integers(0, vocab), min_size=n, max_size=n))
+    key = jax.random.PRNGKey(seed)
+    # few distinct integer levels spanning zero -> many exact ties AND
+    # selected entries whose transmitted value is exactly 0.0
+    levels = jax.random.randint(key, (n, rows, vocab), -1, tie_levels - 1)
+    logits = levels.astype(jnp.float32)
+    k_cap = max(max(ks), 1)
+    wire = sparsify_wire(logits, jnp.asarray(ks, jnp.int32), k_cap)
+
+    got = aggregate_wire(wire, mode)
+
+    dense = wire_densify(wire)
+    support = wire_support(wire)
+    active = [i for i, k in enumerate(ks) if k > 0]
+    if not active:
+        assert float(jnp.sum(jnp.abs(got))) == 0.0
+        return
+    take = jnp.asarray(active)
+    want = aggregate(dense[take], mode, mask=support[take])
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6
+    )
 
 
 @given(
