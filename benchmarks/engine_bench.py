@@ -39,8 +39,10 @@ dispatch fusion, which ARE realised on this machine.  The ratio printed is
 an honest measurement of THIS machine, not an accelerator projection.
 
 Run:  PYTHONPATH=src python -m benchmarks.run --only engine
-  or: PYTHONPATH=src python benchmarks/engine_bench.py [--quick]
-      (writes BENCH_engine.json next to the repo root)
+  or: PYTHONPATH=src python benchmarks/engine_bench.py [--quick] [--shard N]
+      (writes BENCH_engine.json next to the repo root; --shard N forces N
+      host CPU devices BEFORE jax initialises so bench_round can measure the
+      sharded fused_e2e round — fused_e2e_shard — in the same process)
 """
 
 from __future__ import annotations
@@ -51,6 +53,25 @@ import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# --shard N (or --shard=N) must act BEFORE jax initialises: it forces N host
+# CPU devices so bench_round can measure the sharded fused_e2e round against
+# the unsharded one IN THE SAME environment (every variant then sees N
+# devices).
+if __name__ == "__main__":
+    for _i, _arg in enumerate(sys.argv):
+        if _arg == "--shard" or _arg.startswith("--shard="):
+            if "=" in _arg:
+                _n = int(_arg.split("=", 1)[1])
+            elif _i + 1 < len(sys.argv):
+                _n = int(sys.argv[_i + 1])
+            else:
+                sys.exit("--shard requires a device count (e.g. --shard 2)")
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "")
+                + f" --xla_force_host_platform_device_count={_n}"
+            ).strip()
+            break
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -299,6 +320,25 @@ def bench_round(quick: bool = True, out_json: str | None = None):
         jax.block_until_ready(e2e_engine._b_logits)
         return e2e_engine.broadcast_state(pub)
 
+    # -- PR-4: same executable with the client phase sharded over devices
+    # (only measurable when the process has >1 device: run with --shard N) --
+    shard_round = None
+    if jax.device_count() > 1:
+        shard_engine = FusedE2EEngine(
+            cohort(), cfg,
+            server=Server(cfg, aggregation="adaptive",
+                          distill_steps=server_distill_steps),
+            server_distill_steps=server_distill_steps, aggregation="adaptive",
+            shard_clients=True, **mk,
+        )
+
+        def shard_round(bcast):
+            shard_engine.run_round(
+                sel, pub, bcast, states, adaptive_k=True, send_h=True
+            )
+            jax.block_until_ready(shard_engine._b_logits)
+            return shard_engine.broadcast_state(pub)
+
     # -- R rounds per dispatch (steady-state amortisation) -----------------
     scan_engine = FusedE2EEngine(
         cohort(), cfg,
@@ -324,8 +364,11 @@ def bench_round(quick: bool = True, out_json: str | None = None):
     bc_cls = host_cls_round(bc_cls)
     bc_e2e = e2e_round(None)
     bc_e2e = e2e_round(bc_e2e)
+    if shard_round is not None:
+        bc_shard = shard_round(None)
+        bc_shard = shard_round(bc_shard)
     scan_block()  # compile
-    t_host, t_cls, t_e2e, t_scan = [], [], [], []
+    t_host, t_cls, t_e2e, t_shard, t_scan = [], [], [], [], []
     for _ in range(reps):
         t0 = time.time()
         bc_host = host_round(bc_host)
@@ -336,6 +379,10 @@ def bench_round(quick: bool = True, out_json: str | None = None):
         t0 = time.time()
         bc_e2e = e2e_round(bc_e2e)
         t_e2e.append(time.time() - t0)
+        if shard_round is not None:
+            t0 = time.time()
+            bc_shard = shard_round(bc_shard)
+            t_shard.append(time.time() - t0)
         t0 = time.time()
         scan_block()
         t_scan.append(time.time() - t0)
@@ -345,9 +392,11 @@ def bench_round(quick: bool = True, out_json: str | None = None):
         "fused_e2e": min(t_e2e) * 1e6,
         f"e2e_scan{scan_rounds}": min(t_scan) / scan_rounds * 1e6,
     }
+    if t_shard:
+        us["fused_e2e_shard"] = min(t_shard) * 1e6
 
     # -- aggregation working set + dense-stack-free proof ------------------
-    ks = host_engine._budgets(list(states), n_samples, True, num_clients)
+    ks = host_engine._budgets(list(states), n_samples, True, num_clients, True)
     k_cap = k_cap_bucket(ks, vocab)
     n_tx = sum(1 for k in ks if k > 0)
     dense_stack_bytes = n_tx * n_samples * vocab * 4
@@ -360,6 +409,8 @@ def bench_round(quick: bool = True, out_json: str | None = None):
         f"scan{scan_rounds}_vs_fused_host": us["fused_host"] / us[f"e2e_scan{scan_rounds}"],
         f"scan{scan_rounds}_vs_e2e": us["fused_e2e"] / us[f"e2e_scan{scan_rounds}"],
     }
+    if "fused_e2e_shard" in us:
+        speedups["e2e_shard_vs_e2e"] = us["fused_e2e"] / us["fused_e2e_shard"]
     shape = (
         f"C={num_clients};L2;d{d_model};V{vocab};T{seq_len};P{n_samples};"
         f"steps=4+2;srv={server_distill_steps};k_cap={k_cap}"
@@ -373,6 +424,7 @@ def bench_round(quick: bool = True, out_json: str | None = None):
             "reps": reps,
             "backend": jax.default_backend(),
             "cpu_count": os.cpu_count(),
+            "device_count": jax.device_count(),
             "us_per_round": {k: round(v) for k, v in us.items()},
             "speedups": {k: round(v, 2) for k, v in speedups.items()},
             "aggregation": {
@@ -389,19 +441,24 @@ def bench_round(quick: bool = True, out_json: str | None = None):
             "notes": (
                 "fused_host = PR-2 fused client phase AS SHIPPED (full-vocab "
                 "supervised head) + host server phase over densified (N,P,V) "
-                "stacks; fused_host_cls = same host pipeline with this PR's "
+                "stacks; fused_host_cls = same host pipeline with the PR-3 "
                 "class-column supervised head (isolates the e2e-specific "
                 "win); fused_e2e = whole round as ONE compiled call over the "
                 f"sparse (values,indices,mask) wire; e2e_scan{scan_rounds} = "
                 f"{scan_rounds} rounds per dispatch (run_rounds), per-round "
-                "figure.  Interleaved min-of-reps on this noisy 2-core CPU "
+                "figure; fused_e2e_shard (when device_count > 1, via "
+                "--shard N forced host devices) = same executable with the "
+                "client phase shard_mapped over devices — on this 2-core CPU "
+                "box forced host devices SHARE the core pool, so it bounds "
+                "placement overhead rather than projecting accelerator "
+                "speedup.  Interleaved min-of-reps on this noisy 2-core CPU "
                 "container."
             ),
         }
         with open(out_json, "w") as f:
             json.dump(record, f, indent=1)
 
-    return [
+    rows = [
         ("round_fused_host", us["fused_host"], f"{shape};pr2-as-shipped"),
         ("round_fused_host_cls", us["fused_host_cls"], f"{shape};cls-head"),
         ("round_fused_e2e", us["fused_e2e"],
@@ -409,6 +466,13 @@ def bench_round(quick: bool = True, out_json: str | None = None):
         (f"round_e2e_scan{scan_rounds}", us[f"e2e_scan{scan_rounds}"],
          f"{shape};vs_host={speedups[f'scan{scan_rounds}_vs_fused_host']:.2f}x"),
     ]
+    if "fused_e2e_shard" in us:
+        rows.append((
+            "round_fused_e2e_shard", us["fused_e2e_shard"],
+            f"{shape};devs={jax.device_count()}"
+            f";vs_e2e={speedups['e2e_shard_vs_e2e']:.2f}x",
+        ))
+    return rows
 
 
 if __name__ == "__main__":

@@ -93,14 +93,26 @@ def topk_budget(
     value_bits: int = 16,
     k_min: int = 1,
     k_max: int | None = None,
+    reserved_bits: float = 0.0,
 ) -> int:
-    """Maximum permissible k per sample: ``k = floor(eta*C*T / d)`` spread
-    over ``num_samples`` public samples uploaded this round.
+    """Maximum permissible k per sample: ``k = floor((eta*C*T - reserved)/d)``
+    spread over ``num_samples`` public samples uploaded this round.
 
     The paper states the per-logit budget; with a batch of public samples the
     same budget divides across samples (each sample's sparse vector costs
     ``k*d`` bits).  Clamped to ``[k_min, min(k_max, vocab)]`` so a client in
     deep fade still sends its argmax rather than dropping out.
+
+    ``reserved_bits`` is the fixed-cost part of the payload that rides on the
+    SAME Shannon budget before any (value, index) entry does — for the paper's
+    ``adald`` method the LoRA projection ``h``
+    (:func:`repro.core.protocol.lora_projection_bits`).  Reserving it here is
+    what makes ``PayloadSpec.fits`` hold by construction for the realized
+    payload: without the reservation the projection rode on top of a
+    budget-exact top-k and pushed the payload past capacity.  A budget that
+    cannot cover the reservation plus one entry behaves like deep fade: the
+    survival floor applies (``k_min``), or the client drops out at
+    ``k_min = 0``.
 
     A link in outage (zero bit budget) returns 0 regardless of ``k_min``:
     the survival floor exists for faded-but-alive links, but nothing can be
@@ -109,7 +121,7 @@ def topk_budget(
     if state.bit_budget <= 0.0:
         return 0
     d = bits_per_entry(value_bits, vocab_size)
-    total_entries = state.bit_budget / float(d)
+    total_entries = (state.bit_budget - float(reserved_bits)) / float(d)
     k = int(math.floor(total_entries / max(1, num_samples)))
     hi = vocab_size if k_max is None else min(k_max, vocab_size)
     return max(k_min, min(k, hi))
@@ -162,6 +174,7 @@ def topk_budget_batch(
     value_bits: int = 16,
     k_min: int = 1,
     k_max: int | None = None,
+    reserved_bits: float = 0.0,
 ) -> list[int]:
     """Per-client adaptive budgets for a round's cohort.
 
@@ -178,6 +191,7 @@ def topk_budget_batch(
             value_bits=value_bits,
             k_min=k_min,
             k_max=k_max,
+            reserved_bits=reserved_bits,
         )
         for s in states
     ]
@@ -218,41 +232,55 @@ class ChannelSimulator:
     selected client.  SNR_n(t) = mean + shadowing_n + fading_n(t), with
     shadowing fixed per client (spatial) and fading redrawn per round
     (temporal), all from a seeded generator.
+
+    Every temporal draw is keyed by ``(seed, round_index, cid)``: two
+    simulators with the same seed produce identical realisations, different
+    seeds produce different ones, and a client's fading/outage in a round is
+    a property of THAT client and round alone — independent of which other
+    clients were selected, of the cohort's ordering, and of call order.
+    (Before PR 4 the streams were keyed by ``round_index`` only and drawn
+    sequentially per cohort *position*, so the constructor seed never entered
+    them and a client's SNR depended on its neighbours in the selection.)
     """
+
+    # Stream domains: fading and outage draws must stay on disjoint keys so
+    # enabling dropout never perturbs the fading realisation of a run.
+    _FADING_DOMAIN = 7
+    _OUTAGE_DOMAIN = 8
 
     def __init__(self, num_clients: int, config: ChannelConfig | None = None, *, seed: int = 0):
         self.num_clients = int(num_clients)
         self.config = config or ChannelConfig()
+        self.seed = int(seed)
         self._rng = np.random.default_rng(seed)
         # Per-client static shadowing (log-normal in dB).
         self._shadowing_db = self._rng.normal(
             0.0, self.config.shadowing_std_db, size=self.num_clients
         )
 
+    def _stream(self, domain: int, round_index: int, cid: int) -> np.random.Generator:
+        """Fresh generator keyed by (seed, domain, round, client)."""
+        return np.random.default_rng(
+            np.random.SeedSequence(
+                entropy=self.seed, spawn_key=(domain, int(round_index), int(cid))
+            )
+        )
+
     def states(self, round_index: int, client_ids: Sequence[int]) -> list[ChannelState]:
         cfg = self.config
         eta = cfg.eta if cfg.eta is not None else 1.0 / max(1, len(client_ids))
-        # Per-round fading: seeded by (base rng stream, round) for determinism
-        # independent of call order.
-        fade_rng = np.random.default_rng(
-            np.random.SeedSequence(entropy=round_index, spawn_key=(7,))
-        )
-        # Outage draws live on a separate stream (spawn_key 8) so enabling
-        # dropout does not perturb the fading realisation of existing runs.
-        dropped = np.zeros(len(client_ids), dtype=bool)
-        if cfg.dropout_prob > 0.0:
-            drop_rng = np.random.default_rng(
-                np.random.SeedSequence(entropy=round_index, spawn_key=(8,))
-            )
-            dropped = drop_rng.random(len(client_ids)) < cfg.dropout_prob
         out = []
-        for pos, cid in enumerate(client_ids):
+        for cid in client_ids:
+            cid = int(cid)
             snr = cfg.mean_snr_db + float(self._shadowing_db[cid % self.num_clients])
             if cfg.fast_fading:
                 # Rayleigh power fading: 10*log10(Exp(1)) has mean ~ -2.5 dB.
-                snr += 10.0 * math.log10(max(1e-6, fade_rng.exponential(1.0)))
-            if dropped[pos]:
-                snr = -math.inf  # outage: zero capacity -> zero bit budget
+                fade = self._stream(self._FADING_DOMAIN, round_index, cid)
+                snr += 10.0 * math.log10(max(1e-6, fade.exponential(1.0)))
+            if cfg.dropout_prob > 0.0:
+                drop = self._stream(self._OUTAGE_DOMAIN, round_index, cid)
+                if drop.random() < cfg.dropout_prob:
+                    snr = -math.inf  # outage: zero capacity -> zero bit budget
             out.append(
                 ChannelState(
                     bandwidth_hz=cfg.bandwidth_hz,
@@ -279,10 +307,21 @@ class ChannelSimulator:
         num_samples: int,
         k_min: int | None = None,
         k_max: int | None = None,
+        lora_rank: int | None = None,
     ) -> list[int]:
         """Per-client adaptive k for this round (paper: 'based on real-time
         channel condition').  ``k_min`` defaults to the config's ``min_k`` so
-        this agrees with the round engines' straggler semantics."""
+        this agrees with the round engines' straggler semantics.
+
+        ``lora_rank`` reserves the ``adald`` LoRA-projection bits
+        (``num_samples * rank * value_bits``, §III-C) out of each client's
+        budget before the (value, index) entries are counted, so the realized
+        payload — projection included — respects the Shannon budget."""
+        reserved = (
+            float(num_samples * lora_rank * self.config.value_bits)
+            if lora_rank is not None
+            else 0.0
+        )
         return [
             topk_budget(
                 s,
@@ -291,6 +330,7 @@ class ChannelSimulator:
                 value_bits=self.config.value_bits,
                 k_min=self.config.min_k if k_min is None else k_min,
                 k_max=k_max,
+                reserved_bits=reserved,
             )
             for s in self.states(round_index, client_ids)
         ]

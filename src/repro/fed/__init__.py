@@ -5,6 +5,7 @@ from repro.fed.engine import (
     ClientPhase,
     FusedE2EEngine,
     FusedEngine,
+    RoundsTrajectory,
     SequentialEngine,
     make_engine,
 )
@@ -25,5 +26,6 @@ __all__ = [
     "SequentialEngine",
     "BroadcastState",
     "ClientPhase",
+    "RoundsTrajectory",
     "make_engine",
 ]

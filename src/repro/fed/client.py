@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.channel import ChannelState, topk_budget
-from repro.core.protocol import PayloadSpec, UplinkPayload
+from repro.core.protocol import PayloadSpec, UplinkPayload, lora_projection_bits
 from repro.core.topk import SparseLogits, topk_sparsify
 from repro.data.pipeline import epoch_batches
 from repro.data.synthetic import IntentDataset
@@ -143,15 +143,25 @@ class Client:
     ) -> ClientUpload | None:
         """Returns None when the channel budget cannot afford a single
         (value, index) entry and ``k_min == 0`` — a straggler in outage
-        transmits nothing and must not be zero-padded into aggregation."""
+        transmits nothing and must not be zero-padded into aggregation.
+
+        With ``send_h`` the LoRA-projection bits ride on the same Shannon
+        budget, so they are reserved out of it before the top-k entries are
+        counted — the realized payload (projection included) then satisfies
+        :meth:`repro.core.protocol.PayloadSpec.fits` by construction."""
         vocab = self.cfg.vocab_size
         n_samples = int(public_tokens.shape[0])
         if k_override is not None:
             k = int(min(k_override, vocab))
         else:
+            reserved = (
+                lora_projection_bits(n_samples, self.cfg.lora.rank, value_bits)
+                if (send_h and self.cfg.lora is not None)
+                else 0
+            )
             k = topk_budget(
                 channel, vocab_size=vocab, num_samples=n_samples,
-                value_bits=value_bits, k_min=k_min,
+                value_bits=value_bits, k_min=k_min, reserved_bits=reserved,
             )
         if k == 0:
             return None

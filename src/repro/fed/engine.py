@@ -48,7 +48,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.channel import BatchedChannelState, ChannelState, topk_budget_batch
-from repro.core.protocol import UplinkPayload, downlink_bits
+from repro.core.protocol import UplinkPayload, downlink_bits, lora_projection_bits
 from repro.core.topk import SparseWire, densify, topk_mask_batch
 from repro.fed import steps as fed_steps
 from repro.fed.client import Client, make_upload_payload
@@ -57,6 +57,7 @@ from repro.lora import merge_lora, split_lora
 __all__ = [
     "BroadcastState",
     "ClientPhase",
+    "RoundsTrajectory",
     "SequentialEngine",
     "BatchedEngine",
     "FusedEngine",
@@ -136,6 +137,27 @@ class ClientPhase:
     @property
     def num_transmitters(self) -> int:
         return len(self.payloads)
+
+
+@dataclasses.dataclass
+class RoundsTrajectory:
+    """Per-round observables of one :meth:`FusedE2EEngine.run_rounds` block.
+
+    ``ks``/``payloads`` are the host-side accounting (identical to what R
+    ``run_round`` calls report); ``mean_k``, ``distill_loss`` and — when
+    eval data was passed — ``server_acc``/``client_acc`` come from the
+    IN-SCAN eval tap: they are scanned outputs of the single compiled
+    multi-round dispatch, not host round-trips.  ``distill_loss`` is the
+    round's final server-distill step loss (NaN for an all-dropped round —
+    the server never distilled).
+    """
+
+    ks: list[list[int]]
+    payloads: list[list[UplinkPayload]]
+    mean_k: list[float]
+    distill_loss: list[float]
+    server_acc: list[float] | None = None
+    client_acc: list[float] | None = None
 
 
 class SequentialEngine:
@@ -295,14 +317,24 @@ class BatchedEngine:
             lambda full, new: full.at[idx].set(new), self._opt, opt
         )
 
-    def _budgets(self, states, n_samples: int, adaptive_k: bool, n_cohort: int):
+    def _budgets(
+        self, states, n_samples: int, adaptive_k: bool, n_cohort: int,
+        send_h: bool = False,
+    ):
         """Per-client adaptive k — the same host-side scalar math as the
-        sequential reference, so k (and bytes) can never drift."""
+        sequential reference, so k (and bytes) can never drift.  With
+        ``send_h`` the LoRA-projection bits are reserved out of each budget
+        first (see :meth:`repro.fed.client.Client.upload`)."""
         if not adaptive_k:
             return [self.cfg.vocab_size] * n_cohort
+        reserved = (
+            lora_projection_bits(n_samples, self.cfg.lora.rank, self.value_bits)
+            if (send_h and self.cfg.lora is not None)
+            else 0
+        )
         return topk_budget_batch(
             states, vocab_size=self.cfg.vocab_size, num_samples=n_samples,
-            value_bits=self.value_bits, k_min=self.k_min,
+            value_bits=self.value_bits, k_min=self.k_min, reserved_bits=reserved,
         )
 
     def _upload_manifests(self, cohort, states, ks, n_samples: int, send_h: bool):
@@ -368,7 +400,7 @@ class BatchedEngine:
 
         # -- lines 9-11: public inference + per-client adaptive top-k --
         n_samples = int(pub_tokens.shape[0])
-        ks = self._budgets(states, n_samples, adaptive_k, len(cohort))
+        ks = self._budgets(states, n_samples, adaptive_k, len(cohort), send_h)
 
         logits, h = self._public(lora, frozen, pub_tokens)  # (C, P, V), (C, P, r)|None
 
@@ -457,19 +489,47 @@ class FusedEngine(BatchedEngine):
 
     def _shard_over_clients(self, fn):
         from jax.experimental.shard_map import shard_map
-        from jax.sharding import Mesh, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
 
-        devs = jax.devices()
-        mesh = Mesh(np.array(devs), ("clients",))
-        c, r = P("clients"), P()
+        from repro.sharding import COHORT_AXIS, cohort_mesh
+
+        c, r = P(COHORT_AXIS), P()
         frozen_spec = r if self._shared else c
         return shard_map(
             fn,
-            mesh=mesh,
+            mesh=cohort_mesh(),
             in_specs=(c, frozen_spec, c, r, r, r, c, r, c),
             out_specs=(c, c, c, c),
             check_rep=False,
         )
+
+    def _pad_cohort(self, sel: Sequence[int], batches: dict):
+        """THE masked k = 0 shard-padding contract, in one place (used by the
+        fused client-phase round, the e2e whole round, and the e2e
+        multi-round scan): a cohort that does not divide the device count is
+        extended with duplicate rows of client ``sel[0]`` that ride at
+        ``k = 0`` — they compute alongside the cohort but transmit nothing,
+        and every caller discards their advanced state before it can be
+        observed.  Their batches are COPIES (``sel[0]``'s rng stream
+        advances exactly once).  Returns ``(pad, sel + pad dups, padded
+        batches)``; a no-op (pad 0) unless ``shard_clients``."""
+        pad = (-len(sel)) % jax.device_count() if self.shard_clients else 0
+        if not pad:
+            return 0, list(sel), batches
+        batches = {
+            key: jnp.concatenate([v, jnp.repeat(v[:1], pad, axis=0)])
+            for key, v in batches.items()
+        }
+        return pad, list(sel) + [sel[0]] * pad, batches
+
+    @staticmethod
+    def _drop_pad(n: int, *trees):
+        """Inverse of :meth:`_pad_cohort`: truncate every given pytree (or
+        array, or None) back to the ``n`` real leading-cohort rows — the one
+        place the 'pad state must never be observed' side of the contract
+        lives."""
+        out = tuple(jax.tree.map(lambda x: x[:n], t) for t in trees)
+        return out if len(out) > 1 else out[0]
 
     def run_round(
         self,
@@ -483,25 +543,11 @@ class FusedEngine(BatchedEngine):
     ) -> ClientPhase:
         cohort = [self.clients[i] for i in sel]
         states = list(states)
-        # Cohort sizes that do not divide the device count are padded with
-        # duplicate rows of client sel[0] at k = 0: they compute alongside
-        # the cohort but transmit nothing, and everything about them is
-        # discarded below (their batches are COPIES — sel[0]'s rng stream
-        # advances exactly once).
-        pad = (
-            (-len(cohort)) % jax.device_count() if self.shard_clients else 0
-        )
-        sel_call = list(sel) + [sel[0]] * pad
-
-        idx, lora, frozen, opt = self._gather_cohort(sel_call)
         batches = self._stacked_batches(cohort, step_major=False)  # (C, S, ...)
-        if pad:
-            batches = {
-                key: jnp.concatenate([v, jnp.repeat(v[:1], pad, axis=0)])
-                for key, v in batches.items()
-            }
+        pad, sel_call, batches = self._pad_cohort(sel, batches)
+        idx, lora, frozen, opt = self._gather_cohort(sel_call)
         n_samples = int(pub_tokens.shape[0])
-        ks = self._budgets(states, n_samples, adaptive_k, len(cohort))
+        ks = self._budgets(states, n_samples, adaptive_k, len(cohort), send_h)
 
         # -- the whole client phase: ONE compiled, donated call --
         if bcast is not None:
@@ -516,12 +562,9 @@ class FusedEngine(BatchedEngine):
             jnp.asarray(ks + [0] * pad, jnp.int32),
         )
         if pad:  # drop the padded rows before anything observes them
-            real = jnp.arange(len(cohort))
-            lora = jax.tree.map(lambda x: x[real], lora)
-            opt = jax.tree.map(lambda x: x[real], opt)
-            dense_all = dense_all[real]
-            h_all = h_all[real] if h_all is not None else None
-            idx = idx[: len(cohort)]
+            lora, opt, dense_all, h_all, idx = self._drop_pad(
+                len(cohort), lora, opt, dense_all, h_all, idx
+            )
 
         active, payloads, rank = self._upload_manifests(
             cohort, states, ks, n_samples, send_h
@@ -554,9 +597,20 @@ class FusedE2EEngine(FusedEngine):
     executable serves every round of a run (per power-of-two ``k_cap``
     bucket — see :func:`k_cap_bucket`).
 
+    ``shard_clients=True`` places the client phase's cohort axis over the
+    process's devices INSIDE the compiled round body (``shard_map`` in
+    :func:`repro.fed.steps.make_fused_e2e_round_fn`); the server phase stays
+    replicated.  Cohorts that do not divide the device count are padded with
+    masked ``k = 0`` duplicate rows exactly like the fused client-phase
+    engine — the pad transmits nothing, is excluded from aggregation by its
+    all-False wire mask, and its advanced state is discarded before the
+    scatter-back.
+
     :meth:`run_rounds` additionally scans R whole rounds inside one
-    compiled call (steady-state dispatch fully amortised; no per-round
-    evaluation inside).
+    compiled call (steady-state dispatch fully amortised) and taps each
+    round's server/client accuracy, server-distill loss and mean adaptive
+    ``k`` as scanned outputs — a full :class:`RoundsTrajectory` instead of a
+    blind block.
     """
 
     name = "fused_e2e"
@@ -584,12 +638,6 @@ class FusedE2EEngine(FusedEngine):
         shard_clients: bool = False,
         use_kernels: bool = False,
     ):
-        if shard_clients:
-            raise NotImplementedError(
-                "fused_e2e does not place the client axis over devices yet "
-                "(the server phase is single-model); use engine='fused' for "
-                "shard_clients"
-            )
         super().__init__(
             clients, cfg, num_classes=num_classes, lr=lr, distill_lr=distill_lr,
             temperature=temperature, lam=lam, local_steps=local_steps,
@@ -597,6 +645,7 @@ class FusedE2EEngine(FusedEngine):
             value_bits=value_bits, k_min=k_min, last_only=last_only,
             use_kernels=use_kernels,
         )
+        self.shard_clients = shard_clients
         self.server = server
         self._fn_kwargs = dict(
             lr=lr, distill_lr=distill_lr, temperature=temperature, lam=lam,
@@ -605,6 +654,7 @@ class FusedE2EEngine(FusedEngine):
             server_distill_steps=server_distill_steps,
             aggregation=aggregation, shared_backbone=self._shared,
             last_only=last_only, use_kernels=use_kernels,
+            shard_clients=shard_clients,
         )
         self._num_classes = num_classes
         self._s_lora, self._s_frozen = split_lora(server.params)
@@ -613,6 +663,7 @@ class FusedE2EEngine(FusedEngine):
         self._b_tokens: jax.Array | None = None
         self._b_logits: jax.Array | None = None
         self._b_h: jax.Array | None = None
+        self._d_loss: jax.Array | None = None
         self._steps: dict = {}
         self._drivers: dict = {}
 
@@ -655,10 +706,11 @@ class FusedE2EEngine(FusedEngine):
     ) -> ClientPhase:
         cohort = [self.clients[i] for i in sel]
         states = list(states)
-        idx, lora, frozen, opt = self._gather_cohort(sel)
         batches = self._stacked_batches(cohort, step_major=False)
+        pad, sel_call, batches = self._pad_cohort(sel, batches)
+        idx, lora, frozen, opt = self._gather_cohort(sel_call)
         n_samples = int(pub_tokens.shape[0])
-        ks = self._budgets(states, n_samples, adaptive_k, len(cohort))
+        ks = self._budgets(states, n_samples, adaptive_k, len(cohort), send_h)
         k_cap = k_cap_bucket(ks, self.cfg.vocab_size)
 
         if bcast is not None:
@@ -670,11 +722,15 @@ class FusedE2EEngine(FusedEngine):
 
         step = self._e2e_step(k_cap, send_h)
         (lora, opt, self._s_lora, self._s_opt,
-         values, indices, b_logits, b_h) = step(
+         values, indices, b_logits, b_h, self._d_loss) = step(
             lora, frozen, opt, self._s_lora, self._s_frozen, self._s_opt,
             g_tokens, g_logits, g_h, jnp.asarray(g_valid),
-            batches, pub_tokens, jnp.asarray(ks, jnp.int32),
+            batches, pub_tokens, jnp.asarray(ks + [0] * pad, jnp.int32),
         )
+        if pad:  # drop the padded rows before anything observes them
+            lora, opt, values, indices, idx = self._drop_pad(
+                len(cohort), lora, opt, values, indices, idx
+            )
         self._b_tokens, self._b_logits, self._b_h = pub_tokens, b_logits, b_h
 
         active, payloads, _rank = self._upload_manifests(
@@ -699,45 +755,77 @@ class FusedE2EEngine(FusedEngine):
         return ClientPhase(dense=None, h=None, payloads=payloads, ks=ks, sparse=sparse)
 
     # -- multi-round scan driver ------------------------------------------
-    def _rounds_driver(self, k_cap: int, send_h: bool, num_rounds: int):
-        key = (k_cap, send_h, num_rounds)
+    def _rounds_driver(
+        self, k_cap: int, send_h: bool, num_rounds: int, n_real: int,
+        has_eval: bool,
+    ):
+        key = (k_cap, send_h, num_rounds, n_real, has_eval)
         if key in self._drivers:
             return self._drivers[key]
         fn = self._e2e_fn(k_cap, send_h)
         has_h = self.server.cfg.lora is not None
+        # in-scan eval tap: same last-position class-logit accuracy as the
+        # host-side make_eval_fn, traced into the scanned round program
+        server_eval = fed_steps.make_scan_eval_fn(
+            self.server.cfg, self._num_classes, last_only=self.last_only
+        )
+        client_eval = fed_steps.make_scan_eval_fn(
+            self.cfg, self._num_classes, last_only=self.last_only
+        )
 
         def driver(fleet_lora, fleet_opt, s_lora, s_opt, frozen, s_frozen,
-                   g_tokens, g_logits, g_h, g_valid, sels, kss, pubs, batches):
+                   g_tokens, g_logits, g_h, g_valid, sels, kss, pubs, batches,
+                   *eval_args):
             def body(carry, xs):
                 fleet_lora, fleet_opt, s_lora, s_opt, g_tokens, g_logits, g_h, g_valid = carry
                 sel, ks, pub, bat = xs
                 lora = jax.tree.map(lambda x: x[sel], fleet_lora)
                 opt = jax.tree.map(lambda x: x[sel], fleet_opt)
-                lora, opt, s_lora, s_opt, _v, _i, b_logits, b_h = fn(
+                lora, opt, s_lora, s_opt, _v, _i, b_logits, b_h, d_loss = fn(
                     lora, frozen, opt, s_lora, s_frozen, s_opt,
                     g_tokens, g_logits, g_h if has_h else None, g_valid,
                     bat, pub, ks,
                 )
+                # drop the shard-padding rows (duplicates of sel[0]) BEFORE
+                # the scatter-back: .at[sel].set with duplicate indices has
+                # unspecified ordering, and the pad's advanced state must
+                # never be observed anyway
+                lora, opt = self._drop_pad(n_real, lora, opt)
+                sel_real = sel[:n_real]
                 fleet_lora = jax.tree.map(
-                    lambda full, new: full.at[sel].set(new), fleet_lora, lora
+                    lambda full, new: full.at[sel_real].set(new), fleet_lora, lora
                 )
                 fleet_opt = jax.tree.map(
-                    lambda full, new: full.at[sel].set(new), fleet_opt, opt
+                    lambda full, new: full.at[sel_real].set(new), fleet_opt, opt
                 )
+                # -- the eval tap: this round's trajectory entry ----------
+                tap = {
+                    "distill_loss": d_loss,
+                    "mean_k": jnp.mean(ks[:n_real].astype(jnp.float32)),
+                }
+                if has_eval:
+                    ev_tokens, ev_labels = eval_args
+                    tap["server_acc"] = server_eval(
+                        s_lora, s_frozen, ev_tokens, ev_labels
+                    )
+                    tap["client_acc"] = client_eval(
+                        jax.tree.map(lambda x: x[0], lora), frozen,
+                        ev_tokens, ev_labels,
+                    )
                 carry = (
                     fleet_lora, fleet_opt, s_lora, s_opt,
                     pub, b_logits, b_h if has_h else g_h, jnp.ones((), bool),
                 )
-                return carry, None
+                return carry, tap
 
-            carry, _ = jax.lax.scan(
+            carry, taps = jax.lax.scan(
                 body,
                 (fleet_lora, fleet_opt, s_lora, s_opt,
                  g_tokens, g_logits, g_h, g_valid),
                 (sels, kss, pubs, batches),
                 length=num_rounds,
             )
-            return carry
+            return carry, taps
 
         jitted = jax.jit(driver, donate_argnums=(0, 1, 2, 3))
         self._drivers[key] = jitted
@@ -751,37 +839,69 @@ class FusedE2EEngine(FusedEngine):
         *,
         adaptive_k: bool,
         send_h: bool,
-    ) -> list[tuple[list[int], list[UplinkPayload]]]:
+        eval_tokens: jax.Array | None = None,
+        eval_labels: jax.Array | None = None,
+    ) -> "RoundsTrajectory":
         """Run R whole federated rounds as ONE compiled ``lax.scan`` — the
         steady-state amortised driver (dispatch cost O(1) for the block).
 
         Per-round cohort selection/channel budgets stay host-side scalar
-        math (ledger parity with the round-at-a-time path); there is no
-        per-round evaluation inside the block.  Returns the per-round
-        ``(ks, payload manifests)`` for accounting; fleet/server/broadcast
-        state advance in place exactly as R ``run_round`` calls would.
+        math (ledger parity with the round-at-a-time path); the per-round
+        observables — server/client accuracy on the given eval arrays, the
+        server-distill loss, the mean adaptive ``k`` — are tapped INSIDE the
+        scan as scanned outputs, so the block returns a full
+        :class:`RoundsTrajectory` instead of running blind.
+        Fleet/server/broadcast state advance in place exactly as R
+        ``run_round`` calls would.
+
+        ``eval_tokens``/``eval_labels`` (omit both to skip the accuracy tap)
+        are evaluated after each round on the server model and on the
+        round's first selected client — the same models the host loop's
+        per-round evaluation reads.  The split is truncated to whole
+        :data:`repro.fed.steps.EVAL_BATCH` batches exactly like the
+        host-side evaluator (so the tap and ``make_eval_fn`` read the same
+        samples); a split smaller than one batch is rejected.
         """
         # check BEFORE consuming any client's private rng/batch stream, so
         # a caller can fall back to per-round run_round with intact state
         if not self._shared:
             raise NotImplementedError("run_rounds requires a shared backbone")
+        if (eval_tokens is None) != (eval_labels is None):
+            raise ValueError("pass eval_tokens and eval_labels together")
+        has_eval = eval_tokens is not None
         num_rounds = len(sels)
+        if num_rounds == 0:  # degenerate no-op, like zero host-loop rounds
+            return RoundsTrajectory(
+                ks=[], payloads=[], mean_k=[], distill_loss=[],
+                server_acc=[] if has_eval else None,
+                client_acc=[] if has_eval else None,
+            )
         n_samples = int(pubs[0].shape[0])
-        all_ks, all_payloads, batch_list = [], [], []
+        n_real = len(sels[0])
+        if any(len(sel) != n_real for sel in sels):
+            raise ValueError("run_rounds requires equal-size cohorts")
+
+        pad = 0
+        all_ks, all_payloads, batch_list, sels_call = [], [], [], []
         for sel, states in zip(sels, states_per_round):
             cohort = [self.clients[i] for i in sel]
             states = list(states)
-            ks = self._budgets(states, n_samples, adaptive_k, len(cohort))
+            ks = self._budgets(states, n_samples, adaptive_k, len(cohort), send_h)
             _active, payloads, _rank = self._upload_manifests(
                 cohort, states, ks, n_samples, send_h
             )
             all_ks.append(ks)
             all_payloads.append(payloads)
-            batch_list.append(self._stacked_batches(cohort, step_major=False))
+            batch = self._stacked_batches(cohort, step_major=False)
+            pad, sel_call, batch = self._pad_cohort(sel, batch)
+            batch_list.append(batch)
+            sels_call.append(sel_call)
         k_cap = k_cap_bucket([k for ks in all_ks for k in ks], self.cfg.vocab_size)
 
-        sels_arr = jnp.asarray(np.asarray(sels), jnp.int32)  # (R, C)
-        kss_arr = jnp.asarray(np.asarray(all_ks), jnp.int32)  # (R, C)
+        sels_arr = jnp.asarray(np.asarray(sels_call), jnp.int32)  # (R, C+pad)
+        kss_arr = jnp.asarray(  # (R, C+pad); pad rows transmit nothing
+            np.asarray([ks + [0] * pad for ks in all_ks]), jnp.int32
+        )
         pubs_arr = jnp.stack([jnp.asarray(p) for p in pubs])  # (R, P, L)
         batches = jax.tree.map(lambda *xs: jnp.stack(xs), *batch_list)
 
@@ -792,15 +912,43 @@ class FusedE2EEngine(FusedEngine):
             g_tokens, g_logits, g_h = self._cold_broadcast(pubs_arr[0], n_samples)
             g_valid = False
 
-        driver = self._rounds_driver(k_cap, send_h, num_rounds)
-        (self._lora, self._opt, self._s_lora, self._s_opt,
-         self._b_tokens, self._b_logits, self._b_h, _valid) = driver(
+        eval_args = ()
+        if has_eval:
+            # whole EVAL_BATCH batches only — the host evaluator's walk, and
+            # the precondition of make_scan_eval_fn's bounded-memory chunking
+            seen = (
+                int(eval_tokens.shape[0]) // fed_steps.EVAL_BATCH
+            ) * fed_steps.EVAL_BATCH
+            if seen == 0:
+                raise ValueError(
+                    f"eval split of {int(eval_tokens.shape[0])} samples is "
+                    f"smaller than one eval batch ({fed_steps.EVAL_BATCH})"
+                )
+            eval_args = (
+                jnp.asarray(eval_tokens[:seen]), jnp.asarray(eval_labels[:seen])
+            )
+        driver = self._rounds_driver(k_cap, send_h, num_rounds, n_real, has_eval)
+        carry, taps = driver(
             self._lora, self._opt, self._s_lora, self._s_opt,
             self._frozen, self._s_frozen,
             g_tokens, g_logits, g_h, jnp.asarray(g_valid),
-            sels_arr, kss_arr, pubs_arr, batches,
+            sels_arr, kss_arr, pubs_arr, batches, *eval_args,
         )
-        return list(zip(all_ks, all_payloads))
+        (self._lora, self._opt, self._s_lora, self._s_opt,
+         self._b_tokens, self._b_logits, self._b_h, _valid) = carry
+        self._d_loss = taps["distill_loss"][-1]
+
+        def _tolist(name):
+            return [float(x) for x in np.asarray(taps[name])]
+
+        return RoundsTrajectory(
+            ks=all_ks,
+            payloads=all_payloads,
+            mean_k=_tolist("mean_k"),
+            distill_loss=_tolist("distill_loss"),
+            server_acc=_tolist("server_acc") if has_eval else None,
+            client_acc=_tolist("client_acc") if has_eval else None,
+        )
 
     # -- server-state plumbing for the round loop ------------------------
     def broadcast_state(self, pub_tokens: jax.Array) -> BroadcastState:
@@ -819,6 +967,13 @@ class FusedE2EEngine(FusedEngine):
         return BroadcastState(
             tokens=pub_tokens, logits=self._b_logits, h=self._b_h, bits=bits
         )
+
+    @property
+    def last_distill_loss(self) -> float:
+        """The final server-distill step loss of the last executed round
+        (computed in-program; NaN before any round ran or for an all-dropped
+        round)."""
+        return float("nan") if self._d_loss is None else float(self._d_loss)
 
     def sync_server(self) -> None:
         """Materialise the engine-held server state back onto the Server

@@ -25,13 +25,13 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.channel import ChannelConfig, ChannelSimulator
-from repro.core.protocol import CommLedger, RoundStats
+from repro.core.protocol import CommLedger, RoundStats, downlink_bits
 from repro.data.partition import dirichlet_partition, iid_partition, split_public_private
 from repro.data.synthetic import IntentDataset
 from repro.fed.client import Client
 from repro.fed.engine import BroadcastState, make_engine
 from repro.fed.server import Server
-from repro.fed.steps import make_eval_fn
+from repro.fed.steps import EVAL_BATCH, make_eval_fn
 
 __all__ = ["FedConfig", "FedRun", "run_federated", "METHODS"]
 
@@ -63,8 +63,16 @@ class FedConfig:
     # only — the task reads nothing else; cuts head FLOPs ~seq_len×.  False
     # restores the seed behaviour of materialising (B, T, V).
     last_only: bool = True
-    # Fused engine only: place the client axis over jax devices (shard_map).
+    # Fused engines: place the client axis over jax devices (shard_map).  For
+    # "fused_e2e" the placement lives INSIDE the whole-round executable (the
+    # server phase stays replicated); odd cohorts are padded with masked
+    # k = 0 rows.
     shard_clients: bool = False
+    # fused_e2e only: run ALL rounds as ONE compiled lax.scan dispatch
+    # (FusedE2EEngine.run_rounds) with the per-round eval tapped inside the
+    # scan — the R-round trajectory (accuracies, distill loss, mean_k) comes
+    # back as scanned outputs instead of R host round-trips.
+    scan_rounds: bool = False
     num_clients: int = 50
     clients_per_round: int = 10
     rounds: int = 20
@@ -106,6 +114,9 @@ class FedRun:
     # Per-round list of each selected client's adaptive k (0 = dropped
     # straggler that transmitted nothing).
     per_client_k: list[list[int]] = dataclasses.field(default_factory=list)
+    # Per-round final server-distill step loss (NaN when the engine does not
+    # expose it — only the fused_e2e engine computes it in-program).
+    distill_loss: list[float] = dataclasses.field(default_factory=list)
 
     def summary(self) -> dict:
         return {
@@ -229,20 +240,96 @@ def run_federated(
 
     pub_rng = np.random.default_rng(fed.seed + 7)
 
+    def draw_round(rnd: int):
+        """One round's host-rng draws — cohort, public batch, channel
+        realisation — in THE canonical order.  The per-round loop and the
+        scan_rounds pre-draw both go through here, so the two paths can
+        never desynchronize their rng streams."""
+        sel = rng.choice(fed.num_clients, size=fed.clients_per_round, replace=False)
+        pub_sel = pub_rng.integers(0, len(public), size=fed.public_batch)
+        return (
+            [int(i) for i in sel],
+            jnp.asarray(public.tokens[pub_sel]),
+            chan_sim.states_batched(rnd, list(sel)),
+        )
+
+    if fed.scan_rounds:
+        if not handles_server:
+            raise ValueError(
+                "FedConfig.scan_rounds requires engine='fused_e2e' "
+                f"(got {fed.engine!r})"
+            )
+        # Pre-draw every round in the same order the per-round loop uses,
+        # then run the whole federation as one compiled multi-round dispatch
+        # with the eval tap inside the scan.
+        sels, pubs, states_list = [], [], []
+        for rnd in range(fed.rounds):
+            sel, pub_tokens, states = draw_round(rnd)
+            sels.append(sel)
+            pubs.append(pub_tokens)
+            states_list.append(states)
+        # the in-scan tap reads the same samples the host-side batched eval
+        # walks (whole eval batches; the remainder is dropped there too)
+        seen = (len(eval_tokens) // EVAL_BATCH) * EVAL_BATCH
+        eval_kw = {}
+        if seen:
+            eval_kw = dict(
+                eval_tokens=jnp.asarray(eval_tokens[:seen]),
+                eval_labels=jnp.asarray(eval_labels[:seen]),
+            )
+        traj = engine.run_rounds(
+            sels, pubs, states_list,
+            adaptive_k=preset["adaptive_k"], send_h=preset["send_h"],
+            **eval_kw,
+        )
+        engine.sync_server()
+        b_rank = server_cfg.lora.rank if server_cfg.lora is not None else None
+        b_bits = downlink_bits(fed.public_batch, server_cfg.vocab_size, b_rank)
+        for rnd in range(fed.rounds):
+            # an eval split smaller than one batch degenerates to 0.0 on the
+            # host path (no whole batch to walk) — mirror it, not NaN
+            s_acc = traj.server_acc[rnd] if traj.server_acc else 0.0
+            c_acc = traj.client_acc[rnd] if traj.client_acc else 0.0
+            downlink = b_bits * len(sels[rnd]) if rnd > 0 else 0
+            uplink = float(sum(p.bytes for p in traj.payloads[rnd]))
+            run.server_acc.append(s_acc)
+            run.client_acc.append(c_acc)
+            run.mean_k.append(traj.mean_k[rnd])
+            run.per_client_k.append(list(traj.ks[rnd]))
+            run.distill_loss.append(traj.distill_loss[rnd])
+            ledger.record(
+                RoundStats(
+                    round_index=rnd,
+                    uplink_bytes=uplink,
+                    downlink_bytes=downlink / 8.0,
+                    server_accuracy=s_acc,
+                    client_accuracy=c_acc,
+                    distill_loss=traj.distill_loss[rnd],
+                    mean_k=traj.mean_k[rnd],
+                    num_selected=len(sels[rnd]),
+                    num_transmitters=len(traj.payloads[rnd]),
+                )
+            )
+            if verbose:
+                print(
+                    f"[{fed.method}/{fed.engine}+scan] round {rnd:3d}  "
+                    f"server_acc={s_acc:.3f} client_acc={c_acc:.3f}  "
+                    f"mean_k={traj.mean_k[rnd]:7.1f}  uplink={uplink/1e6:.2f}MB  "
+                    f"tx={len(traj.payloads[rnd])}/{len(sels[rnd])}"
+                )
+        return run
+
     # Broadcast knowledge carried across rounds: None until the server has
     # distilled once (cold server at round 0 -> no downlink that round).
     bcast: BroadcastState | None = None
     for rnd in range(fed.rounds):
-        sel = rng.choice(fed.num_clients, size=fed.clients_per_round, replace=False)
-        pub_sel = pub_rng.integers(0, len(public), size=fed.public_batch)
-        pub_tokens = jnp.asarray(public.tokens[pub_sel])
+        sel, pub_tokens, states = draw_round(rnd)
 
         # one broadcast of last round's knowledge per selected client
         downlink = bcast.bits * len(sel) if bcast is not None else 0
 
-        states = chan_sim.states_batched(rnd, list(sel))
         phase = engine.run_round(
-            list(sel), pub_tokens, bcast, states,
+            sel, pub_tokens, bcast, states,
             adaptive_k=preset["adaptive_k"], send_h=preset["send_h"],
         )
 
@@ -265,10 +352,14 @@ def run_federated(
             engine.client_params(sel[0]), jnp.asarray(eval_tokens), jnp.asarray(eval_labels)
         )
         uplink = phase.uplink_bytes
+        d_loss = (
+            engine.last_distill_loss if handles_server else float("nan")
+        )
         run.server_acc.append(s_acc)
         run.client_acc.append(c_acc)
         run.mean_k.append(float(np.mean(phase.ks)))
         run.per_client_k.append(list(phase.ks))
+        run.distill_loss.append(d_loss)
         ledger.record(
             RoundStats(
                 round_index=rnd,
@@ -276,6 +367,7 @@ def run_federated(
                 downlink_bytes=downlink / 8.0,
                 server_accuracy=s_acc,
                 client_accuracy=c_acc,
+                distill_loss=d_loss,
                 mean_k=float(np.mean(phase.ks)),
                 num_selected=len(sel),
                 num_transmitters=phase.num_transmitters,

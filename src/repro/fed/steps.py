@@ -25,7 +25,7 @@ from repro.core.distill import (
     teacher_log_probs,
     total_distill_loss,
 )
-from repro.core.topk import sparsify_wire, topk_mask_dynamic
+from repro.core.topk import SparseWire, sparsify_wire, topk_mask_dynamic
 from repro.lora import merge_lora, split_lora
 from repro.models import forward
 from repro.optim import AdamWState, adamw_init, adamw_update
@@ -42,6 +42,7 @@ __all__ = [
     "make_fused_round_fn",
     "make_fused_e2e_round_fn",
     "make_eval_fn",
+    "make_scan_eval_fn",
     "init_lora_opt",
 ]
 
@@ -530,6 +531,7 @@ def make_fused_e2e_round_fn(
     shared_backbone: bool = True,
     last_only: bool = True,
     use_kernels: bool = False,
+    shard_clients: bool = False,
 ) -> Callable:
     """ONE whole federated round — client phase AND server phase — as ONE
     function (Fig. 1 steps 1-10 / Algorithm 1 lines 3-16).
@@ -541,7 +543,8 @@ def make_fused_e2e_round_fn(
        ks (C,) int32)
     -> (lora, opt, s_lora, s_opt,
         values (C,P,k_cap), indices (C,P,k_cap),      # sparse uplink wire
-        b_logits (P,V), b_h (P,r)|None)               # next-round broadcast
+        b_logits (P,V), b_h (P,r)|None,               # next-round broadcast
+        d_loss ())                                    # last server-distill loss
 
     Extends :func:`make_fused_round_fn` past the server boundary:
 
@@ -562,10 +565,24 @@ def make_fused_e2e_round_fn(
       discards the client distillation updates, and a round where every
       selected client dropped (all ``ks == 0``) discards the server
       update — the broadcast still refreshes on the current public batch,
-      exactly as the host round loop behaves.
+      exactly as the host round loop behaves (``d_loss`` is NaN then, like
+      the host ledger's never-written field).
 
     One executable therefore serves every round of a run (per ``k_cap``
     bucket), and a steady-state round is a single dispatch.
+
+    ``shard_clients=True`` places the CLIENT phase's leading cohort axis over
+    the process's devices with ``shard_map`` (mesh
+    :func:`repro.sharding.cohort_mesh`): the per-client round bodies and the
+    uplink sparsifier run device-parallel, and only the O(C·P·k_cap) sparse
+    wire (plus the (C, P, r) projections) crosses back — the server phase
+    (wire aggregation, the server-distill scan, the broadcast recompute) is
+    a single-model computation and stays OUTSIDE the shard_map, replicated
+    by XLA's SPMD partitioner.  The cohort size must divide the device
+    count; the round engine pads short/odd cohorts with masked ``k = 0``
+    duplicate rows (they transmit nothing, the all-False wire mask excludes
+    them from aggregation, and the engine discards their advanced state), so
+    the function body itself needs no padding logic.
 
     Round-level CSE the split pipeline cannot do: the teacher side of every
     distillation KL (eq. 9) is a CONSTANT of the round, so its log-softmax
@@ -598,16 +615,47 @@ def make_fused_e2e_round_fn(
         )
         return t_logp, th_logp, support
 
-    def fn(lora, frozen, opt, s_lora, s_frozen, s_opt,
-           g_tokens, g_logits, g_h, g_valid, batches, pub_tokens, ks):
-        # -- client phase (lines 3-9); broadcast teacher softmaxed ONCE --
+    def client_phase(lora, frozen, opt, g_tokens, t_cache, g_valid,
+                     batches, pub_tokens, ks):
+        """Lines 3-11 for (a device's shard of) the cohort: the vmapped
+        per-client round bodies + the sparse-wire sparsifier.  Everything
+        here is per-client-independent, so it shards cleanly over the
+        cohort axis; the wire triple it returns is the ONLY client-phase
+        product the (replicated) server phase reads besides ``h``."""
         lora, opt, last, h = vm(
-            lora, frozen, opt, g_tokens, teacher_cache(g_logits, g_h), g_valid,
-            batches, pub_tokens
+            lora, frozen, opt, g_tokens, t_cache, g_valid, batches, pub_tokens
+        )
+        wire = sparsify_wire(last, ks, k_cap)
+        return lora, opt, wire.values, wire.indices, wire.mask, h
+
+    if shard_clients:
+        from jax.experimental.shard_map import shard_map
+
+        from repro.sharding import COHORT_AXIS, cohort_mesh
+
+        c, r = jax.sharding.PartitionSpec(COHORT_AXIS), jax.sharding.PartitionSpec()
+        frozen_spec = r if shared_backbone else c
+        client_phase = shard_map(
+            client_phase,
+            mesh=cohort_mesh(),
+            in_specs=(c, frozen_spec, c, r, r, r, c, r, c),
+            out_specs=(c, c, c, c, c, c),
+            check_rep=False,
         )
 
-        # -- lines 10-11: adaptive top-k as the sparse uplink wire --
-        wire = sparsify_wire(last, ks, k_cap)
+    def fn(lora, frozen, opt, s_lora, s_frozen, s_opt,
+           g_tokens, g_logits, g_h, g_valid, batches, pub_tokens, ks):
+        # -- client phase (lines 3-11); broadcast teacher softmaxed ONCE,
+        # then the whole phase device-parallel over the cohort axis when
+        # shard_clients; the uplink leaves it as the sparse wire --
+        lora, opt, w_values, w_indices, w_mask, h = client_phase(
+            lora, frozen, opt, g_tokens, teacher_cache(g_logits, g_h), g_valid,
+            batches, pub_tokens, ks
+        )
+        wire = SparseWire(
+            values=w_values, indices=w_indices, mask=w_mask,
+            vocab=client_cfg.vocab_size,
+        )
         n_tx = jnp.sum((ks > 0).astype(jnp.int32))
 
         # -- line 15: aggregation from the wire (eqs. 6-7) --
@@ -626,13 +674,13 @@ def make_fused_e2e_round_fn(
 
         def server_body(carry, _):
             sl, so = carry
-            (_, _), grads = jax.value_and_grad(server_kd_loss, has_aux=True)(
+            (loss, _), grads = jax.value_and_grad(server_kd_loss, has_aux=True)(
                 sl, s_frozen, pub_tokens, kg_logp, kg_h_logp, kg_support
             )
             sl, so = adamw_update(grads, so, sl, lr=distill_lr)
-            return (sl, so), None
+            return (sl, so), loss
 
-        (new_sl, new_so), _ = jax.lax.scan(
+        (new_sl, new_so), losses = jax.lax.scan(
             server_body, (s_lora, s_opt), None, length=server_distill_steps
         )
         # every selected client dropped -> no aggregation, no server update
@@ -640,31 +688,100 @@ def make_fused_e2e_round_fn(
         keep = lambda new, old: jnp.where(has_tx, new, old)
         s_lora = jax.tree.map(keep, new_sl, s_lora)
         s_opt = jax.tree.map(keep, new_so, s_opt)
+        # observability tap: the final server-distill loss of the round
+        # (NaN when no client transmitted — the server never distilled)
+        d_loss = jnp.where(
+            has_tx,
+            losses[-1] if server_distill_steps else jnp.float32(jnp.nan),
+            jnp.nan,
+        )
 
         # -- lines 1-2 of the NEXT round: refreshed broadcast knowledge --
         b_last, b_aux = last_logits(
             merge_lora(s_lora, s_frozen), server_cfg,
             {"tokens": pub_tokens}, last_only=last_only,
         )
-        return lora, opt, s_lora, s_opt, wire.values, wire.indices, b_last, b_aux.lora_h
+        return (lora, opt, s_lora, s_opt, wire.values, wire.indices,
+                b_last, b_aux.lora_h, d_loss)
 
     return fn
 
 
-@functools.lru_cache(maxsize=64)
-def make_eval_fn(
-    cfg: ModelConfig, num_classes: int, *, batch_size: int = 64, last_only: bool = True
-) -> Callable:
-    """Accuracy over an IntentDataset (numpy arrays), batched + jitted."""
+# Host-eval batch size: make_eval_fn walks whole batches of this size and
+# drops the remainder; the in-scan eval tap truncates its eval arrays with
+# the SAME constant so both paths read the same samples.
+EVAL_BATCH = 64
 
-    @functools.partial(jax.jit, static_argnames=())
-    def batch_acc(params, tokens, labels):
+
+def _eval_correct_fn(cfg: ModelConfig, num_classes: int, last_only: bool) -> Callable:
+    """correct(params, tokens, labels) -> () float32 count of correct
+    last-position class predictions — the ONE copy of the eval math shared
+    by the host-side batched evaluator and the in-scan eval tap (their 1e-6
+    parity contract rests on this being literally the same function)."""
+
+    def correct(params, tokens, labels):
         last, _ = last_logits(
             params, cfg, {"tokens": tokens}, last_only=last_only,
             head_cols=num_classes if last_only else None,
         )
         cls = class_logits(last, num_classes)
         return jnp.sum((jnp.argmax(cls, -1) == labels).astype(jnp.float32))
+
+    return correct
+
+
+@functools.lru_cache(maxsize=64)
+def make_scan_eval_fn(
+    cfg: ModelConfig, num_classes: int, *, last_only: bool = True
+) -> Callable:
+    """Traceable accuracy for the in-scan eval tap (``run_rounds``).
+
+    acc(lora, frozen, tokens (B, L), labels (B,)) -> () float32 — the same
+    per-sample math as :func:`make_eval_fn`'s batched host loop (shared via
+    :func:`_eval_correct_fn`), traceable inside a ``lax.scan`` body.
+    Unjitted: the multi-round driver traces it into the scanned round
+    program.  Eval splits that divide :data:`EVAL_BATCH` are walked in
+    ``lax.map`` chunks of that size — the host loop's bounded activation
+    footprint, not one (B, L, d) forward over the whole split inside the
+    compiled program (the per-chunk correct-counts are integers, so the
+    chunked sum is exact).
+    """
+    correct = _eval_correct_fn(cfg, num_classes, last_only)
+
+    def acc(lora, frozen, tokens, labels):
+        params = merge_lora(lora, frozen)
+        n = int(labels.shape[0])
+        if n == 0 or n % EVAL_BATCH:
+            # fail at trace time rather than silently diverge from the host
+            # evaluator's whole-batch walk (the 1e-6 parity contract)
+            raise ValueError(
+                f"eval split must be a non-empty multiple of "
+                f"EVAL_BATCH={EVAL_BATCH}, got {n}"
+            )
+        if n == EVAL_BATCH:
+            total = correct(params, tokens, labels)
+        else:
+            tb = tokens.reshape((n // EVAL_BATCH, EVAL_BATCH) + tokens.shape[1:])
+            lb = labels.reshape(n // EVAL_BATCH, EVAL_BATCH)
+            total = jnp.sum(
+                jax.lax.map(lambda tl: correct(params, tl[0], tl[1]), (tb, lb))
+            )
+        return total / n
+
+    return acc
+
+
+@functools.lru_cache(maxsize=64)
+def make_eval_fn(
+    cfg: ModelConfig,
+    num_classes: int,
+    *,
+    batch_size: int = EVAL_BATCH,
+    last_only: bool = True,
+) -> Callable:
+    """Accuracy over an IntentDataset (numpy arrays), batched + jitted."""
+
+    batch_acc = jax.jit(_eval_correct_fn(cfg, num_classes, last_only))
 
     def evaluate(params, tokens, labels) -> float:
         n = tokens.shape[0]

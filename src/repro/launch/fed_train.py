@@ -11,6 +11,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import math
 import os
 
 from repro.configs.gpt2_paper import REDUCED_CLIENT, REDUCED_SERVER
@@ -34,8 +35,14 @@ def main(argv=None) -> int:
                     help="materialise full (B,T,V) logits instead of the "
                          "last-only LM head (the pre-PR-2 behaviour)")
     ap.add_argument("--shard-clients", action="store_true",
-                    help="fused engine: place the client axis over jax "
-                         "devices via shard_map")
+                    help="fused/fused_e2e engines: place the client axis "
+                         "over jax devices via shard_map (for fused_e2e the "
+                         "placement lives inside the whole-round executable; "
+                         "the server phase stays replicated)")
+    ap.add_argument("--scan-rounds", action="store_true",
+                    help="fused_e2e only: run ALL rounds as one compiled "
+                         "lax.scan dispatch with the per-round eval tapped "
+                         "inside the scan")
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--per-round", type=int, default=4)
@@ -63,6 +70,7 @@ def main(argv=None) -> int:
         use_kernels=args.use_kernels,
         last_only=not args.full_head,
         shard_clients=args.shard_clients,
+        scan_rounds=args.scan_rounds,
     )
     run = run_federated(REDUCED_CLIENT, REDUCED_SERVER, ds, fed, verbose=True)
 
@@ -73,6 +81,11 @@ def main(argv=None) -> int:
         "server_acc": run.server_acc,
         "client_acc": run.client_acc,
         "mean_k": run.mean_k,
+        # null, not bare NaN (engines without the in-program tap report NaN;
+        # bare NaN is not RFC-8259 JSON)
+        "distill_loss": [
+            None if math.isnan(x) else x for x in run.distill_loss
+        ],
         "uplink_mb_per_round": [r.uplink_bytes / 1e6 for r in run.ledger.rounds],
         "downlink_mb_per_round": [r.downlink_bytes / 1e6 for r in run.ledger.rounds],
         "summary": run.summary(),

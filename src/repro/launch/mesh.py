@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh", "V5E"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_client_mesh", "V5E"]
 
 # TPU v5e per-chip constants (roofline denominators).
 V5E = {
@@ -34,3 +34,13 @@ def make_host_mesh(shape=(2, 2), axes=("data", "model")):
     return jax.make_mesh(
         shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
     )
+
+
+def make_client_mesh():
+    """The federated engines' cohort placement: a 1-D mesh over all devices
+    (axis ``"clients"``).  Launch-side alias of
+    :func:`repro.sharding.cohort_mesh` so FL drivers and the production
+    launcher construct meshes from one module."""
+    from repro.sharding import cohort_mesh
+
+    return cohort_mesh()

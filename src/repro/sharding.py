@@ -25,8 +25,10 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
+    "COHORT_AXIS",
     "axis_names",
     "batch_axes",
+    "cohort_mesh",
     "fsdp_axes",
     "param_specs",
     "batch_specs",
@@ -35,6 +37,28 @@ __all__ = [
     "named",
     "tree_named",
 ]
+
+# ---------------------------------------------------------------------------
+# federated cohort axis
+#
+# The FL round engines' leading client axis is embarrassingly parallel
+# (Algorithm 1 runs each selected client independently), so its device
+# placement is a plain 1-D mesh — orthogonal to the production data/model
+# mesh above.  One shared name + constructor keeps the fused client-phase
+# shard_map and the fused-e2e in-body shard_map on the same axis contract.
+# ---------------------------------------------------------------------------
+
+COHORT_AXIS = "clients"
+
+
+def cohort_mesh() -> Mesh:
+    """1-D mesh over every addressable device, axis :data:`COHORT_AXIS` —
+    where the round engines place the selected cohort (``shard_clients``).
+    On CPU, exercised via ``XLA_FLAGS=--xla_force_host_platform_device_count``.
+    """
+    import numpy as np
+
+    return Mesh(np.array(jax.devices()), (COHORT_AXIS,))
 
 
 def axis_names(mesh: Mesh) -> tuple[str, ...]:

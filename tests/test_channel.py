@@ -64,3 +64,94 @@ def test_simulator_eta_default_splits_channel():
     sim = ChannelSimulator(10, ChannelConfig(eta=None), seed=0)
     st = sim.states(0, list(range(5)))
     assert all(s.eta == pytest.approx(1 / 5) for s in st)
+
+
+# ---- PR 4 channel-realisation regression: (seed, round, cid) keying --------
+
+
+def test_simulator_seed_enters_fading():
+    """Different constructor seeds must produce different fading realisations
+    (pre-fix, the fading stream was keyed by round_index only and two
+    simulators with different seeds shared identical draws)."""
+    cfg = ChannelConfig(shadowing_std_db=0.0)  # isolate the fading stream
+    a = ChannelSimulator(10, cfg, seed=0)
+    b = ChannelSimulator(10, cfg, seed=1)
+    sa = [s.snr_db for s in a.states(3, [0, 1, 2])]
+    sb = [s.snr_db for s in b.states(3, [0, 1, 2])]
+    assert sa != sb
+
+
+def test_simulator_cohort_composition_invariance():
+    """A client's SNR in a round is a property of (seed, round, client) alone:
+    invariant under cohort permutation, under which other clients were
+    selected, and under repeated calls (pre-fix, fading was drawn
+    sequentially per cohort POSITION)."""
+    sim = ChannelSimulator(20, ChannelConfig(eta=0.1), seed=5)
+    full = {cid: s.snr_db for cid, s in zip([0, 3, 7], sim.states(2, [0, 3, 7]))}
+    perm = {cid: s.snr_db for cid, s in zip([7, 0, 3], sim.states(2, [7, 0, 3]))}
+    assert full == perm
+    # a different cohort containing client 3 sees the same realisation for 3
+    other = {cid: s.snr_db for cid, s in zip([3, 11], sim.states(2, [3, 11]))}
+    assert other[3] == full[3]
+    # and a singleton query agrees too (call order / count is irrelevant)
+    assert sim.states(2, [7])[0].snr_db == full[7]
+
+
+def test_simulator_dropout_keyed_per_client_and_seed():
+    """Outage draws share the same (seed, round, cid) keying: deterministic,
+    seed-dependent, composition-independent — and enabling dropout never
+    perturbs the fading realisation (disjoint stream domains)."""
+    cfg = ChannelConfig(dropout_prob=0.5)
+    sim = ChannelSimulator(30, cfg, seed=9)
+    ids = list(range(30))
+    drops = [math.isinf(s.snr_db) for s in sim.states(1, ids)]
+    assert drops == [math.isinf(s.snr_db) for s in sim.states(1, ids)]
+    assert any(drops) and not all(drops)
+    # permuting the cohort permutes the outage pattern with it
+    sub = [math.isinf(s.snr_db) for s in sim.states(1, [5, 17])]
+    assert sub == [drops[5], drops[17]]
+    # a different seed draws a different outage pattern
+    other = [math.isinf(s.snr_db) for s in ChannelSimulator(30, cfg, seed=10).states(1, ids)]
+    assert drops != other
+    # alive clients' fading is untouched by the dropout feature being on
+    no_drop = ChannelSimulator(30, ChannelConfig(), seed=9).states(1, ids)
+    for s_with, s_without, dropped in zip(sim.states(1, ids), no_drop, drops):
+        if not dropped:
+            assert s_with.snr_db == s_without.snr_db
+
+
+# ---- PR 4 budget regression: reserved bits (adald LoRA projection) ---------
+
+
+def test_topk_budget_reserved_bits():
+    """Reserving the LoRA-projection bits shrinks k so the REALIZED payload
+    (projection included) fits the budget; an unaffordable reservation
+    behaves like deep fade (survival floor / dropout)."""
+    st = ChannelState(bandwidth_hz=1e6, snr_db=0.0, eta=0.5, deadline_s=1.0)
+    # budget = 5e5 bits; d = 32 for vocab 50288
+    base = topk_budget(st, vocab_size=50_288, num_samples=100)
+    reserved = 100 * 8 * 16  # samples * rank * value_bits
+    k = topk_budget(st, vocab_size=50_288, num_samples=100, reserved_bits=reserved)
+    assert k == math.floor((5e5 - reserved) / 32 / 100) < base
+    # realized payload (entries + projection) respects the budget
+    assert 100 * k * 32 + reserved <= st.bit_budget
+    # reservation >= budget: survival floor at k_min=1, dropout at k_min=0
+    assert topk_budget(
+        st, vocab_size=50_288, num_samples=100, reserved_bits=1e6
+    ) == 1
+    assert topk_budget(
+        st, vocab_size=50_288, num_samples=100, reserved_bits=1e6, k_min=0
+    ) == 0
+
+
+def test_topk_for_lora_rank_reserves_projection():
+    """ChannelSimulator.topk_for(lora_rank=r) reserves samples*r*value_bits
+    per client before counting (value, index) entries."""
+    sim = ChannelSimulator(4, ChannelConfig(bandwidth_hz=2e5, mean_snr_db=2.0), seed=0)
+    plain = sim.topk_for(0, [0, 1, 2], vocab_size=1024, num_samples=64)
+    shaved = sim.topk_for(0, [0, 1, 2], vocab_size=1024, num_samples=64, lora_rank=8)
+    d = bits_per_entry(16, 1024)
+    for s, k0, k1 in zip(sim.states(0, [0, 1, 2]), plain, shaved):
+        assert k1 <= k0
+        if k1 > sim.config.min_k:  # budget-derived, not the survival floor
+            assert 64 * k1 * d + 64 * 8 * 16 <= s.bit_budget + 1e-6

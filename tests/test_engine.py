@@ -53,11 +53,12 @@ def _dataset():
 
 
 def _cfg(engine, method="adald", channel=CHAN, rounds=2, **kw):
+    kw.setdefault("pretrain_steps", 0)
     return FedConfig(
         method=method, engine=engine, num_clients=4, clients_per_round=2,
         rounds=rounds, public_size=64, public_batch=16, eval_size=64,
         local_steps=2, distill_steps=1, server_distill_steps=2,
-        pretrain_steps=0, seed=0, channel=channel, **kw,
+        seed=0, channel=channel, **kw,
     )
 
 
@@ -331,10 +332,12 @@ def test_fused_e2e_sparse_wire_matches_dense_uplink():
 def test_fused_e2e_run_rounds_matches_per_round():
     """run_rounds(R) — R whole rounds inside ONE lax.scan dispatch — leaves
     the fleet, the server and the broadcast exactly where R single
-    run_round calls do, and reports identical (ks, payload) accounting."""
+    run_round calls do, reports identical (ks, payload) accounting, and its
+    IN-SCAN eval tap reproduces the per-round host evaluation at 1e-6."""
     import jax
 
     from repro.core import ChannelConfig as CC, ChannelSimulator
+    from repro.fed.steps import make_eval_fn
 
     ds, c_a = _shared_cohort(4)
     _, c_b = _shared_cohort(4)
@@ -343,21 +346,44 @@ def test_fused_e2e_run_rounds_matches_per_round():
     sels = [[0, 1], [2, 3]]
     pubs = [jnp.asarray(ds.tokens[:16]), jnp.asarray(ds.tokens[16:32])]
     states = [sim.states_batched(r, sels[r]) for r in range(2)]
+    # one whole host-eval batch (64), so the host loop and the in-scan tap
+    # read exactly the same samples
+    ev_tok = jnp.asarray(ds.tokens[300:364])
+    ev_lab = jnp.asarray(ds.labels[300:364])
+    evaluate_s = make_eval_fn(SERVER, ds.num_classes)
+    evaluate_c = make_eval_fn(CLIENT, ds.num_classes)
 
-    p0 = a.run_round(sels[0], pubs[0], None, states[0], adaptive_k=True, send_h=True)
-    p1 = a.run_round(
-        sels[1], pubs[1], a.broadcast_state(pubs[0]), states[1],
-        adaptive_k=True, send_h=True,
+    # -- per-round reference: run_round + host-side eval after each round --
+    want_s, want_c, want_d = [], [], []
+    phases, bcast = [], None
+    for r in range(2):
+        phases.append(a.run_round(
+            sels[r], pubs[r], bcast, states[r], adaptive_k=True, send_h=True
+        ))
+        bcast = a.broadcast_state(pubs[r])
+        a.sync_server()
+        want_s.append(evaluate_s(a.server.params, ev_tok, ev_lab))
+        want_c.append(evaluate_c(a.client_params(sels[r][0]), ev_tok, ev_lab))
+        want_d.append(a.last_distill_loss)
+    p0, p1 = phases
+
+    traj = b.run_rounds(
+        sels, pubs, states, adaptive_k=True, send_h=True,
+        eval_tokens=ev_tok, eval_labels=ev_lab,
     )
-    a.sync_server()
-
-    out = b.run_rounds(sels, pubs, states, adaptive_k=True, send_h=True)
     b.sync_server()
 
-    assert [ks for ks, _ in out] == [p0.ks, p1.ks]
-    assert [[p.bytes for p in pl] for _, pl in out] == [
+    assert traj.ks == [p0.ks, p1.ks]
+    assert [[p.bytes for p in pl] for pl in traj.payloads] == [
         [p.bytes for p in p0.payloads], [p.bytes for p in p1.payloads]
     ]
+    # the in-scan eval tap == the per-round host evaluation
+    np.testing.assert_allclose(traj.server_acc, want_s, atol=1e-6)
+    np.testing.assert_allclose(traj.client_acc, want_c, atol=1e-6)
+    np.testing.assert_allclose(traj.distill_loss, want_d, rtol=1e-4)
+    np.testing.assert_allclose(
+        traj.mean_k, [np.mean(p0.ks), np.mean(p1.ks)], rtol=1e-6
+    )
     for i in range(4):
         for x, y in zip(jax.tree.leaves(a.client_params(i)),
                         jax.tree.leaves(b.client_params(i))):
@@ -452,11 +478,9 @@ _SHARD_MAP_SCRIPT = textwrap.dedent(
 )
 
 
-def test_fused_shard_map_two_host_devices():
-    """shard_clients=True places the client axis over devices (shard_map) and
-    reproduces the single-device fused round — for an even cohort AND an odd
-    cohort (client-axis padding).  XLA_FLAGS must be set before jax
-    initialises, hence the subprocess."""
+def _run_two_device_subprocess(script: str) -> str:
+    """Run a test script under 2 forced host devices (XLA_FLAGS must be set
+    before jax initialises, hence the subprocess)."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = (
         env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=2"
@@ -465,9 +489,175 @@ def test_fused_shard_map_two_host_devices():
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     proc = subprocess.run(
-        [sys.executable, "-c", _SHARD_MAP_SCRIPT],
+        [sys.executable, "-c", script],
         capture_output=True, text=True, env=env, timeout=600,
     )
     assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
-    assert "SHARD_MAP_OK_2" in proc.stdout
-    assert "SHARD_MAP_OK_3" in proc.stdout
+    return proc.stdout
+
+
+def test_fused_shard_map_two_host_devices():
+    """shard_clients=True places the client axis over devices (shard_map) and
+    reproduces the single-device fused round — for an even cohort AND an odd
+    cohort (client-axis padding)."""
+    out = _run_two_device_subprocess(_SHARD_MAP_SCRIPT)
+    assert "SHARD_MAP_OK_2" in out
+    assert "SHARD_MAP_OK_3" in out
+
+
+_E2E_SHARD_SCRIPT = textwrap.dedent(
+    """
+    import jax, numpy as np, jax.numpy as jnp
+    assert jax.device_count() == 2, jax.device_count()
+    from repro.configs.base import LoRAConfig
+    from repro.configs.gpt2_paper import REDUCED_CLIENT, REDUCED_SERVER
+    from repro.core import ChannelConfig, ChannelSimulator
+    from repro.data import make_banking77_like
+    from repro.fed.client import Client
+    from repro.fed.engine import FusedE2EEngine
+    from repro.fed.server import Server
+    from repro.models import init as model_init
+
+    lora = LoRAConfig(rank=4, alpha=32.0, dropout=0.0, targets=("q", "v", "head"))
+    ccfg = REDUCED_CLIENT.with_overrides(
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, d_ff=128,
+        vocab_size=256, max_seq_len=32, lora=lora,
+    )
+    scfg = REDUCED_SERVER.with_overrides(
+        num_layers=2, d_model=96, num_heads=2, num_kv_heads=2, d_ff=192,
+        vocab_size=256, max_seq_len=32, lora=lora,
+    )
+    ds = make_banking77_like(vocab_size=256, seq_len=12, total=500, seed=0)
+    backbone = model_init(jax.random.PRNGKey(7), ccfg)
+
+    def cohort(n):
+        return [Client(i, ccfg, ds.subset(np.arange(i * 60, (i + 1) * 60)),
+                       num_classes=ds.num_classes, seed=i, local_steps=1,
+                       distill_steps=1, initial_params=backbone)
+                for i in range(n)]
+
+    def e2e(cl, shard):
+        return FusedE2EEngine(
+            cl, ccfg, server=Server(scfg, aggregation="adaptive", distill_steps=2),
+            num_classes=ds.num_classes, local_steps=1, distill_steps=1,
+            server_distill_steps=2, shard_clients=shard,
+        )
+
+    sim = ChannelSimulator(4, ChannelConfig(bandwidth_hz=2e5, mean_snr_db=2.0), seed=0)
+    pub = jnp.asarray(ds.tokens[:16])
+    # n=2 divides the 2 devices exactly; n=3 exercises the masked k=0 padding
+    # INSIDE the whole-round executable.
+    for n in (2, 3):
+        sel = list(range(n))
+        states = sim.states_batched(0, sel)
+        plain, shard = e2e(cohort(n), False), e2e(cohort(n), True)
+        pp = plain.run_round(sel, pub, None, states, adaptive_k=True, send_h=True)
+        ps = shard.run_round(sel, pub, None, states, adaptive_k=True, send_h=True)
+        assert pp.ks == ps.ks
+        assert [p.bytes for p in pp.payloads] == [p.bytes for p in ps.payloads]
+        np.testing.assert_allclose(
+            np.asarray(ps.sparse.values), np.asarray(pp.sparse.values), atol=1e-5)
+        np.testing.assert_array_equal(
+            np.asarray(ps.sparse.mask), np.asarray(pp.sparse.mask))
+        np.testing.assert_allclose(
+            np.asarray(shard._b_logits), np.asarray(plain._b_logits), atol=1e-4)
+        for i in range(n):
+            for a, b in zip(jax.tree.leaves(plain.client_params(i)),
+                            jax.tree.leaves(shard.client_params(i))):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+        for a, b in zip(jax.tree.leaves(plain._s_lora),
+                        jax.tree.leaves(shard._s_lora)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+        print(f"E2E_SHARD_OK_{n}")
+
+    # sharded run_rounds: odd cohorts padded inside the scanned executable,
+    # eval tap matching the unsharded block at 1e-6
+    sels = [[0, 1, 2], [1, 2, 3]]
+    pubs = [jnp.asarray(ds.tokens[:16]), jnp.asarray(ds.tokens[16:32])]
+    states = [sim.states_batched(r, sels[r]) for r in range(2)]
+    ev_tok, ev_lab = jnp.asarray(ds.tokens[300:364]), jnp.asarray(ds.labels[300:364])
+    a, b = e2e(cohort(4), False), e2e(cohort(4), True)
+    ta = a.run_rounds(sels, pubs, states, adaptive_k=True, send_h=True,
+                      eval_tokens=ev_tok, eval_labels=ev_lab)
+    tb = b.run_rounds(sels, pubs, states, adaptive_k=True, send_h=True,
+                      eval_tokens=ev_tok, eval_labels=ev_lab)
+    assert ta.ks == tb.ks
+    np.testing.assert_allclose(ta.server_acc, tb.server_acc, atol=1e-6)
+    np.testing.assert_allclose(ta.client_acc, tb.client_acc, atol=1e-6)
+    np.testing.assert_allclose(ta.distill_loss, tb.distill_loss, rtol=1e-4)
+    print("E2E_SHARD_SCAN_OK")
+    """
+)
+
+
+def test_fused_e2e_shard_map_two_host_devices():
+    """fused_e2e + shard_clients=True: the client phase shards over 2 host
+    devices INSIDE the whole-round executable (server phase replicated) and
+    reproduces the unsharded engine — identical k/bytes, float-tolerance
+    state — for an even cohort, an odd cohort (masked k=0 padding), and the
+    multi-round run_rounds scan with its eval tap."""
+    out = _run_two_device_subprocess(_E2E_SHARD_SCRIPT)
+    assert "E2E_SHARD_OK_2" in out
+    assert "E2E_SHARD_OK_3" in out
+    assert "E2E_SHARD_SCAN_OK" in out
+
+
+def test_same_seed_bit_identical_fedrun():
+    """Channel-fix regression: two runs of the same config produce a
+    bit-identical FedRun — per-client k, ledger bytes, accuracies.  (Before
+    PR 4 this held only by accident of call order: the channel streams
+    ignored the constructor seed and drew by cohort position.)"""
+    ds = _dataset()
+    r1 = run_federated(CLIENT, SERVER, ds, _cfg("batched", rounds=2))
+    r2 = run_federated(CLIENT, SERVER, ds, _cfg("batched", rounds=2))
+    assert r1.per_client_k == r2.per_client_k
+    assert r1.server_acc == r2.server_acc
+    assert r1.client_acc == r2.client_acc
+    for a, b in zip(r1.ledger.rounds, r2.ledger.rounds):
+        assert a.uplink_bytes == b.uplink_bytes
+        assert a.downlink_bytes == b.downlink_bytes
+
+
+def test_adald_payloads_respect_shannon_budget():
+    """Budget-fix regression: with min_k=0 (no survival floor), every
+    transmitted adald payload — LoRA projection included — fits the Shannon
+    budget of the channel state it was computed from."""
+    from repro.core import ChannelConfig as CC, ChannelSimulator
+
+    ds, clients = _mini_cohort(3)
+    engine = BatchedEngine(
+        clients, CLIENT, num_classes=ds.num_classes,
+        local_steps=1, distill_steps=1, k_min=0,
+    )
+    sim = ChannelSimulator(3, CC(bandwidth_hz=2e5, mean_snr_db=0.0, min_k=0), seed=1)
+    pub = jnp.asarray(ds.tokens[:16])
+    for rnd in range(3):
+        states = sim.states_batched(rnd, [0, 1, 2])
+        phase = engine.run_round(
+            [0, 1, 2], pub, None, states, adaptive_k=True, send_h=True
+        )
+        for payload in phase.payloads:
+            st = states[payload.client_id]
+            assert payload.spec.fits(st), (rnd, payload.client_id, payload.spec)
+
+
+def test_scan_rounds_matches_per_round_fedrun():
+    """FedConfig.scan_rounds=True (one lax.scan dispatch for the whole run,
+    in-scan eval tap) reproduces the per-round fused_e2e run: identical
+    k/bytes, accuracies to float tolerance.  A (tiny) pretraining phase
+    gives the fleet the shared backbone run_rounds requires."""
+    ds = _dataset()
+    kw = dict(rounds=2, pretrain_steps=2, server_pretrain="none")
+    loop = run_federated(CLIENT, SERVER, ds, _cfg("fused_e2e", **kw))
+    scan = run_federated(
+        CLIENT, SERVER, ds, _cfg("fused_e2e", scan_rounds=True, **kw)
+    )
+    assert loop.per_client_k == scan.per_client_k
+    np.testing.assert_allclose(loop.mean_k, scan.mean_k, rtol=1e-6)
+    for a, b in zip(loop.ledger.rounds, scan.ledger.rounds):
+        assert a.uplink_bytes == b.uplink_bytes
+        assert a.downlink_bytes == b.downlink_bytes
+        assert a.num_transmitters == b.num_transmitters
+    np.testing.assert_allclose(loop.server_acc, scan.server_acc, atol=1e-6)
+    np.testing.assert_allclose(loop.client_acc, scan.client_acc, atol=1e-6)
+    np.testing.assert_allclose(loop.distill_loss, scan.distill_loss, rtol=1e-4)

@@ -62,16 +62,34 @@ def _distinct_logits(rows: int, vocab: int, seed: int) -> jax.Array:
     deadline=st.floats(0.01, 10.0),
     vocab=st.integers(2, 300_000),
     samples=st.integers(1, 5000),
+    rank=st.one_of(st.none(), st.integers(1, 64)),
 )
 @SETTINGS
-def test_topk_payload_respects_shannon_budget(bandwidth, snr_db, eta, deadline, vocab, samples):
-    """INVARIANT (paper §III-A): the adaptive payload never exceeds the
-    channel's bit budget — except via the k_min=1 survival floor."""
+def test_topk_payload_respects_shannon_budget(
+    bandwidth, snr_db, eta, deadline, vocab, samples, rank
+):
+    """INVARIANT (paper §III-A + §III-C): the REALIZED adaptive payload —
+    LoRA projection included when ``rank`` is set (the ``adald`` method) —
+    never exceeds the channel's bit budget, except via the k_min survival
+    floor.  ``topk_budget(reserved_bits=...)`` must reserve the projection
+    out of the budget before counting (value, index) entries."""
     state = ChannelState(bandwidth, snr_db, eta, deadline)
-    k = topk_budget(state, vocab_size=vocab, num_samples=samples)
-    spec = PayloadSpec(num_samples=samples, vocab=vocab, k=k, lora_rank=None)
-    floor_bits = samples * 1 * bits_per_entry(16, vocab)
+    reserved = samples * rank * 16 if rank is not None else 0
+    k = topk_budget(
+        state, vocab_size=vocab, num_samples=samples, reserved_bits=reserved
+    )
+    spec = PayloadSpec(num_samples=samples, vocab=vocab, k=k, lora_rank=rank)
+    # the survival floor's payload is ONE entry per sample (plus projection)
+    floor_bits = samples * 1 * bits_per_entry(16, vocab) + reserved
     assert spec.uplink_bits <= max(state.bit_budget, floor_bits) + 1e-6
+    # without the floor, every transmitted payload fits by construction
+    k0 = topk_budget(
+        state, vocab_size=vocab, num_samples=samples, k_min=0,
+        reserved_bits=reserved,
+    )
+    if k0 > 0:
+        spec0 = PayloadSpec(num_samples=samples, vocab=vocab, k=k0, lora_rank=rank)
+        assert spec0.fits(state)
 
 
 @given(

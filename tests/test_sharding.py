@@ -83,6 +83,18 @@ def test_batch_axes_by_mesh():
     assert sh.batch_axes(MULTI) == ("pod", "data")
 
 
+def test_cohort_mesh_covers_all_devices():
+    """The federated engines' cohort placement: a 1-D mesh over every
+    addressable device under the shared COHORT_AXIS name (the axis contract
+    of the fused/fused-e2e shard_map placements)."""
+    mesh = sh.cohort_mesh()
+    assert mesh.axis_names == (sh.COHORT_AXIS,)
+    assert mesh.shape[sh.COHORT_AXIS] == jax.device_count()
+    from repro.launch.mesh import make_client_mesh
+
+    assert make_client_mesh().shape == mesh.shape
+
+
 def test_embed_is_vocab_sharded():
     cfg = get_config("command-r-35b")
     shapes = jax.eval_shape(lambda k: init(k, cfg), jax.random.PRNGKey(0))
