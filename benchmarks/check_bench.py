@@ -1,0 +1,124 @@
+"""Bench-regression gate (blocking CI step).
+
+The whole-round benchmark used to be informational-only, which let its two
+committed guarantees rot silently: the sparse aggregation path staying
+dense-stack-free, and the one-call e2e round staying faster than the split
+host pipeline.  This gate re-checks a FRESH quick bench record against the
+committed full record and fails loudly on:
+
+1. ``aggregation.agg_dense_stack_free`` false — the trace-inspection proof
+   that no intermediate reaches the (N, B, V) dense stack regressed;
+2. ``speedups.e2e_vs_fused_host`` below a floor — committed record says
+   1.36x on this repo's reference box; the default floor 1.10x leaves a
+   generous CI-noise margin while still catching a real regression to <= 1x;
+3. ``aggregation.sparse_wire_bytes`` above the committed record's — the wire
+   format's on-air shape grew (k_cap bucketing or layout regressed).  The
+   wire bytes are deterministic for the bench's seeded channel, so this is
+   an equality-shaped check: a legitimate format change must refresh the
+   committed BENCH_round.json in the same PR.
+
+Run (CI does exactly this):
+
+    python benchmarks/engine_bench.py --quick --round-only
+    python benchmarks/check_bench.py
+
+Pure stdlib; exits non-zero with a one-line reason per failed check.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def check(fresh: dict, committed: dict, *, min_speedup: float) -> list[str]:
+    """Returns a list of human-readable failures (empty = gate passes)."""
+    failures = []
+
+    agg = fresh.get("aggregation", {})
+    if agg.get("agg_dense_stack_free") is not True:
+        failures.append(
+            "agg_dense_stack_free is not true: the sparse aggregation path "
+            "materialised an (N, B, V)-sized intermediate "
+            f"(max_agg_intermediate_elems={agg.get('max_agg_intermediate_elems')}, "
+            f"dense_stack_elems={agg.get('dense_stack_elems')})"
+        )
+
+    speedup = fresh.get("speedups", {}).get("e2e_vs_fused_host")
+    if speedup is None:
+        failures.append("fresh record has no speedups.e2e_vs_fused_host")
+    elif speedup < min_speedup:
+        committed_speedup = committed.get("speedups", {}).get("e2e_vs_fused_host")
+        failures.append(
+            f"e2e_vs_fused_host speedup {speedup:.2f}x fell below the gate "
+            f"floor {min_speedup:.2f}x (committed record: "
+            f"{committed_speedup}x) — the one-call round regressed vs the "
+            "split host pipeline"
+        )
+
+    fresh_wire = fresh.get("aggregation", {}).get("sparse_wire_bytes")
+    committed_wire = committed.get("aggregation", {}).get("sparse_wire_bytes")
+    if fresh_wire is None or committed_wire is None:
+        failures.append(
+            "missing aggregation.sparse_wire_bytes "
+            f"(fresh={fresh_wire}, committed={committed_wire})"
+        )
+    elif fresh_wire > committed_wire:
+        failures.append(
+            f"sparse_wire_bytes regressed: {fresh_wire} > committed "
+            f"{committed_wire} — the wire's on-air shape grew; if the format "
+            "change is intentional, refresh BENCH_round.json in this PR"
+        )
+
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--fresh",
+        default=os.path.join(_REPO_ROOT, "BENCH_round.quick.json"),
+        help="record written by the quick bench run just executed",
+    )
+    ap.add_argument(
+        "--committed",
+        default=os.path.join(_REPO_ROOT, "BENCH_round.json"),
+        help="the committed full-size reference record",
+    )
+    ap.add_argument(
+        "--min-speedup", type=float, default=1.10,
+        help="floor for speedups.e2e_vs_fused_host (committed: 1.36; the "
+             "default leaves a generous CI-noise margin)",
+    )
+    args = ap.parse_args(argv)
+
+    for path in (args.fresh, args.committed):
+        if not os.path.exists(path):
+            print(f"[check_bench] FAIL: {path} does not exist "
+                  "(run benchmarks/engine_bench.py --quick --round-only first)")
+            return 2
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.committed) as f:
+        committed = json.load(f)
+
+    failures = check(fresh, committed, min_speedup=args.min_speedup)
+    if failures:
+        for msg in failures:
+            print(f"[check_bench] FAIL: {msg}")
+        return 1
+    print(
+        "[check_bench] OK: dense-stack-free, "
+        f"e2e_vs_fused_host={fresh['speedups']['e2e_vs_fused_host']}x >= "
+        f"{args.min_speedup}x, sparse_wire_bytes="
+        f"{fresh['aggregation']['sparse_wire_bytes']} <= committed "
+        f"{committed['aggregation']['sparse_wire_bytes']}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

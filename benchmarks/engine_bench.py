@@ -67,6 +67,16 @@ if __name__ == "__main__":
                 _n = int(sys.argv[_i + 1])
             else:
                 sys.exit("--shard requires a device count (e.g. --shard 2)")
+            _cores = os.cpu_count() or 1
+            if _n < 1:
+                sys.exit(f"--shard {_n}: device count must be >= 1")
+            if _n > _cores:
+                sys.exit(
+                    f"--shard {_n} exceeds this host's {_cores} cores: forced "
+                    "host devices share the physical core pool, so "
+                    "oversubscribing it would only measure scheduler thrash "
+                    f"(pick --shard <= {_cores})"
+                )
             os.environ["XLA_FLAGS"] = (
                 os.environ.get("XLA_FLAGS", "")
                 + f" --xla_force_host_platform_device_count={_n}"
@@ -475,18 +485,194 @@ def bench_round(quick: bool = True, out_json: str | None = None):
     return rows
 
 
+def bench_hetero(quick: bool = True, out_json: str | None = None):
+    """Heterogeneous-fleet whole-round bench: a mixed 6×mamba2-tiny (SSM) +
+    4×gpt2-tiny (dense) cohort — the paper's actual multi-architecture
+    scenario — through three executions:
+
+    hetero_seq      — sequential reference clients + host server phase
+                      (dense-stack aggregation), one jitted call per client
+                      per phase: the only execution the repo had for mixed
+                      fleets before PR 5.
+    hetero_bucketed — family-bucketed engine: ONE donated compiled
+                      client-phase call per family bucket, union sparse
+                      wire, ONE compiled server phase.
+    hetero_scanR    — R whole heterogeneous rounds inside one lax.scan
+                      dispatch (HeteroFusedE2EEngine.run_rounds), per-round
+                      figure.
+    """
+    from repro.configs import get_smoke_config
+    from repro.configs.base import LoRAConfig, SSMConfig
+    from repro.configs.gpt2_paper import REDUCED_CLIENT
+    from repro.core import ChannelConfig, ChannelSimulator
+    from repro.data import make_banking77_like
+    from repro.fed.client import Client
+    from repro.fed.engine import BroadcastState, HeteroFusedE2EEngine, SequentialEngine
+    from repro.fed.server import Server
+
+    n_ssm, n_dense = 6, 4
+    num_clients = n_ssm + n_dense
+    d_model, vocab, seq_len, pub_batch = 64, 8192, 16, 128
+    reps = 2 if quick else 3
+    scan_rounds = 2
+    server_distill_steps = 12
+
+    lora = LoRAConfig(rank=8, alpha=32.0, dropout=0.0, targets=("q", "v", "head"))
+    dense_cfg = REDUCED_CLIENT.with_overrides(
+        name="bench-dense-tiny", num_layers=2, d_model=d_model, num_heads=4,
+        num_kv_heads=4, d_ff=2 * d_model, vocab_size=vocab,
+        max_seq_len=max(seq_len, 32), lora=lora,
+    )
+    ssm_cfg = get_smoke_config("mamba2-130m").with_overrides(
+        name="bench-mamba2-tiny", d_model=d_model, vocab_size=vocab,
+        max_seq_len=max(seq_len, 32), lora=lora,
+        ssm=SSMConfig(state_dim=16, head_dim=16, expand=2, chunk_size=8),
+    )
+    server_cfg = dense_cfg.with_overrides(name="bench-hetero-server")
+    ds = make_banking77_like(
+        vocab_size=vocab, seq_len=seq_len,
+        total=60 * num_clients + pub_batch + 100, seed=0,
+    )
+    # client i: SSM for i < n_ssm, dense after — per-client random backbones
+    # (the fully heterogeneous case: stacked frozens inside each bucket)
+    fam = [ssm_cfg] * n_ssm + [dense_cfg] * n_dense
+
+    def cohort():
+        return [
+            Client(i, fam[i], ds.subset(np.arange(i * 60, (i + 1) * 60)),
+                   num_classes=ds.num_classes, seed=i, local_steps=4,
+                   distill_steps=2)
+            for i in range(num_clients)
+        ]
+
+    pub = jnp.asarray(ds.tokens[-pub_batch:])
+    sim = ChannelSimulator(
+        num_clients, ChannelConfig(bandwidth_hz=5e5, mean_snr_db=5.0), seed=0
+    )
+    sel = list(range(num_clients))
+    states = sim.states_batched(0, sel)
+    mk = dict(num_classes=ds.num_classes)
+
+    # -- sequential reference + host server phase over dense stacks --------
+    seq_engine = SequentialEngine(cohort(), dense_cfg)
+    seq_server = Server(server_cfg, aggregation="adaptive",
+                        distill_steps=server_distill_steps)
+
+    def seq_round(bcast):
+        phase = seq_engine.run_round(
+            sel, pub, bcast, states, adaptive_k=True, send_h=True
+        )
+        k_g, h_g = seq_server.aggregate_dense(phase.dense, phase.h)
+        seq_server.distill(pub, k_g, h_g)
+        g_logits, g_h, bits = seq_server.broadcast(pub)
+        jax.block_until_ready(g_logits)
+        return BroadcastState(tokens=pub, logits=g_logits, h=g_h, bits=bits)
+
+    # -- family-bucketed engine: per-bucket executables + union wire -------
+    def hetero_engine():
+        return HeteroFusedE2EEngine(
+            cohort(),
+            server=Server(server_cfg, aggregation="adaptive",
+                          distill_steps=server_distill_steps),
+            server_distill_steps=server_distill_steps, aggregation="adaptive",
+            local_steps=4, distill_steps=2, **mk,
+        )
+
+    buck_engine = hetero_engine()
+
+    def buck_round(bcast):
+        buck_engine.run_round(sel, pub, bcast, states, adaptive_k=True, send_h=True)
+        jax.block_until_ready(buck_engine._b_logits)
+        return buck_engine.broadcast_state(pub)
+
+    scan_engine = hetero_engine()
+    sels = [sel] * scan_rounds
+    pubs = [pub] * scan_rounds
+    states_r = [sim.states_batched(r, sel) for r in range(scan_rounds)]
+
+    def scan_block():
+        scan_engine.run_rounds(sels, pubs, states_r, adaptive_k=True, send_h=True)
+        jax.block_until_ready(scan_engine._b_logits)
+
+    bc_seq = seq_round(None)
+    bc_seq = seq_round(bc_seq)  # warm-up cold + warm executables
+    bc_buck = buck_round(None)
+    bc_buck = buck_round(bc_buck)
+    scan_block()  # compile
+    t_seq, t_buck, t_scan = [], [], []
+    for _ in range(reps):
+        t0 = time.time()
+        bc_seq = seq_round(bc_seq)
+        t_seq.append(time.time() - t0)
+        t0 = time.time()
+        bc_buck = buck_round(bc_buck)
+        t_buck.append(time.time() - t0)
+        t0 = time.time()
+        scan_block()
+        t_scan.append(time.time() - t0)
+    us = {
+        "hetero_seq": min(t_seq) * 1e6,
+        "hetero_bucketed": min(t_buck) * 1e6,
+        f"hetero_scan{scan_rounds}": min(t_scan) / scan_rounds * 1e6,
+    }
+    speedups = {
+        "bucketed_vs_seq": us["hetero_seq"] / us["hetero_bucketed"],
+        f"scan{scan_rounds}_vs_seq": us["hetero_seq"] / us[f"hetero_scan{scan_rounds}"],
+    }
+    shape = (
+        f"C={n_ssm}ssm+{n_dense}dense;L2;d{d_model};V{vocab};T{seq_len};"
+        f"P{pub_batch};steps=4+2;srv={server_distill_steps}"
+    )
+
+    if out_json:
+        record = {
+            "bench": "hetero_round",
+            "shape": shape,
+            "quick": quick,
+            "reps": reps,
+            "backend": jax.default_backend(),
+            "cpu_count": os.cpu_count(),
+            "us_per_round": {k: round(v) for k, v in us.items()},
+            "speedups": {k: round(v, 2) for k, v in speedups.items()},
+            "notes": (
+                "hetero_seq = sequential per-client dispatches + host "
+                "dense-stack server phase (the only pre-PR-5 execution for "
+                "mixed fleets); hetero_bucketed = family-bucketed engine "
+                "(one donated compiled client phase per family, union "
+                "sparse wire, one compiled server phase); "
+                f"hetero_scan{scan_rounds} = {scan_rounds} whole "
+                "heterogeneous rounds per lax.scan dispatch, per-round "
+                "figure.  Interleaved min-of-reps on this noisy 2-core CPU "
+                "container."
+            ),
+        }
+        with open(out_json, "w") as f:
+            json.dump(record, f, indent=1)
+
+    return [
+        ("hetero_seq_round", us["hetero_seq"], shape),
+        ("hetero_bucketed_round", us["hetero_bucketed"],
+         f"{shape};vs_seq={speedups['bucketed_vs_seq']:.2f}x"),
+        (f"hetero_scan{scan_rounds}_round", us[f"hetero_scan{scan_rounds}"],
+         f"{shape};vs_seq={speedups[f'scan{scan_rounds}_vs_seq']:.2f}x"),
+    ]
+
+
 if __name__ == "__main__":
     quick = "--quick" in sys.argv
     round_only = "--round-only" in sys.argv
     engine_only = "--engine-only" in sys.argv
+    hetero_only = "--hetero-only" in sys.argv
     # quick runs get their own file so they never clobber the committed
     # full-size record that README cites
     suffix = "quick.json" if quick else "json"
     jobs = []
-    if not round_only:
+    if not round_only and not hetero_only:
         jobs.append((bench, os.path.join(_REPO_ROOT, f"BENCH_engine.{suffix}")))
-    if not engine_only:
+    if not engine_only and not hetero_only:
         jobs.append((bench_round, os.path.join(_REPO_ROOT, f"BENCH_round.{suffix}")))
+    if hetero_only or not (round_only or engine_only):
+        jobs.append((bench_hetero, os.path.join(_REPO_ROOT, f"BENCH_hetero.{suffix}")))
     for fn, out in jobs:
         rows = fn(quick=quick, out_json=out)
         for name, us, derived in rows:

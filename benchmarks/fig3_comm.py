@@ -17,7 +17,6 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs.gpt2_paper import REDUCED_CLIENT, REDUCED_SERVER  # noqa: E402
-from repro.data import make_banking77_like  # noqa: E402
 from repro.fed import FedConfig, run_federated  # noqa: E402
 from repro.fed.rounds import METHODS  # noqa: E402
 

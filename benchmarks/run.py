@@ -34,6 +34,7 @@ def main() -> None:
         "kernel": kernel_bench.bench,
         "engine": engine_bench.bench,
         "round": engine_bench.bench_round,
+        "hetero": engine_bench.bench_hetero,
         "agg": agg_ablation.bench,
         "fig2": fig2_accuracy.bench,
         "fig3": fig3_comm.bench,

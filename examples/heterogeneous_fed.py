@@ -8,6 +8,11 @@ granite-style MoE — jointly teach one server through the AdaLD pipeline.
 The only shared contract is the tokenizer/vocab and the LoRA rank of the
 projection exchange.
 
+This example keeps the raw per-client pipeline visible; the fast engines
+serve the same scenario family-bucketed (one compiled executable per
+family — see README "Heterogeneous fleets", `run_federated` with a list of
+family configs, or `python -m repro.launch.fed_train --families ...`).
+
 Run:  PYTHONPATH=src python examples/heterogeneous_fed.py [rounds]
 """
 

@@ -36,6 +36,9 @@ __all__ = [
     "densify",
     "sparsify_batch",
     "sparsify_wire",
+    "pad_wire",
+    "concat_wires",
+    "take_wire_rows",
     "wire_densify",
     "wire_support",
     "payload_entries",
@@ -232,6 +235,63 @@ def sparsify_wire(logits: jax.Array, ks: jax.Array, k_cap: int) -> SparseWire:
         indices=indices.astype(jnp.int32),
         mask=mask,
         vocab=vocab,
+    )
+
+
+def pad_wire(wire: SparseWire, k_cap: int) -> SparseWire:
+    """Widen a wire to ``k_cap`` entries per row by appending masked-out
+    padding (value 0, index 0, mask False) — a no-op on the transmitted
+    content (``wire_densify``/``aggregate_wire`` ignore masked entries).
+    Used to bring several family buckets' wires to one common width before
+    :func:`concat_wires`."""
+    pad = k_cap - wire.k_cap
+    if pad < 0:
+        raise ValueError(f"cannot shrink a wire from {wire.k_cap} to {k_cap}")
+    if pad == 0:
+        return wire
+    widths = [(0, 0)] * (wire.values.ndim - 1) + [(0, pad)]
+    return SparseWire(
+        values=jnp.pad(wire.values, widths),
+        indices=jnp.pad(wire.indices, widths),
+        mask=jnp.pad(wire.mask, widths),
+        vocab=wire.vocab,
+    )
+
+
+def concat_wires(wires: Sequence[SparseWire]) -> SparseWire:
+    """Union of several cohorts' uplinks as ONE wire: concatenate along the
+    leading client axis, first padding every wire to the widest ``k_cap``.
+
+    This is the heterogeneous round's merge point: each family bucket's
+    client phase emits its own wire, and because the wire is VOCAB-indexed
+    the union aggregates exactly as one homogeneous cohort would (paper
+    eqs. 6-7 never see an architecture, only dimensions of the shared logit
+    space).  All wires must share ``vocab``.
+    """
+    if not wires:
+        raise ValueError("concat_wires needs at least one wire")
+    vocabs = {w.vocab for w in wires}
+    if len(vocabs) > 1:
+        raise ValueError(f"wires address different vocabularies: {sorted(vocabs)}")
+    k_cap = max(w.k_cap for w in wires)
+    padded = [pad_wire(w, k_cap) for w in wires]
+    return SparseWire(
+        values=jnp.concatenate([w.values for w in padded], axis=0),
+        indices=jnp.concatenate([w.indices for w in padded], axis=0),
+        mask=jnp.concatenate([w.mask for w in padded], axis=0),
+        vocab=wires[0].vocab,
+    )
+
+
+def take_wire_rows(wire: SparseWire, rows) -> SparseWire:
+    """Gather/permute a wire's leading client axis (e.g. reorder a union
+    wire's rows into cohort order, or keep transmitters only)."""
+    take = jnp.asarray(rows, jnp.int32)
+    return SparseWire(
+        values=wire.values[take],
+        indices=wire.indices[take],
+        mask=wire.mask[take],
+        vocab=wire.vocab,
     )
 
 

@@ -1,10 +1,18 @@
 from repro.fed.client import Client, ClientUpload
+from repro.fed.cohort import (
+    FamilyBucket,
+    partition_fleet,
+    split_cohort,
+    validate_family_contracts,
+)
 from repro.fed.engine import (
     BatchedEngine,
     BroadcastState,
     ClientPhase,
     FusedE2EEngine,
     FusedEngine,
+    HeteroClientEngine,
+    HeteroFusedE2EEngine,
     RoundsTrajectory,
     SequentialEngine,
     make_engine,
@@ -23,9 +31,15 @@ __all__ = [
     "BatchedEngine",
     "FusedEngine",
     "FusedE2EEngine",
+    "HeteroClientEngine",
+    "HeteroFusedE2EEngine",
     "SequentialEngine",
     "BroadcastState",
     "ClientPhase",
     "RoundsTrajectory",
+    "FamilyBucket",
+    "partition_fleet",
+    "split_cohort",
+    "validate_family_contracts",
     "make_engine",
 ]

@@ -18,7 +18,7 @@ Four method presets reproduce the paper's comparison (§IV):
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal
+from typing import Literal, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -117,6 +117,9 @@ class FedRun:
     # Per-round final server-distill step loss (NaN when the engine does not
     # expose it — only the fused_e2e engine computes it in-program).
     distill_loss: list[float] = dataclasses.field(default_factory=list)
+    # Heterogeneous scan runs only: per-round accuracy per family bucket
+    # (fleet bucket order) from the in-scan eval tap.
+    family_client_acc: list[list[float]] | None = None
 
     def summary(self) -> dict:
         return {
@@ -126,18 +129,34 @@ class FedRun:
 
 
 def run_federated(
-    client_cfg: ModelConfig,
+    client_cfg: ModelConfig | Sequence[ModelConfig],
     server_cfg: ModelConfig,
     dataset: IntentDataset,
     fed: FedConfig,
     *,
     verbose: bool = False,
 ) -> FedRun:
+    """Run the whole federation.  ``client_cfg`` may be ONE config (the
+    homogeneous fleet of the paper's §IV setup) or a sequence of FAMILY
+    configs — clients then cycle through the families round-robin (client i
+    runs ``client_cfg[i % F]``), and the engines serve the mixed fleet
+    through the family-bucketed heterogeneous path (`repro.fed.cohort`).
+    Families must share a vocabulary and LoRA rank (the paper's §II
+    exchange contracts); with pretraining enabled, one backbone is
+    pretrained PER family and shared by that family's clients."""
     preset = METHODS[fed.method]
     rng = np.random.default_rng(fed.seed)
 
+    families = (
+        [client_cfg] if isinstance(client_cfg, ModelConfig) else list(client_cfg)
+    )
+    if not families:
+        raise ValueError("client_cfg must name at least one model config")
+    cfgs = [families[i % len(families)] for i in range(fed.num_clients)]
+
     # carve a disjoint pretraining split first (simulated pretrained W')
-    client_init = server_init = None
+    server_init = None
+    client_inits: dict[ModelConfig, object] = {}
     if fed.pretrain_steps > 0:
         from repro.fed.pretrain import pretrain_classifier, pretrain_lm
 
@@ -145,11 +164,15 @@ def run_federated(
         pre_idx = np.random.default_rng(fed.seed + 31).permutation(len(dataset))
         pretrain_ds = dataset.subset(pre_idx[:n_pre])
         dataset = dataset.subset(pre_idx[n_pre:])
-        client_init = pretrain_classifier(
-            client_cfg, pretrain_ds, num_classes=dataset.num_classes,
-            steps=fed.pretrain_steps, lr=fed.pretrain_lr, seed=fed.seed,
-            last_only=fed.last_only, verbose=verbose,
-        )
+        # one pretrained backbone per family; family 0 keeps the historical
+        # seed so a homogeneous run is bit-identical to the pre-hetero path
+        for fi, fam in enumerate(families):
+            client_inits[fam] = pretrain_classifier(
+                fam, pretrain_ds, num_classes=dataset.num_classes,
+                steps=fed.pretrain_steps, lr=fed.pretrain_lr,
+                seed=fed.seed + 17 * fi,
+                last_only=fed.last_only, verbose=verbose,
+            )
         if fed.server_pretrain == "supervised":
             server_init = pretrain_classifier(
                 server_cfg, pretrain_ds, num_classes=dataset.num_classes,
@@ -173,7 +196,7 @@ def run_federated(
     clients = [
         Client(
             i,
-            client_cfg,
+            cfgs[i],
             private.subset(parts[i]),
             num_classes=dataset.num_classes,
             seed=fed.seed + i,
@@ -185,7 +208,7 @@ def run_federated(
             distill_steps=fed.distill_steps,
             restrict_to_support=fed.restrict_to_support,
             last_only=fed.last_only,
-            initial_params=client_init,
+            initial_params=client_inits.get(cfgs[i]),
         )
         for i in range(fed.num_clients)
     ]
@@ -209,12 +232,16 @@ def run_federated(
     eval_idx = rng.permutation(len(private))[: fed.eval_size]
     eval_tokens, eval_labels = private.tokens[eval_idx], private.labels[eval_idx]
     evaluate = make_eval_fn(server_cfg, dataset.num_classes, last_only=fed.last_only)
-    evaluate_client = make_eval_fn(client_cfg, dataset.num_classes, last_only=fed.last_only)
+    # per-family client evaluators (make_eval_fn is lru-cached per config)
+    evaluate_client = {
+        fam: make_eval_fn(fam, dataset.num_classes, last_only=fed.last_only)
+        for fam in families
+    }
 
     engine = make_engine(
         fed.engine,
         clients,
-        client_cfg,
+        cfgs[0],
         num_classes=dataset.num_classes,
         lr=fed.lr,
         distill_lr=fed.distill_lr,
@@ -283,6 +310,7 @@ def run_federated(
             **eval_kw,
         )
         engine.sync_server()
+        run.family_client_acc = traj.family_client_acc
         b_rank = server_cfg.lora.rank if server_cfg.lora is not None else None
         b_bits = downlink_bits(fed.public_batch, server_cfg.vocab_size, b_rank)
         for rnd in range(fed.rounds):
@@ -348,7 +376,7 @@ def run_federated(
             bcast = BroadcastState(tokens=pub_tokens, logits=g_logits, h=g_h, bits=g_bits)
 
         s_acc = evaluate(server.params, jnp.asarray(eval_tokens), jnp.asarray(eval_labels))
-        c_acc = evaluate_client(
+        c_acc = evaluate_client[cfgs[sel[0]]](
             engine.client_params(sel[0]), jnp.asarray(eval_tokens), jnp.asarray(eval_labels)
         )
         uplink = phase.uplink_bytes

@@ -40,6 +40,8 @@ __all__ = [
     "make_batched_distill_step",
     "make_batched_public_logits",
     "make_fused_round_fn",
+    "make_bucket_client_phase_fn",
+    "make_server_phase_fn",
     "make_fused_e2e_round_fn",
     "make_eval_fn",
     "make_scan_eval_fn",
@@ -510,6 +512,184 @@ def make_fused_round_fn(
     return fn
 
 
+def _teacher_cache_fn(
+    temperature: float, restrict_to_support: bool, use_h: bool
+) -> Callable:
+    """teacher_cache(logits, h) -> (t_logp, th_logp, support) — the once-per
+    round softmax of a distillation teacher (eq. 9's constant side), shared
+    by the e2e round, the bucketed hetero client phase and the server phase
+    so every consumer of the same teacher computes the identical cache."""
+
+    def teacher_cache(logits, h):
+        support = (logits != 0) if restrict_to_support else None
+        t_logp = teacher_log_probs(logits, temperature, mask=support)
+        th_logp = (
+            teacher_log_probs(h, temperature) if (use_h and h is not None) else None
+        )
+        return t_logp, th_logp, support
+
+    return teacher_cache
+
+
+@functools.lru_cache(maxsize=64)
+def make_bucket_client_phase_fn(
+    cfg: ModelConfig,
+    num_classes: int,
+    *,
+    k_cap: int,
+    lr: float = 1e-3,
+    weight_decay: float = 1e-3,
+    distill_lr: float = 1e-3,
+    temperature: float = 2.0,
+    lam: float = 0.03,
+    restrict_to_support: bool = False,
+    local_steps: int = 4,
+    distill_steps: int = 2,
+    shared_backbone: bool = True,
+    last_only: bool = True,
+) -> Callable:
+    """One FAMILY BUCKET's whole client phase as ONE function: the vmapped
+    per-client round bodies (distill -> fine-tune -> public inference) plus
+    the sparse-wire sparsifier, for a homogeneous sub-cohort of clients that
+    all run ``cfg``.
+
+    fn(lora (C,...), frozen, opt (C,...), g_tokens (P,L), g_logits (P,V),
+       g_h (P,r)|None, g_valid () bool,
+       batches {tokens (C,S,B,L), labels (C,S,B)}, pub_tokens (P,L),
+       ks (C,) int32)
+    -> (lora, opt, values (C,P,k_cap), indices (C,P,k_cap),
+        mask (C,P,k_cap), h (C,P,r)|None)
+
+    This is the per-bucket executable of the heterogeneous round engine
+    (:class:`repro.fed.engine.HeteroFusedE2EEngine`): the fleet is
+    partitioned into homogeneous family buckets (`repro.fed.cohort`), each
+    bucket runs this function with its own ``cfg``/backbone layout
+    (``shared_backbone=False`` stacks the frozen trees on the client axis —
+    the same ``frozen_ax=0`` vmap the batched engine uses), and the buckets'
+    wires are concatenated into one vocab-indexed union wire for the
+    family-agnostic server phase (:func:`make_server_phase_fn`).  The
+    broadcast teacher's log-softmax is computed once per bucket call —
+    bit-identical per client to the homogeneous e2e round, because the
+    teacher side is a constant of the round.  ``gate_distill`` semantics:
+    the cold-server round is DATA (``g_valid``), one executable serves every
+    round of a run (per ``k_cap`` bucket).
+    """
+    cached_kd = _distill_loss_cached_fn(cfg, temperature, lam, last_only)
+    client_round = _client_round_core(
+        cfg, num_classes, lr=lr, weight_decay=weight_decay,
+        distill_lr=distill_lr, temperature=temperature, lam=lam,
+        restrict_to_support=restrict_to_support, local_steps=local_steps,
+        distill_steps=distill_steps, last_only=last_only, gate_distill=True,
+        kd_loss=cached_kd,
+    )
+    frozen_ax = None if shared_backbone else 0
+    vm = jax.vmap(
+        client_round, in_axes=(0, frozen_ax, 0, None, None, None, 0, None)
+    )
+    teacher_cache = _teacher_cache_fn(
+        temperature, restrict_to_support, cfg.lora is not None
+    )
+
+    def fn(lora, frozen, opt, g_tokens, g_logits, g_h, g_valid, batches,
+           pub_tokens, ks):
+        t_cache = teacher_cache(g_logits, g_h)
+        lora, opt, last, h = vm(
+            lora, frozen, opt, g_tokens, t_cache, g_valid, batches, pub_tokens
+        )
+        wire = sparsify_wire(last, ks, k_cap)
+        return lora, opt, wire.values, wire.indices, wire.mask, h
+
+    return fn
+
+
+@functools.lru_cache(maxsize=64)
+def make_server_phase_fn(
+    server_cfg: ModelConfig,
+    *,
+    vocab: int,
+    distill_lr: float = 1e-3,
+    temperature: float = 2.0,
+    lam: float = 0.03,
+    restrict_to_support: bool = False,
+    server_distill_steps: int = 12,
+    aggregation: AggregationMode = "adaptive",
+    send_h: bool = True,
+    last_only: bool = True,
+    use_kernels: bool = False,
+) -> Callable:
+    """The whole SERVER phase of one round as ONE function (Algorithm 1
+    lines 13-16 + the next round's broadcast recompute), consuming the
+    cohort's sparse uplink wire.
+
+    fn(s_lora, s_frozen, s_opt,
+       values (N,P,k_cap), indices (N,P,k_cap), mask (N,P,k_cap),
+       h (N,P,r)|None, ks (N,) int32, pub_tokens (P,L))
+    -> (s_lora, s_opt, b_logits (P,V), b_h (P,r)|None, d_loss ())
+
+    ``vocab`` is the fleet's SHARED vocabulary — the wire's indices address
+    it directly, which is exactly why heterogeneous families interoperate
+    here: the union wire of several family buckets aggregates identically to
+    one homogeneous cohort's (the server never sees architectures, only
+    vocab-indexed logits and rank-aligned eq.-8 projections).  A round where
+    every client dropped (all ``ks == 0``) discards the server update as
+    DATA and reports a NaN ``d_loss``; the broadcast still refreshes on the
+    current public batch, exactly like the host round loop.
+    """
+    server_kd_loss = _distill_loss_cached_fn(server_cfg, temperature, lam, last_only)
+    teacher_cache = _teacher_cache_fn(temperature, restrict_to_support, True)
+
+    def fn(s_lora, s_frozen, s_opt, values, indices, mask, h, ks, pub_tokens):
+        wire = SparseWire(values=values, indices=indices, mask=mask, vocab=vocab)
+        n_tx = jnp.sum((ks > 0).astype(jnp.int32))
+
+        # -- line 15: aggregation from the wire (eqs. 6-7) --
+        k_g = aggregate_wire(
+            wire, aggregation, num_transmitters=n_tx, use_kernel=use_kernels
+        )
+        if send_h and h is not None:
+            tx = (ks > 0).astype(h.dtype)[:, None, None]
+            h_g = jnp.sum(h * tx, axis=0) / jnp.maximum(n_tx, 1).astype(h.dtype)
+        else:
+            h_g = None
+
+        # -- line 16: server-side distillation, scanned over its steps; the
+        # aggregated teacher is softmaxed ONCE for all steps --
+        kg_logp, kg_h_logp, kg_support = teacher_cache(k_g, h_g)
+
+        def server_body(carry, _):
+            sl, so = carry
+            (loss, _), grads = jax.value_and_grad(server_kd_loss, has_aux=True)(
+                sl, s_frozen, pub_tokens, kg_logp, kg_h_logp, kg_support
+            )
+            sl, so = adamw_update(grads, so, sl, lr=distill_lr)
+            return (sl, so), loss
+
+        (new_sl, new_so), losses = jax.lax.scan(
+            server_body, (s_lora, s_opt), None, length=server_distill_steps
+        )
+        # every selected client dropped -> no aggregation, no server update
+        has_tx = n_tx > 0
+        keep = lambda new, old: jnp.where(has_tx, new, old)  # noqa: E731
+        s_lora = jax.tree.map(keep, new_sl, s_lora)
+        s_opt = jax.tree.map(keep, new_so, s_opt)
+        # observability tap: the final server-distill loss of the round
+        # (NaN when no client transmitted — the server never distilled)
+        d_loss = jnp.where(
+            has_tx,
+            losses[-1] if server_distill_steps else jnp.float32(jnp.nan),
+            jnp.nan,
+        )
+
+        # -- lines 1-2 of the NEXT round: refreshed broadcast knowledge --
+        b_last, b_aux = last_logits(
+            merge_lora(s_lora, s_frozen), server_cfg,
+            {"tokens": pub_tokens}, last_only=last_only,
+        )
+        return s_lora, s_opt, b_last, b_aux.lora_h, d_loss
+
+    return fn
+
+
 @functools.lru_cache(maxsize=64)
 def make_fused_e2e_round_fn(
     client_cfg: ModelConfig,
@@ -605,15 +785,14 @@ def make_fused_e2e_round_fn(
     vm = jax.vmap(
         client_round, in_axes=(0, frozen_ax, 0, None, None, None, 0, None)
     )
-    server_kd_loss = _distill_loss_cached_fn(server_cfg, temperature, lam, last_only)
-
-    def teacher_cache(logits, h):
-        support = (logits != 0) if restrict_to_support else None
-        t_logp = teacher_log_probs(logits, temperature, mask=support)
-        th_logp = (
-            teacher_log_probs(h, temperature) if (use_h and h is not None) else None
-        )
-        return t_logp, th_logp, support
+    teacher_cache = _teacher_cache_fn(temperature, restrict_to_support, use_h)
+    server_phase = make_server_phase_fn(
+        server_cfg, vocab=client_cfg.vocab_size, distill_lr=distill_lr,
+        temperature=temperature, lam=lam,
+        restrict_to_support=restrict_to_support,
+        server_distill_steps=server_distill_steps, aggregation=aggregation,
+        send_h=send_h, last_only=last_only, use_kernels=use_kernels,
+    )
 
     def client_phase(lora, frozen, opt, g_tokens, t_cache, g_valid,
                      batches, pub_tokens, ks):
@@ -652,57 +831,13 @@ def make_fused_e2e_round_fn(
             lora, frozen, opt, g_tokens, teacher_cache(g_logits, g_h), g_valid,
             batches, pub_tokens, ks
         )
-        wire = SparseWire(
-            values=w_values, indices=w_indices, mask=w_mask,
-            vocab=client_cfg.vocab_size,
+        # -- server phase (lines 13-16 + next-round broadcast), replicated --
+        s_lora, s_opt, b_last, b_h, d_loss = server_phase(
+            s_lora, s_frozen, s_opt, w_values, w_indices, w_mask, h, ks,
+            pub_tokens,
         )
-        n_tx = jnp.sum((ks > 0).astype(jnp.int32))
-
-        # -- line 15: aggregation from the wire (eqs. 6-7) --
-        k_g = aggregate_wire(
-            wire, aggregation, num_transmitters=n_tx, use_kernel=use_kernels
-        )
-        if send_h and h is not None:
-            tx = (ks > 0).astype(h.dtype)[:, None, None]
-            h_g = jnp.sum(h * tx, axis=0) / jnp.maximum(n_tx, 1).astype(h.dtype)
-        else:
-            h_g = None
-
-        # -- line 16: server-side distillation, scanned over its steps; the
-        # aggregated teacher is softmaxed ONCE for all steps --
-        kg_logp, kg_h_logp, kg_support = teacher_cache(k_g, h_g)
-
-        def server_body(carry, _):
-            sl, so = carry
-            (loss, _), grads = jax.value_and_grad(server_kd_loss, has_aux=True)(
-                sl, s_frozen, pub_tokens, kg_logp, kg_h_logp, kg_support
-            )
-            sl, so = adamw_update(grads, so, sl, lr=distill_lr)
-            return (sl, so), loss
-
-        (new_sl, new_so), losses = jax.lax.scan(
-            server_body, (s_lora, s_opt), None, length=server_distill_steps
-        )
-        # every selected client dropped -> no aggregation, no server update
-        has_tx = n_tx > 0
-        keep = lambda new, old: jnp.where(has_tx, new, old)
-        s_lora = jax.tree.map(keep, new_sl, s_lora)
-        s_opt = jax.tree.map(keep, new_so, s_opt)
-        # observability tap: the final server-distill loss of the round
-        # (NaN when no client transmitted — the server never distilled)
-        d_loss = jnp.where(
-            has_tx,
-            losses[-1] if server_distill_steps else jnp.float32(jnp.nan),
-            jnp.nan,
-        )
-
-        # -- lines 1-2 of the NEXT round: refreshed broadcast knowledge --
-        b_last, b_aux = last_logits(
-            merge_lora(s_lora, s_frozen), server_cfg,
-            {"tokens": pub_tokens}, last_only=last_only,
-        )
-        return (lora, opt, s_lora, s_opt, wire.values, wire.indices,
-                b_last, b_aux.lora_h, d_loss)
+        return (lora, opt, s_lora, s_opt, w_values, w_indices,
+                b_last, b_h, d_loss)
 
     return fn
 

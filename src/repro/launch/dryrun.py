@@ -38,8 +38,8 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import ARCHITECTURES, INPUT_SHAPES, get_config
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs import ARCHITECTURES, INPUT_SHAPES
+from repro.configs.base import ModelConfig
 from repro.launch.mesh import V5E, make_production_mesh
 from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
 from repro import sharding as sh

@@ -14,10 +14,38 @@ import json
 import math
 import os
 
+from repro.configs import get_smoke_config
 from repro.configs.gpt2_paper import REDUCED_CLIENT, REDUCED_SERVER
 from repro.data import make_banking77_like
 from repro.fed import FedConfig, run_federated
 from repro.fed.rounds import METHODS
+
+
+def family_configs(spec: str, seq_len: int):
+    """Resolve ``--families`` into per-family model configs aligned to the
+    shared exchange contracts (one vocab, one LoRA rank — paper §II): each
+    comma-separated arch id's smoke config is re-based onto the reduced
+    experiment's vocab/LoRA; SSM families get a chunk size dividing the
+    experiment sequence length."""
+    fams = []
+    for arch in spec.split(","):
+        arch = arch.strip()
+        if not arch:
+            continue
+        smoke = get_smoke_config(arch)
+        over = dict(
+            name=f"fam-{arch}",
+            vocab_size=REDUCED_CLIENT.vocab_size,
+            lora=REDUCED_CLIENT.lora,
+            max_seq_len=max(seq_len, 32),
+        )
+        if smoke.ssm is not None:
+            chunk = next(c for c in (8, 4, 2, 1) if seq_len % c == 0)
+            over["ssm"] = dataclasses.replace(smoke.ssm, chunk_size=chunk)
+        fams.append(smoke.with_overrides(**over))
+    if not fams:
+        raise SystemExit(f"--families {spec!r} names no architectures")
+    return fams
 
 
 def main(argv=None) -> int:
@@ -43,6 +71,13 @@ def main(argv=None) -> int:
                     help="fused_e2e only: run ALL rounds as one compiled "
                          "lax.scan dispatch with the per-round eval tapped "
                          "inside the scan")
+    ap.add_argument("--families", default=None,
+                    help="comma-separated arch ids from repro.configs (e.g. "
+                         "'gpt2-paper,mamba2-130m'): heterogeneous fleet — "
+                         "clients cycle these families round-robin, served "
+                         "by the family-bucketed engines; smoke configs are "
+                         "re-based onto the shared vocab/LoRA exchange "
+                         "contract.  Default: homogeneous REDUCED_CLIENT")
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--per-round", type=int, default=4)
@@ -54,7 +89,11 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="experiments/fed")
     args = ap.parse_args(argv)
 
-    ds = make_banking77_like(vocab_size=REDUCED_CLIENT.vocab_size, seq_len=24, seed=args.seed)
+    seq_len = 24
+    ds = make_banking77_like(vocab_size=REDUCED_CLIENT.vocab_size, seq_len=seq_len, seed=args.seed)
+    client_cfg = (
+        family_configs(args.families, seq_len) if args.families else REDUCED_CLIENT
+    )
     fed = FedConfig(
         method=args.method,
         engine=args.engine,
@@ -72,11 +111,13 @@ def main(argv=None) -> int:
         shard_clients=args.shard_clients,
         scan_rounds=args.scan_rounds,
     )
-    run = run_federated(REDUCED_CLIENT, REDUCED_SERVER, ds, fed, verbose=True)
+    run = run_federated(client_cfg, REDUCED_SERVER, ds, fed, verbose=True)
 
     os.makedirs(args.out, exist_ok=True)
     rec = {
         "method": args.method,
+        "families": args.families,
+        "family_client_acc": run.family_client_acc,
         "fed": {k: v for k, v in dataclasses.asdict(fed).items() if not isinstance(v, dict)},
         "server_acc": run.server_acc,
         "client_acc": run.client_acc,

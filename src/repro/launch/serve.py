@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.configs import ARCHITECTURES, get_smoke_config
 from repro.launch.steps import make_serve_step
-from repro.models import forward, init as model_init, init_cache
+from repro.models import init as model_init, init_cache
 from repro.models.frontends import synth_frontend_embeddings
 
 

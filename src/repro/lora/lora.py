@@ -12,7 +12,6 @@ from __future__ import annotations
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 __all__ = ["is_lora_path", "split_lora", "merge_lora", "lora_param_count", "map_lora"]
 

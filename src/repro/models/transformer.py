@@ -25,7 +25,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.attention import (
-    KVCache,
     attn_apply,
     attn_init,
     cross_attn_apply,
@@ -33,7 +32,7 @@ from repro.models.attention import (
 )
 from repro.models.layers import mlp_apply, mlp_init, norm_apply, norm_init
 from repro.models.moe import moe_apply, moe_init
-from repro.models.ssm import SSMCache, init_ssm_cache, ssm_apply, ssm_init
+from repro.models.ssm import init_ssm_cache, ssm_apply, ssm_init
 
 __all__ = ["StackState", "period_of", "stack_init", "stack_apply", "init_stack_cache"]
 

@@ -1,7 +1,6 @@
 """Data pipeline: synthetic Banking77 statistics, Dirichlet partition."""
 
 import numpy as np
-import pytest
 
 from repro.data import (
     batch_iterator,

@@ -1,7 +1,6 @@
 """Dry-run machinery unit tests (parser + policy; no 512-device compile)."""
 
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import INPUT_SHAPES, get_config
@@ -23,10 +22,8 @@ ENTRY %main {
 
 
 def _parser():
-    import importlib.util, sys, types
-
-    # load dryrun without executing jax-device side effects? XLA_FLAGS set is
-    # harmless after jax is already initialised in this process.
+    # load dryrun without executing jax-device side effects? XLA_FLAGS set
+    # is harmless after jax is already initialised in this process.
     from repro.launch import dryrun
 
     return dryrun.collective_bytes

@@ -645,7 +645,7 @@ def test_scan_rounds_matches_per_round_fedrun():
     """FedConfig.scan_rounds=True (one lax.scan dispatch for the whole run,
     in-scan eval tap) reproduces the per-round fused_e2e run: identical
     k/bytes, accuracies to float tolerance.  A (tiny) pretraining phase
-    gives the fleet the shared backbone run_rounds requires."""
+    gives the fleet one shared backbone W' (the paper's setting)."""
     ds = _dataset()
     kw = dict(rounds=2, pretrain_steps=2, server_pretrain="none")
     loop = run_federated(CLIENT, SERVER, ds, _cfg("fused_e2e", **kw))
@@ -658,6 +658,26 @@ def test_scan_rounds_matches_per_round_fedrun():
         assert a.uplink_bytes == b.uplink_bytes
         assert a.downlink_bytes == b.downlink_bytes
         assert a.num_transmitters == b.num_transmitters
+    np.testing.assert_allclose(loop.server_acc, scan.server_acc, atol=1e-6)
+    np.testing.assert_allclose(loop.client_acc, scan.client_acc, atol=1e-6)
+    np.testing.assert_allclose(loop.distill_loss, scan.distill_loss, rtol=1e-4)
+
+
+def test_scan_rounds_without_shared_backbone():
+    """PR-5 guard lift: run_rounds no longer requires one shared frozen W'.
+    With pretraining disabled every client carries its OWN random backbone
+    (fleet-stacked frozens, frozen_ax=0 in the scanned executable); the
+    multi-round scan still reproduces the per-round path exactly."""
+    ds = _dataset()
+    kw = dict(rounds=2, pretrain_steps=0)
+    loop = run_federated(CLIENT, SERVER, ds, _cfg("fused_e2e", **kw))
+    scan = run_federated(
+        CLIENT, SERVER, ds, _cfg("fused_e2e", scan_rounds=True, **kw)
+    )
+    assert loop.per_client_k == scan.per_client_k
+    for a, b in zip(loop.ledger.rounds, scan.ledger.rounds):
+        assert a.uplink_bytes == b.uplink_bytes
+        assert a.downlink_bytes == b.downlink_bytes
     np.testing.assert_allclose(loop.server_acc, scan.server_acc, atol=1e-6)
     np.testing.assert_allclose(loop.client_acc, scan.client_acc, atol=1e-6)
     np.testing.assert_allclose(loop.distill_loss, scan.distill_loss, rtol=1e-4)

@@ -4,7 +4,6 @@ Slow tier: full run_federated calls with backbone pretraining.  The fast
 tier covers the same round machinery on tiny configs in test_engine.py.
 """
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -10,7 +10,6 @@ identical to the full forward: eq. 8 pools over the whole sequence).
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -2,7 +2,6 @@
 full-size config (pure spec math, no 512 devices needed)."""
 
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

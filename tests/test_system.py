@@ -6,7 +6,6 @@ transfers knowledge (accuracy above chance grows round over round) at a
 fraction of the All-logits communication cost.
 """
 
-import numpy as np
 import pytest
 
 from repro.configs.gpt2_paper import REDUCED_CLIENT, REDUCED_SERVER

@@ -49,3 +49,44 @@ def test_sparsify_idempotent():
     once = densify(topk_sparsify(x, 6))
     twice = densify(topk_sparsify(once, 6))
     np.testing.assert_allclose(once, twice, atol=0)
+
+
+def test_wire_union_helpers_pad_concat_take():
+    """pad_wire/concat_wires/take_wire_rows — the heterogeneous engines'
+    union-wire merge point: padding is a no-op on transmitted content,
+    concatenation of two cohorts' wires densifies to the stacked per-cohort
+    densifications, and row gather/permutation round-trips."""
+    from repro.core.topk import (
+        concat_wires, pad_wire, sparsify_wire, take_wire_rows, wire_densify,
+    )
+
+    x1 = jax.random.normal(jax.random.PRNGKey(5), (2, 3, 32))
+    x2 = jax.random.normal(jax.random.PRNGKey(6), (3, 3, 32))
+    w1 = sparsify_wire(x1, jnp.asarray([4, 0]), k_cap=4)     # incl. a dropout
+    w2 = sparsify_wire(x2, jnp.asarray([8, 2, 5]), k_cap=8)  # wider bucket
+
+    padded = pad_wire(w1, 8)
+    assert padded.k_cap == 8 and padded.vocab == w1.vocab
+    np.testing.assert_allclose(wire_densify(padded), wire_densify(w1), atol=0)
+    assert pad_wire(w2, 8) is w2  # already at width: identity
+
+    union = concat_wires([w1, w2])
+    assert union.values.shape == (5, 3, 8)
+    np.testing.assert_allclose(
+        wire_densify(union),
+        jnp.concatenate([wire_densify(w1), wire_densify(w2)]),
+        atol=0,
+    )
+
+    perm = [3, 0, 4]
+    taken = take_wire_rows(union, perm)
+    np.testing.assert_allclose(
+        wire_densify(taken), wire_densify(union)[jnp.asarray(perm)], atol=0
+    )
+
+    import pytest
+
+    with pytest.raises(ValueError):
+        pad_wire(w2, 4)  # cannot shrink
+    with pytest.raises(ValueError):
+        concat_wires([w1, sparsify_wire(x1, jnp.asarray([1, 1]), 2)._replace(vocab=64)])
