@@ -17,9 +17,16 @@ committed full record and fails loudly on:
    an equality-shaped check: a legitimate format change must refresh the
    committed BENCH_round.json in the same PR.
 
+The PR-6 quantized-wire record (BENCH_quant) is gated too, fresh AND
+committed (see ``check_quant``): the dequantize-fused aggregation route must
+stay dense-stack-free, the int8 wire must be strictly cheaper than the float
+wire at equal shape, and the 8-bit entry pricing must never shrink the
+adaptive mean k at the same Shannon budget.
+
 Run (CI does exactly this):
 
     python benchmarks/engine_bench.py --quick --round-only
+    python benchmarks/engine_bench.py --quick --quant-only
     python benchmarks/check_bench.py
 
 Pure stdlib; exits non-zero with a one-line reason per failed check.
@@ -76,6 +83,54 @@ def check(fresh: dict, committed: dict, *, min_speedup: float) -> list[str]:
     return failures
 
 
+def check_quant(record: dict, label: str) -> list[str]:
+    """Gate on a BENCH_quant record (applied to BOTH the fresh quick record
+    and the committed full one — the guarantees are scale-independent):
+
+    1. ``aggregation.agg_dense_stack_free`` true — the dequantize-fused
+       aggregation route stayed free of the (N, B, V) dense stack;
+    2. ``equal_shape`` — the int8 wire strictly cheaper than the float wire
+       at the same (num_samples, k): the whole point of the format;
+    3. ``speedups.quant_vs_float_mean_k`` >= 1 — the 8-bit entry pricing
+       must never BUY LESS adaptive k at the same Shannon budget.
+    """
+    failures = []
+
+    agg = record.get("aggregation", {})
+    if agg.get("agg_dense_stack_free") is not True:
+        failures.append(
+            f"[{label}] agg_dense_stack_free is not true: the dequant-fused "
+            "aggregation materialised an (N, B, V)-sized intermediate "
+            f"(max_agg_intermediate_elems={agg.get('max_agg_intermediate_elems')}, "
+            f"dense_stack_elems={agg.get('dense_stack_elems')})"
+        )
+
+    eq = record.get("equal_shape", {})
+    q_bytes, f_bytes = eq.get("quant_uplink_bytes"), eq.get("float_uplink_bytes")
+    if q_bytes is None or f_bytes is None:
+        failures.append(
+            f"[{label}] missing equal_shape bytes "
+            f"(quant={q_bytes}, float={f_bytes})"
+        )
+    elif not q_bytes < f_bytes:
+        failures.append(
+            f"[{label}] quant wire not strictly cheaper at equal shape: "
+            f"{q_bytes} >= {f_bytes} bytes at k={eq.get('k')}"
+        )
+
+    k_ratio = record.get("speedups", {}).get("quant_vs_float_mean_k")
+    if k_ratio is None:
+        failures.append(f"[{label}] record has no speedups.quant_vs_float_mean_k")
+    elif k_ratio < 1.0:
+        failures.append(
+            f"[{label}] quant mean k fell BELOW the float run's "
+            f"({k_ratio}x < 1x): 8-bit pricing must never shrink the "
+            "adaptive k at the same budget"
+        )
+
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument(
@@ -93,6 +148,16 @@ def main(argv=None) -> int:
         help="floor for speedups.e2e_vs_fused_host (committed: 1.36; the "
              "default leaves a generous CI-noise margin)",
     )
+    ap.add_argument(
+        "--quant-fresh",
+        default=os.path.join(_REPO_ROOT, "BENCH_quant.quick.json"),
+        help="quant record written by the quick bench run just executed",
+    )
+    ap.add_argument(
+        "--quant-committed",
+        default=os.path.join(_REPO_ROOT, "BENCH_quant.json"),
+        help="the committed full-size quant reference record",
+    )
     args = ap.parse_args(argv)
 
     for path in (args.fresh, args.committed):
@@ -100,12 +165,23 @@ def main(argv=None) -> int:
             print(f"[check_bench] FAIL: {path} does not exist "
                   "(run benchmarks/engine_bench.py --quick --round-only first)")
             return 2
+    for path in (args.quant_fresh, args.quant_committed):
+        if not os.path.exists(path):
+            print(f"[check_bench] FAIL: {path} does not exist "
+                  "(run benchmarks/engine_bench.py --quick --quant-only first)")
+            return 2
     with open(args.fresh) as f:
         fresh = json.load(f)
     with open(args.committed) as f:
         committed = json.load(f)
+    with open(args.quant_fresh) as f:
+        quant_fresh = json.load(f)
+    with open(args.quant_committed) as f:
+        quant_committed = json.load(f)
 
     failures = check(fresh, committed, min_speedup=args.min_speedup)
+    failures += check_quant(quant_fresh, "quant-fresh")
+    failures += check_quant(quant_committed, "quant-committed")
     if failures:
         for msg in failures:
             print(f"[check_bench] FAIL: {msg}")
@@ -115,7 +191,11 @@ def main(argv=None) -> int:
         f"e2e_vs_fused_host={fresh['speedups']['e2e_vs_fused_host']}x >= "
         f"{args.min_speedup}x, sparse_wire_bytes="
         f"{fresh['aggregation']['sparse_wire_bytes']} <= committed "
-        f"{committed['aggregation']['sparse_wire_bytes']}"
+        f"{committed['aggregation']['sparse_wire_bytes']}; quant gate: "
+        "dequant dense-stack-free, equal-shape bytes "
+        f"{quant_fresh['equal_shape']['quant_uplink_bytes']} < "
+        f"{quant_fresh['equal_shape']['float_uplink_bytes']}, mean-k ratio "
+        f"{quant_fresh['speedups']['quant_vs_float_mean_k']}x >= 1x"
     )
     return 0
 

@@ -658,21 +658,196 @@ def bench_hetero(quick: bool = True, out_json: str | None = None):
     ]
 
 
+def _assert_dequant_agg_dense_stack_free(n: int, rows: int, vocab: int, k_cap: int) -> int:
+    """Same trace inspection as :func:`_assert_agg_dense_stack_free`, for the
+    QUANTIZED route: the dequantize-fused aggregation (int8 wire + per-row
+    scale in, (B, V) teacher out) must reconstruct float values only inside
+    the O(N·B·k_cap) working set, never as an (N, rows, V) stack."""
+    from repro.core.aggregation import aggregate_wire, max_intermediate_elems
+    from repro.core.topk import QuantizedWire
+
+    def agg(values, scale, indices, mask, n_tx):
+        wire = QuantizedWire(
+            values=values, scale=scale, indices=indices, mask=mask, vocab=vocab
+        )
+        return aggregate_wire(wire, "adaptive", num_transmitters=n_tx)
+
+    jaxpr = jax.make_jaxpr(agg)(
+        jnp.zeros((n, rows, k_cap), jnp.int8), jnp.ones((n, rows), jnp.float32),
+        jnp.zeros((n, rows, k_cap), jnp.int32),
+        jnp.zeros((n, rows, k_cap), bool), jnp.int32(n),
+    )
+    worst = max_intermediate_elems(jaxpr)
+    dense_stack = n * rows * vocab
+    assert worst < dense_stack, (
+        f"dequant-fused aggregation materialised {worst} elements >= the "
+        f"dense (N, B, V) stack's {dense_stack}"
+    )
+    return worst
+
+
+def bench_quant(quick: bool = True, out_json: str | None = None):
+    """Quantized int8 wire vs the float16 wire (writes BENCH_quant[.quick].json).
+
+    Three readings:
+
+    * equal-shape pricing — the engines' single accounting source
+      (``make_upload_payload``) at the SAME (num_samples, k): the int8 wire
+      must be strictly cheaper on the air.
+    * fixed-SNR fed runs — two identical fused_e2e ``run_federated`` runs
+      (float vs ``quantize_wire=True``) on the same constrained channel at a
+      fixed nominal SNR: bytes/round, the larger adaptive mean k the 8-bit
+      entry pricing buys back at the same Shannon budget, and the accuracy
+      trajectory.
+    * dequant-fused proof — trace inspection that the QuantizedWire
+      aggregation route stays dense-stack-free at bench shapes.
+    """
+    from repro.configs.base import LoRAConfig
+    from repro.configs.gpt2_paper import REDUCED_CLIENT, REDUCED_SERVER
+    from repro.core import ChannelConfig
+    from repro.data import make_banking77_like
+    from repro.fed import FedConfig, run_federated
+    from repro.fed.client import make_upload_payload
+
+    vocab = 256 if quick else 4096
+    rounds = 2 if quick else 3
+    lora = LoRAConfig(rank=4, alpha=32.0, dropout=0.0, targets=("q", "v", "head"))
+    client = REDUCED_CLIENT.with_overrides(
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, d_ff=128,
+        vocab_size=vocab, max_seq_len=32, lora=lora,
+    )
+    server = REDUCED_SERVER.with_overrides(
+        num_layers=2, d_model=96, num_heads=2, num_kv_heads=2, d_ff=192,
+        vocab_size=vocab, max_seq_len=32, lora=lora,
+    )
+    ds = make_banking77_like(vocab_size=vocab, seq_len=12, total=500, seed=0)
+    # constrained fixed-SNR uplink: the adaptive k is budget-bound, so the
+    # cheaper 8-bit entries show up as MORE transmitted entries per round
+    chan = ChannelConfig(bandwidth_hz=4e4, mean_snr_db=5.0)
+
+    def cfg(quantize):
+        return FedConfig(
+            method="adald", engine="fused_e2e", num_clients=4,
+            clients_per_round=2, rounds=rounds, public_size=64,
+            public_batch=16, eval_size=64, local_steps=2, distill_steps=1,
+            server_distill_steps=2, seed=0, channel=chan, pretrain_steps=0,
+            quantize_wire=quantize,
+        )
+
+    t0 = time.time()
+    flt = run_federated(client, server, ds, cfg(False))
+    qnt = run_federated(client, server, ds, cfg(True))
+    wall_s = time.time() - t0
+
+    def summarise(run):
+        up = [r.uplink_bytes for r in run.ledger.rounds]
+        return {
+            "mean_k": round(float(np.mean(run.mean_k)), 1),
+            "uplink_bytes_per_round": round(float(np.mean(up))),
+            "uplink_bytes_total": round(float(np.sum(up))),
+            "final_server_acc": round(float(run.server_acc[-1]), 4),
+            "server_acc": [round(float(a), 4) for a in run.server_acc],
+        }
+
+    f_sum, q_sum = summarise(flt), summarise(qnt)
+
+    # equal-shape pricing through the engines' single accounting source: the
+    # quant run's largest realized k, priced at 16-bit vs 8-bit entries
+    k_eq = int(max(max(ks) for ks in qnt.per_client_k))
+    n_samples = 64  # the runs' public_size
+    fpay, _ = make_upload_payload(
+        client, 0, n_samples, k_eq, send_h=True, value_bits=16,
+        snr_db=float(chan.mean_snr_db),
+    )
+    qpay, _ = make_upload_payload(
+        client, 0, n_samples, k_eq, send_h=True, value_bits=16,
+        snr_db=float(chan.mean_snr_db), quantize=True,
+    )
+    assert qpay.spec.uplink_bits < fpay.spec.uplink_bits, (
+        "int8 wire must be strictly cheaper than the float wire at equal shape"
+    )
+
+    agg_n, agg_rows, agg_vocab, agg_k_cap = 10, 64, 8192, 256
+    max_elems = _assert_dequant_agg_dense_stack_free(
+        agg_n, agg_rows, agg_vocab, agg_k_cap
+    )
+
+    savings = {
+        "float_vs_quant_bytes_equal_k": round(
+            fpay.spec.uplink_bits / qpay.spec.uplink_bits, 2
+        ),
+        "quant_vs_float_mean_k": round(q_sum["mean_k"] / f_sum["mean_k"], 2),
+    }
+    shape = f"C=4x2;L2;d64/96;V{vocab};T12;P64;R{rounds};fused_e2e"
+
+    if out_json:
+        record = {
+            "bench": "quant_wire",
+            "shape": shape,
+            "quick": quick,
+            "backend": jax.default_backend(),
+            "cpu_count": os.cpu_count(),
+            "channel": {"bandwidth_hz": chan.bandwidth_hz,
+                        "mean_snr_db": chan.mean_snr_db},
+            "float": f_sum,
+            "quant": q_sum,
+            "equal_shape": {
+                "k": k_eq,
+                "num_samples": n_samples,
+                "float_uplink_bytes": round(fpay.spec.uplink_bytes),
+                "quant_uplink_bytes": round(qpay.spec.uplink_bytes),
+            },
+            "aggregation": {
+                "max_agg_intermediate_elems": max_elems,
+                "dense_stack_elems": agg_n * agg_rows * agg_vocab,
+                "agg_dense_stack_free": True,  # asserted above
+            },
+            "speedups": savings,
+            "wall_s": round(wall_s, 1),
+            "notes": (
+                "Two identical fused_e2e run_federated runs on the same "
+                "constrained fixed-nominal-SNR channel: float (16-bit "
+                "entries) vs quantize_wire=True (int8 entries + per-row f32 "
+                "scale, h kept at 16 bits).  equal_shape prices the quant "
+                "run's largest realized k through make_upload_payload at "
+                "both widths — the engines' single accounting source.  "
+                "quant_vs_float_mean_k > 1 is the budget buy-back: cheaper "
+                "entries -> larger adaptive k at the SAME Shannon budget.  "
+                "agg_dense_stack_free re-proves the dequantize-fused "
+                "aggregation route on the int8 wire."
+            ),
+        }
+        with open(out_json, "w") as f:
+            json.dump(record, f, indent=1)
+
+    return [
+        ("quant_float_uplink_bytes_per_round", f_sum["uplink_bytes_per_round"],
+         f"{shape};mean_k={f_sum['mean_k']}"),
+        ("quant_int8_uplink_bytes_per_round", q_sum["uplink_bytes_per_round"],
+         f"{shape};mean_k={q_sum['mean_k']}"
+         f";equal_k_savings={savings['float_vs_quant_bytes_equal_k']:.2f}x"),
+    ]
+
+
 if __name__ == "__main__":
     quick = "--quick" in sys.argv
     round_only = "--round-only" in sys.argv
     engine_only = "--engine-only" in sys.argv
     hetero_only = "--hetero-only" in sys.argv
+    quant_only = "--quant-only" in sys.argv
+    any_only = round_only or engine_only or hetero_only or quant_only
     # quick runs get their own file so they never clobber the committed
     # full-size record that README cites
     suffix = "quick.json" if quick else "json"
     jobs = []
-    if not round_only and not hetero_only:
+    if engine_only or not any_only:
         jobs.append((bench, os.path.join(_REPO_ROOT, f"BENCH_engine.{suffix}")))
-    if not engine_only and not hetero_only:
+    if round_only or not any_only:
         jobs.append((bench_round, os.path.join(_REPO_ROOT, f"BENCH_round.{suffix}")))
-    if hetero_only or not (round_only or engine_only):
+    if hetero_only or not any_only:
         jobs.append((bench_hetero, os.path.join(_REPO_ROOT, f"BENCH_hetero.{suffix}")))
+    if quant_only or not any_only:
+        jobs.append((bench_quant, os.path.join(_REPO_ROOT, f"BENCH_quant.{suffix}")))
     for fn, out in jobs:
         rows = fn(quick=quick, out_json=out)
         for name, us, derived in rows:

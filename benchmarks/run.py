@@ -35,6 +35,7 @@ def main() -> None:
         "engine": engine_bench.bench,
         "round": engine_bench.bench_round,
         "hetero": engine_bench.bench_hetero,
+        "quant": engine_bench.bench_quant,
         "agg": agg_ablation.bench,
         "fig2": fig2_accuracy.bench,
         "fig3": fig3_comm.bench,

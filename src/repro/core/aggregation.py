@@ -42,7 +42,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-from repro.core.topk import SparseWire
+from repro.core.topk import QuantizedWire, SparseWire
 
 __all__ = [
     "aggregate_adaptive",
@@ -52,6 +52,7 @@ __all__ = [
     "aggregate_sparse",
     "aggregate_wire",
     "scatter_wire_sums",
+    "scatter_wire_sums_dequant",
     "max_intermediate_elems",
 ]
 
@@ -159,8 +160,38 @@ def scatter_wire_sums(
     )
 
 
+def scatter_wire_sums_dequant(
+    q_values: jax.Array,
+    scale: jax.Array,
+    mask: jax.Array,
+    indices: jax.Array,
+    vocab: int,
+    mode: AggregationMode = "adaptive",
+) -> tuple[jax.Array, jax.Array]:
+    """Dequantize-fused variant of :func:`scatter_wire_sums` for the int8
+    :class:`~repro.core.topk.QuantizedWire`: reconstruct each entry's float
+    value (``q * scale`` per row) and scatter the mode's two contribution
+    channels in one pass, without ever materialising a separate float wire
+    on the caller's side.
+
+    The dequantized values live only as an O(N·B·k_cap) intermediate — the
+    same order as the wire itself — so the dense-stack-free O(N·B·k_cap)
+    contract of the sparse aggregation path is preserved (trace-asserted by
+    the bench and tests/test_engine.py).
+    """
+    m = mask.astype(jnp.float32)
+    v = q_values.astype(jnp.float32) * scale[..., None] * m
+    if mode == "adaptive":
+        a, b = jnp.abs(v) * v, jnp.abs(v)
+    elif mode in ("zeropad", "mean_nonzero"):
+        a, b = v, m
+    else:
+        raise ValueError(f"unknown aggregation mode: {mode!r}")
+    return scatter_wire_sums(a, b, indices, vocab)
+
+
 def aggregate_wire(
-    wire: SparseWire,
+    wire: SparseWire | QuantizedWire,
     mode: AggregationMode = "adaptive",
     *,
     num_transmitters: jax.Array | None = None,
@@ -180,27 +211,42 @@ def aggregate_wire(
     oracle's stack holds ONLY transmitting clients, so its ``mean(axis=0)``
     divides by the same count.
 
+    A :class:`~repro.core.topk.QuantizedWire` routes through the
+    dequantize-fused scatter (:func:`scatter_wire_sums_dequant` /
+    :func:`repro.kernels.ops.scatter_wire_sums_dequant`), which reconstructs
+    the float values in the same O(N·B·k_cap) pass.
+
     ``use_kernel=True`` routes the scatter-accumulate through the Pallas
-    kernel (:func:`repro.kernels.ops.scatter_wire_sums`).
+    kernels (:mod:`repro.kernels.sparse_agg`).
     """
-    m = wire.mask.astype(wire.values.dtype)
-    v = wire.values * m  # belt-and-braces: sparsify_wire already zeroed
-    if mode == "adaptive":
-        s = jnp.abs(v)  # confidence; 0 for masked entries
-        a, b = s * v, s
-    elif mode == "zeropad":
-        a, b = v, m
-    elif mode == "mean_nonzero":
-        a, b = v, m
-    else:
+    if mode not in ("adaptive", "zeropad", "mean_nonzero"):
         raise ValueError(f"unknown aggregation mode: {mode!r}")
+    if isinstance(wire, QuantizedWire):
+        if use_kernel:
+            from repro.kernels import ops as kops
 
-    if use_kernel:
-        from repro.kernels import ops as kops
-
-        num, den = kops.scatter_wire_sums(a, b, wire.indices, wire.vocab)
+            num, den = kops.scatter_wire_sums_dequant(
+                wire.values, wire.scale, wire.mask, wire.indices, wire.vocab, mode
+            )
+        else:
+            num, den = scatter_wire_sums_dequant(
+                wire.values, wire.scale, wire.mask, wire.indices, wire.vocab, mode
+            )
     else:
-        num, den = scatter_wire_sums(a, b, wire.indices, wire.vocab)
+        m = wire.mask.astype(wire.values.dtype)
+        v = wire.values * m  # belt-and-braces: sparsify_wire already zeroed
+        if mode == "adaptive":
+            s = jnp.abs(v)  # confidence; 0 for masked entries
+            a, b = s * v, s
+        else:
+            a, b = v, m
+
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            num, den = kops.scatter_wire_sums(a, b, wire.indices, wire.vocab)
+        else:
+            num, den = scatter_wire_sums(a, b, wire.indices, wire.vocab)
 
     if mode == "zeropad":
         if num_transmitters is None:

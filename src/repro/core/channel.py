@@ -110,9 +110,15 @@ def topk_budget(
     what makes ``PayloadSpec.fits`` hold by construction for the realized
     payload: without the reservation the projection rode on top of a
     budget-exact top-k and pushed the payload past capacity.  A budget that
-    cannot cover the reservation plus one entry behaves like deep fade: the
-    survival floor applies (``k_min``), or the client drops out at
-    ``k_min = 0``.
+    cannot cover the reservation plus ``k_min`` entries per sample behaves
+    like deep fade: the client DROPS THE ROUND (k = 0) rather than emitting
+    an unfittable payload.  (Before this fix the ``max(k_min, ...)``
+    survival floor lifted the negative entry count back to ``k_min``, so a
+    100-bit link with a 1000-bit LoRA reservation "transmitted" a payload
+    several times its own capacity and broke the fits-by-construction
+    invariant.  The floor is for links that can't afford ``k_min`` BARE
+    entries — those still send their argmax; a link that can't afford its
+    fixed reservation has nothing coherent to send.)
 
     A link in outage (zero bit budget) returns 0 regardless of ``k_min``:
     the survival floor exists for faded-but-alive links, but nothing can be
@@ -124,6 +130,12 @@ def topk_budget(
     total_entries = (state.bit_budget - float(reserved_bits)) / float(d)
     k = int(math.floor(total_entries / max(1, num_samples)))
     hi = vocab_size if k_max is None else min(k_max, vocab_size)
+    if k < k_min and reserved_bits > 0.0:
+        # Unaffordable reservation: deep fade.  The survival floor would
+        # emit k_min entries ON TOP of a reservation the budget cannot
+        # cover; drop the round instead (Client.upload and the engines'
+        # _budgets agree — k == 0 clients transmit nothing).
+        return 0
     return max(k_min, min(k, hi))
 
 

@@ -33,6 +33,8 @@ __all__ = [
     "full_logits_bits",
     "lora_projection_bits",
     "wire_uplink_bits",
+    "downlink_bits",
+    "total_round_bytes",
 ]
 
 
@@ -64,19 +66,27 @@ def wire_uplink_bits(
 
 @dataclasses.dataclass(frozen=True)
 class PayloadSpec:
-    """Static description of what one client sends per round."""
+    """Static description of what one client sends per round.
+
+    ``value_bits`` prices the (value, index) top-k entries — 8 for the
+    int8-quantized wire, 16 for the float wire — while ``h_value_bits``
+    prices the (unquantized) LoRA projection ``h`` separately; it defaults
+    to ``value_bits`` so homogeneous-precision payloads are unchanged.
+    """
 
     num_samples: int
     vocab: int
     k: int
     lora_rank: int | None = None  # None -> no projection exchanged
     value_bits: int = 16
+    h_value_bits: int | None = None  # None -> value_bits
 
     @property
     def uplink_bits(self) -> int:
         bits = topk_upload_bits(self.num_samples, self.k, self.vocab, self.value_bits)
         if self.lora_rank is not None:
-            bits += lora_projection_bits(self.num_samples, self.lora_rank, self.value_bits)
+            h_bits = self.value_bits if self.h_value_bits is None else self.h_value_bits
+            bits += lora_projection_bits(self.num_samples, self.lora_rank, h_bits)
         return bits
 
     @property

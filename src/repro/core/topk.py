@@ -27,8 +27,10 @@ import jax.numpy as jnp
 
 __all__ = [
     "BISECTION_ITERS",
+    "QUANT_LEVELS",
     "SparseLogits",
     "SparseWire",
+    "QuantizedWire",
     "topk_sparsify",
     "topk_mask_dense",
     "topk_mask_batch",
@@ -36,6 +38,8 @@ __all__ = [
     "densify",
     "sparsify_batch",
     "sparsify_wire",
+    "quantize_wire",
+    "dequantize_wire",
     "pad_wire",
     "concat_wires",
     "take_wire_rows",
@@ -208,7 +212,75 @@ class SparseWire(NamedTuple):
         return int(self.values.shape[-1])
 
 
-def sparsify_wire(logits: jax.Array, ks: jax.Array, k_cap: int) -> SparseWire:
+class QuantizedWire(NamedTuple):
+    """The sparse wire with int8-quantized values (paper §III-A byte model
+    at ``value_bits=8``): each row's values are symmetrically quantized to
+    int8 against a per-(client, sample)-row float32 scale, so the same
+    Shannon budget (eq. 5) buys more top-k entries than the 16-bit float
+    wire.  ``indices``/``mask``/``vocab`` are exactly :class:`SparseWire`'s.
+
+    values:  (N, ..., k_cap) int8 quantized logits (0 where not transmitted).
+    scale:   (N, ...) float32 per-row dequantization scale, strictly > 0
+             (1.0 for all-masked straggler rows, whose values are all 0).
+    indices: (N, ..., k_cap) int32 vocab indices (valid even when masked).
+    mask:    (N, ..., k_cap) bool transmit mask.
+    vocab:   static python int — full dimensionality c.
+    """
+
+    values: jax.Array
+    scale: jax.Array
+    indices: jax.Array
+    mask: jax.Array
+    vocab: int
+
+    @property
+    def k_cap(self) -> int:
+        return int(self.values.shape[-1])
+
+
+Wire = SparseWire | QuantizedWire
+
+# Symmetric int8 range: round(v / scale) lands in [-127, 127], so the scale
+# amax/127 is exactly invertible at the extremes and -128 is never emitted.
+QUANT_LEVELS = 127
+
+
+def quantize_wire(wire: SparseWire) -> QuantizedWire:
+    """Symmetric per-row int8 quantization of a float wire.
+
+    The scale is ``max|v| / 127`` over each row's TRANSMITTED entries,
+    clamped to 1.0 when the row transmits nothing (or only exact zeros) so
+    it is strictly positive and dequantization is NaN-free for every input
+    — including k=0 straggler rows, which round-trip to exact zeros.
+    """
+    v = jnp.where(wire.mask, wire.values, 0).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(v), axis=-1)
+    scale = jnp.where(amax > 0, amax / QUANT_LEVELS, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(v / scale[..., None]), -QUANT_LEVELS, QUANT_LEVELS)
+    return QuantizedWire(
+        values=q.astype(jnp.int8),
+        scale=scale,
+        indices=wire.indices,
+        mask=wire.mask,
+        vocab=wire.vocab,
+    )
+
+
+def dequantize_wire(wire: QuantizedWire) -> SparseWire:
+    """Reconstruct the float wire: ``values * scale`` per row, exact zeros
+    off the transmit mask."""
+    v = wire.values.astype(jnp.float32) * wire.scale[..., None]
+    return SparseWire(
+        values=jnp.where(wire.mask, v, 0.0),
+        indices=wire.indices,
+        mask=wire.mask,
+        vocab=wire.vocab,
+    )
+
+
+def sparsify_wire(
+    logits: jax.Array, ks: jax.Array, k_cap: int, *, quantize: bool = False
+) -> Wire:
     """Per-client adaptive top-k of a stacked ``(N, ..., vocab)`` tensor as
     the sparse wire format, with the budgets ``ks`` as DATA (int32,
     broadcastable to ``logits.shape[:-1]``; typically ``(N,)`` — one budget
@@ -220,6 +292,9 @@ def sparsify_wire(logits: jax.Array, ks: jax.Array, k_cap: int) -> SparseWire:
     ``topk_sparsify(logits[i], ks[i])`` exactly — including ties — so
     ``wire_densify(sparsify_wire(x, ks, k_cap)) == topk_mask_batch(x, ks)``
     bit-for-bit whenever ``k_cap >= max(ks)``.
+
+    ``quantize=True`` emits the int8 :class:`QuantizedWire` directly (the
+    §III-A byte model at ``value_bits=8``) instead of the float wire.
     """
     vocab = logits.shape[-1]
     k_cap = int(min(k_cap, vocab))
@@ -230,35 +305,38 @@ def sparsify_wire(logits: jax.Array, ks: jax.Array, k_cap: int) -> SparseWire:
     mask = jnp.broadcast_to(
         jnp.arange(k_cap, dtype=jnp.int32) < kk, values.shape
     )
-    return SparseWire(
+    wire = SparseWire(
         values=jnp.where(mask, values, jnp.zeros_like(values)),
         indices=indices.astype(jnp.int32),
         mask=mask,
         vocab=vocab,
     )
+    return quantize_wire(wire) if quantize else wire
 
 
-def pad_wire(wire: SparseWire, k_cap: int) -> SparseWire:
+def pad_wire(wire: Wire, k_cap: int) -> Wire:
     """Widen a wire to ``k_cap`` entries per row by appending masked-out
     padding (value 0, index 0, mask False) — a no-op on the transmitted
     content (``wire_densify``/``aggregate_wire`` ignore masked entries).
     Used to bring several family buckets' wires to one common width before
-    :func:`concat_wires`."""
+    :func:`concat_wires`.  Handles both the float and the quantized wire
+    (the per-row scale has no entry axis, so it is untouched)."""
     pad = k_cap - wire.k_cap
     if pad < 0:
         raise ValueError(f"cannot shrink a wire from {wire.k_cap} to {k_cap}")
     if pad == 0:
         return wire
     widths = [(0, 0)] * (wire.values.ndim - 1) + [(0, pad)]
-    return SparseWire(
-        values=jnp.pad(wire.values, widths),
-        indices=jnp.pad(wire.indices, widths),
-        mask=jnp.pad(wire.mask, widths),
-        vocab=wire.vocab,
-    )
+    values = jnp.pad(wire.values, widths)
+    indices = jnp.pad(wire.indices, widths)
+    mask = jnp.pad(wire.mask, widths)
+    if isinstance(wire, QuantizedWire):
+        return QuantizedWire(values=values, scale=wire.scale, indices=indices,
+                             mask=mask, vocab=wire.vocab)
+    return SparseWire(values=values, indices=indices, mask=mask, vocab=wire.vocab)
 
 
-def concat_wires(wires: Sequence[SparseWire]) -> SparseWire:
+def concat_wires(wires: Sequence[Wire]) -> Wire:
     """Union of several cohorts' uplinks as ONE wire: concatenate along the
     leading client axis, first padding every wire to the widest ``k_cap``.
 
@@ -273,20 +351,34 @@ def concat_wires(wires: Sequence[SparseWire]) -> SparseWire:
     vocabs = {w.vocab for w in wires}
     if len(vocabs) > 1:
         raise ValueError(f"wires address different vocabularies: {sorted(vocabs)}")
+    formats = {type(w) for w in wires}
+    if len(formats) > 1:
+        raise ValueError("cannot union float and quantized wires — "
+                         "quantize (or dequantize) every bucket first")
     k_cap = max(w.k_cap for w in wires)
     padded = [pad_wire(w, k_cap) for w in wires]
-    return SparseWire(
-        values=jnp.concatenate([w.values for w in padded], axis=0),
-        indices=jnp.concatenate([w.indices for w in padded], axis=0),
-        mask=jnp.concatenate([w.mask for w in padded], axis=0),
-        vocab=wires[0].vocab,
-    )
+    values = jnp.concatenate([w.values for w in padded], axis=0)
+    indices = jnp.concatenate([w.indices for w in padded], axis=0)
+    mask = jnp.concatenate([w.mask for w in padded], axis=0)
+    if isinstance(wires[0], QuantizedWire):
+        scale = jnp.concatenate([w.scale for w in padded], axis=0)
+        return QuantizedWire(values=values, scale=scale, indices=indices,
+                             mask=mask, vocab=wires[0].vocab)
+    return SparseWire(values=values, indices=indices, mask=mask, vocab=wires[0].vocab)
 
 
-def take_wire_rows(wire: SparseWire, rows) -> SparseWire:
+def take_wire_rows(wire: Wire, rows) -> Wire:
     """Gather/permute a wire's leading client axis (e.g. reorder a union
     wire's rows into cohort order, or keep transmitters only)."""
     take = jnp.asarray(rows, jnp.int32)
+    if isinstance(wire, QuantizedWire):
+        return QuantizedWire(
+            values=wire.values[take],
+            scale=wire.scale[take],
+            indices=wire.indices[take],
+            mask=wire.mask[take],
+            vocab=wire.vocab,
+        )
     return SparseWire(
         values=wire.values[take],
         indices=wire.indices[take],
@@ -295,21 +387,51 @@ def take_wire_rows(wire: SparseWire, rows) -> SparseWire:
     )
 
 
-def wire_densify(wire: SparseWire) -> jax.Array:
+def _scatter_add_last(dense: jax.Array, indices: jax.Array, values: jax.Array) -> jax.Array:
+    """Scatter-ADD ``values`` into ``dense`` along the last axis.
+
+    Wire rows may carry DUPLICATE indices: ``pad_wire`` appends masked
+    entries at index 0, so a padded row holds its genuine entries plus pad
+    entries all pointing at vocab index 0.  ``.at[idx].set`` leaves the
+    winner among duplicates unspecified (a pad entry can clobber a real
+    index-0 logit); ``.at[idx].add`` is order-free, and the masked entries
+    contribute exactly 0 — so it must be the wire densification primitive.
+    (The genuine top-k indices within a row are distinct, so add == set
+    for the transmitted content.)
+    """
+    batch_shape = dense.shape[:-1]
+    vocab = dense.shape[-1]
+    flat_dense = dense.reshape((-1, vocab))
+    flat_idx = indices.reshape((-1, indices.shape[-1]))
+    flat_val = values.reshape((-1, values.shape[-1]))
+
+    def scatter_row(row, idx, val):
+        return row.at[idx].add(val)
+
+    out = jax.vmap(scatter_row)(flat_dense, flat_idx, flat_val)
+    return out.reshape(batch_shape + (vocab,))
+
+
+def wire_densify(wire: Wire) -> jax.Array:
     """Scatter a wire payload back to the dense ``(N, ..., vocab)`` stack the
-    dense aggregation oracle consumes (zeros off the transmitted support)."""
+    dense aggregation oracle consumes (zeros off the transmitted support).
+    Quantized wires are dequantized first."""
+    if isinstance(wire, QuantizedWire):
+        wire = dequantize_wire(wire)
     batch_shape = wire.values.shape[:-1]
     dense = jnp.zeros(batch_shape + (wire.vocab,), dtype=wire.values.dtype)
-    return _scatter_last(dense, wire.indices, jnp.where(wire.mask, wire.values, 0))
+    return _scatter_add_last(dense, wire.indices, jnp.where(wire.mask, wire.values, 0))
 
 
-def wire_support(wire: SparseWire) -> jax.Array:
+def wire_support(wire: Wire) -> jax.Array:
     """Dense ``(N, ..., vocab)`` bool transmit mask — which dimensions each
     client actually transmitted (the explicit-sentinel companion of
-    :func:`wire_densify`; True even where the transmitted value is 0.0)."""
+    :func:`wire_densify`; True even where the transmitted value is 0.0).
+    Accumulate-and-threshold so masked pad entries at index 0 cannot
+    clobber a genuine index-0 transmission."""
     batch_shape = wire.values.shape[:-1]
     dense = jnp.zeros(batch_shape + (wire.vocab,), dtype=jnp.float32)
-    return _scatter_last(dense, wire.indices, wire.mask.astype(jnp.float32)) > 0
+    return _scatter_add_last(dense, wire.indices, wire.mask.astype(jnp.float32)) > 0
 
 
 def sparsify_batch(logits: jax.Array, k: int) -> SparseLogits:

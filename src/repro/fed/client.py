@@ -30,14 +30,22 @@ def make_upload_payload(
     send_h: bool,
     value_bits: int,
     snr_db: float,
+    quantize: bool = False,
 ) -> tuple[UplinkPayload, int | None]:
     """The single source of truth for one upload's on-air accounting
     (shared by Client.upload and the batched engine, so ledger parity can't
-    drift).  Returns (payload, lora_rank or None)."""
+    drift).  Returns (payload, lora_rank or None).
+
+    ``quantize`` prices the sparse (value, index) entries at the int8
+    wire's 8 bits/value while the unquantized LoRA projection keeps
+    ``value_bits`` — the split :class:`repro.core.protocol.PayloadSpec`
+    models with ``h_value_bits``."""
     rank = cfg.lora.rank if (send_h and cfg.lora is not None) else None
     spec = PayloadSpec(
         num_samples=num_samples, vocab=cfg.vocab_size, k=k,
-        lora_rank=rank, value_bits=value_bits,
+        lora_rank=rank,
+        value_bits=8 if quantize else value_bits,
+        h_value_bits=value_bits if quantize else None,
     )
     return UplinkPayload(client_id=client_id, spec=spec, snr_db=snr_db), rank
 
@@ -141,9 +149,14 @@ class Client:
         send_h: bool = True,
         k_min: int = 1,
     ) -> ClientUpload | None:
-        """Returns None when the channel budget cannot afford a single
-        (value, index) entry and ``k_min == 0`` — a straggler in outage
-        transmits nothing and must not be zero-padded into aggregation.
+        """Returns None when the round's budget yields ``k == 0`` — a
+        straggler in outage transmits nothing and must not be zero-padded
+        into aggregation.  That happens when the budget cannot afford a
+        single (value, index) entry and ``k_min == 0``, OR (deep fade under
+        ``send_h``) when the reserved projection bits alone exceed the
+        Shannon budget: :func:`repro.core.channel.topk_budget` drops such a
+        round entirely rather than emitting a ``k_min``-floored payload
+        that cannot fit the link.
 
         With ``send_h`` the LoRA-projection bits ride on the same Shannon
         budget, so they are reserved out of it before the top-k entries are

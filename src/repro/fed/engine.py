@@ -50,6 +50,8 @@ from repro.configs.base import ModelConfig
 from repro.core.channel import BatchedChannelState, ChannelState, topk_budget_batch
 from repro.core.protocol import UplinkPayload, downlink_bits, lora_projection_bits
 from repro.core.topk import (
+    QUANT_LEVELS,
+    QuantizedWire,
     SparseWire,
     concat_wires,
     densify,
@@ -86,6 +88,19 @@ def k_cap_bucket(ks: Sequence[int], vocab: int) -> int:
     while cap < need:
         cap *= 2
     return min(cap, vocab)
+
+
+def fake_quant_dense(dense: jax.Array) -> jax.Array:
+    """Quantize-dequantize a densified top-k stack through the int8 wire's
+    per-(client, sample)-row symmetric code — what the dense-path engines
+    (batched/fused client phase) apply under ``quantize_wire`` so their
+    uplink carries exactly the values the 8-bit-per-entry ledger prices.
+    Zeros (off-support entries) map to exact zeros, so the support is
+    preserved."""
+    amax = jnp.max(jnp.abs(dense), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / QUANT_LEVELS, 1.0)
+    q = jnp.clip(jnp.round(dense / scale), -QUANT_LEVELS, QUANT_LEVELS)
+    return q * scale
 
 
 def tree_stack(trees: Sequence) -> object:
@@ -136,7 +151,8 @@ class ClientPhase:
     h: jax.Array | None  # (T, P, r) LoRA projections
     payloads: list[UplinkPayload]
     ks: list[int]
-    sparse: SparseWire | None = None  # (T, P, k_cap) wire triple
+    # (T, P, k_cap) wire — QuantizedWire under the engines' quantize_wire
+    sparse: SparseWire | QuantizedWire | None = None
 
     @property
     def uplink_bytes(self) -> float:
@@ -277,6 +293,7 @@ class BatchedEngine:
         k_min: int = 1,
         last_only: bool = True,
         class_head_only: bool = True,
+        quantize_wire: bool = False,
     ):
         self.clients = clients
         self.cfg = cfg
@@ -285,6 +302,7 @@ class BatchedEngine:
         self.value_bits = value_bits
         self.k_min = k_min
         self.last_only = last_only
+        self.quantize_wire = quantize_wire
 
         loras, frozens = zip(*(split_lora(c.params) for c in clients))
         self._shared = shared_frozen_backbone(frozens)
@@ -341,7 +359,10 @@ class BatchedEngine:
         """Per-client adaptive k — the same host-side scalar math as the
         sequential reference, so k (and bytes) can never drift.  With
         ``send_h`` the LoRA-projection bits are reserved out of each budget
-        first (see :meth:`repro.fed.client.Client.upload`)."""
+        first (see :meth:`repro.fed.client.Client.upload`).  Under
+        ``quantize_wire`` the (value, index) entries are priced at 8 value
+        bits — the same Shannon budget genuinely affords a larger k — while
+        the unquantized projection stays at ``value_bits``."""
         if not adaptive_k:
             return [self.cfg.vocab_size] * n_cohort
         reserved = (
@@ -349,9 +370,10 @@ class BatchedEngine:
             if (send_h and self.cfg.lora is not None)
             else 0
         )
+        wire_bits = 8 if self.quantize_wire else self.value_bits
         return topk_budget_batch(
             states, vocab_size=self.cfg.vocab_size, num_samples=n_samples,
-            value_bits=self.value_bits, k_min=self.k_min, reserved_bits=reserved,
+            value_bits=wire_bits, k_min=self.k_min, reserved_bits=reserved,
         )
 
     def _upload_manifests(self, cohort, states, ks, n_samples: int, send_h: bool):
@@ -364,7 +386,7 @@ class BatchedEngine:
             payload, rank = make_upload_payload(
                 self.cfg, cohort[i].client_id, n_samples, ks[i],
                 send_h=send_h, value_bits=self.value_bits,
-                snr_db=states[i].snr_db,
+                snr_db=states[i].snr_db, quantize=self.quantize_wire,
             )
             payloads.append(payload)
         return active, payloads, rank
@@ -429,6 +451,8 @@ class BatchedEngine:
             take = jnp.asarray(active) if len(active) < len(cohort) else None
             act_logits = logits if take is None else logits[take]
             dense = topk_mask_batch(act_logits, [ks[i] for i in active])
+            if self.quantize_wire:
+                dense = fake_quant_dense(dense)
             if rank is not None and h is not None:
                 h_out = h if take is None else h[take]
 
@@ -478,15 +502,18 @@ class FusedEngine(BatchedEngine):
         shard_clients: bool = False,
         use_kernels: bool = False,
         class_head_only: bool = True,
+        quantize_wire: bool = False,
+        compute_dtype: str = "float32",
     ):
         super().__init__(
             clients, cfg, num_classes=num_classes, lr=lr, distill_lr=distill_lr,
             temperature=temperature, lam=lam, local_steps=local_steps,
             distill_steps=distill_steps, restrict_to_support=restrict_to_support,
             value_bits=value_bits, k_min=k_min, last_only=last_only,
-            class_head_only=class_head_only,
+            class_head_only=class_head_only, quantize_wire=quantize_wire,
         )
         self.shard_clients = shard_clients
+        self.compute_dtype = compute_dtype
 
         def fused(n_distill: int):
             fn = fed_steps.make_fused_round_fn(
@@ -496,6 +523,7 @@ class FusedEngine(BatchedEngine):
                 local_steps=local_steps, distill_steps=n_distill,
                 shared_backbone=self._shared, last_only=last_only,
                 use_kernels=use_kernels, class_head_only=class_head_only,
+                compute_dtype=compute_dtype,
             )
             if shard_clients:
                 fn = self._shard_over_clients(fn)
@@ -590,6 +618,8 @@ class FusedEngine(BatchedEngine):
         if active:
             take = jnp.asarray(active) if len(active) < len(cohort) else None
             dense = dense_all if take is None else dense_all[take]
+            if self.quantize_wire:
+                dense = fake_quant_dense(dense)
             if rank is not None and h_all is not None:
                 h_out = h_all if take is None else h_all[take]
 
@@ -718,13 +748,16 @@ class FusedE2EEngine(_ServerOwnerMixin, FusedEngine):
         last_only: bool = True,
         shard_clients: bool = False,
         use_kernels: bool = False,
+        quantize_wire: bool = False,
+        compute_dtype: str = "float32",
     ):
         super().__init__(
             clients, cfg, num_classes=num_classes, lr=lr, distill_lr=distill_lr,
             temperature=temperature, lam=lam, local_steps=local_steps,
             distill_steps=distill_steps, restrict_to_support=restrict_to_support,
             value_bits=value_bits, k_min=k_min, last_only=last_only,
-            use_kernels=use_kernels,
+            use_kernels=use_kernels, quantize_wire=quantize_wire,
+            compute_dtype=compute_dtype,
         )
         self.shard_clients = shard_clients
         self._fn_kwargs = dict(
@@ -734,7 +767,8 @@ class FusedE2EEngine(_ServerOwnerMixin, FusedEngine):
             server_distill_steps=server_distill_steps,
             aggregation=aggregation, shared_backbone=self._shared,
             last_only=last_only, use_kernels=use_kernels,
-            shard_clients=shard_clients,
+            shard_clients=shard_clients, quantize=quantize_wire,
+            compute_dtype=compute_dtype,
         )
         self._num_classes = num_classes
         self._init_server_state(server)
@@ -786,14 +820,14 @@ class FusedE2EEngine(_ServerOwnerMixin, FusedEngine):
 
         step = self._e2e_step(k_cap, send_h)
         (lora, opt, self._s_lora, self._s_opt,
-         values, indices, b_logits, b_h, self._d_loss) = step(
+         values, indices, scale, b_logits, b_h, self._d_loss) = step(
             lora, frozen, opt, self._s_lora, self._s_frozen, self._s_opt,
             g_tokens, g_logits, g_h, jnp.asarray(g_valid),
             batches, pub_tokens, jnp.asarray(ks + [0] * pad, jnp.int32),
         )
         if pad:  # drop the padded rows before anything observes them
-            lora, opt, values, indices, idx = self._drop_pad(
-                len(cohort), lora, opt, values, indices, idx
+            lora, opt, values, indices, scale, idx = self._drop_pad(
+                len(cohort), lora, opt, values, indices, scale, idx
             )
         self._b_tokens, self._b_logits, self._b_h = pub_tokens, b_logits, b_h
 
@@ -808,12 +842,18 @@ class FusedE2EEngine(_ServerOwnerMixin, FusedEngine):
                 jnp.arange(k_cap, dtype=jnp.int32)[None, None, :]
                 < ks_active[:, None, None]
             )
-            sparse = SparseWire(
-                values=values[take],
-                indices=indices[take],
-                mask=jnp.broadcast_to(mask, values[take].shape),
-                vocab=self.cfg.vocab_size,
-            )
+            mask = jnp.broadcast_to(mask, values[take].shape)
+            if self.quantize_wire:
+                sparse = QuantizedWire(
+                    values=values[take], scale=scale[take],
+                    indices=indices[take], mask=mask,
+                    vocab=self.cfg.vocab_size,
+                )
+            else:
+                sparse = SparseWire(
+                    values=values[take], indices=indices[take], mask=mask,
+                    vocab=self.cfg.vocab_size,
+                )
 
         self._scatter_cohort(idx, lora, opt)
         return ClientPhase(dense=None, h=None, payloads=payloads, ks=ks, sparse=sparse)
@@ -851,7 +891,7 @@ class FusedE2EEngine(_ServerOwnerMixin, FusedEngine):
                 # backbones are fleet-stacked and gather their cohort rows
                 # exactly like the LoRA/opt state (frozen_ax=0 downstream)
                 frz = frozen if shared else jax.tree.map(lambda x: x[sel], frozen)
-                lora, opt, s_lora, s_opt, _v, _i, b_logits, b_h, d_loss = fn(
+                lora, opt, s_lora, s_opt, _v, _i, _sc, b_logits, b_h, d_loss = fn(
                     lora, frz, opt, s_lora, s_frozen, s_opt,
                     g_tokens, g_logits, g_h if has_h else None, g_valid,
                     bat, pub, ks,
@@ -1157,6 +1197,8 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
         last_only: bool = True,
         shard_clients: bool = False,
         use_kernels: bool = False,
+        quantize_wire: bool = False,
+        compute_dtype: str = "float32",
     ):
         from repro.fed.cohort import fleet_index, partition_fleet, validate_family_contracts
 
@@ -1174,12 +1216,13 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
         self.last_only = last_only
         self._num_classes = num_classes
         self._local_steps = local_steps
+        self.quantize_wire = quantize_wire
         sub_kwargs = dict(
             num_classes=num_classes, lr=lr, distill_lr=distill_lr,
             temperature=temperature, lam=lam, local_steps=local_steps,
             distill_steps=distill_steps,
             restrict_to_support=restrict_to_support, value_bits=value_bits,
-            k_min=k_min, last_only=last_only,
+            k_min=k_min, last_only=last_only, quantize_wire=quantize_wire,
         )
         # one BatchedEngine per bucket as the stacked-fleet STATE HOLDER
         # (gather/scatter/budget/batch plumbing); its per-phase steps are
@@ -1193,13 +1236,15 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
             lr=lr, distill_lr=distill_lr, temperature=temperature, lam=lam,
             restrict_to_support=restrict_to_support, local_steps=local_steps,
             distill_steps=distill_steps, last_only=last_only,
+            quantize=quantize_wire, compute_dtype=compute_dtype,
         )
         self._server_kwargs = dict(
             vocab=self.vocab, distill_lr=distill_lr, temperature=temperature,
             lam=lam, restrict_to_support=restrict_to_support,
             server_distill_steps=server_distill_steps,
             aggregation=aggregation, last_only=last_only,
-            use_kernels=use_kernels,
+            use_kernels=use_kernels, quantize=quantize_wire,
+            compute_dtype=compute_dtype,
         )
         self._init_server_state(server)
         self._client_steps: dict = {}
@@ -1275,7 +1320,7 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
         g_valid_arr = jnp.asarray(g_valid)
 
         # -- client phase: one donated compiled call per family bucket --
-        wires: list[SparseWire] = []
+        wires: list[SparseWire | QuantizedWire] = []
         h_parts: list = []
         order: list[int] = []  # cohort position of each bucket-concat row
         payloads_by_pos: dict[int, UplinkPayload] = {}
@@ -1284,7 +1329,7 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
             cohort = [be.clients[j] for j in local]
             batches = be._stacked_batches(cohort, step_major=False)
             idx, lora, frozen, opt = be._gather_cohort(local)
-            lora, opt, v, i, m, h = self._client_step(b.index, k_cap)(
+            lora, opt, v, i, m, sc, h = self._client_step(b.index, k_cap)(
                 lora, frozen, opt, g_tokens, g_logits, g_h, g_valid_arr,
                 batches, pub_tokens, jnp.asarray(ks_b, jnp.int32),
             )
@@ -1296,7 +1341,12 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
             for j, p in enumerate(pos):
                 if ks_b[j] > 0:
                     payloads_by_pos[p] = next(it)
-            wires.append(SparseWire(values=v, indices=i, mask=m, vocab=self.vocab))
+            if self.quantize_wire:
+                wires.append(QuantizedWire(
+                    values=v, scale=sc, indices=i, mask=m, vocab=self.vocab
+                ))
+            else:
+                wires.append(SparseWire(values=v, indices=i, mask=m, vocab=self.vocab))
             h_parts.append(h)
             order.extend(pos)
 
@@ -1308,10 +1358,11 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
         h_all = None
         if h_parts[0] is not None:
             h_all = jnp.concatenate(h_parts)[jnp.asarray(inv)]
+        union_scale = union.scale if self.quantize_wire else None
         (self._s_lora, self._s_opt, b_logits, b_h, self._d_loss) = (
             self._server_step(send_h)(
                 self._s_lora, self._s_frozen, self._s_opt,
-                union.values, union.indices, union.mask, h_all,
+                union.values, union.indices, union.mask, union_scale, h_all,
                 jnp.asarray(ks, jnp.int32), pub_tokens,
             )
         )
@@ -1357,7 +1408,7 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
                 (fleet_loras, fleet_opts, s_lora, s_opt,
                  g_tokens, g_logits, g_h, g_valid) = carry
                 gath, scat, ksb, bat, ks_all, pub = xs
-                vs, idxs, ms, hs = [], [], [], []
+                vs, idxs, ms, scs, hs = [], [], [], [], []
                 new_loras, new_opts = [], []
                 for f, fn in enumerate(fns):
                     # gather this round's (padded) bucket slice; pads
@@ -1370,7 +1421,7 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
                         frozens[f] if shared[f]
                         else jax.tree.map(lambda x: x[gath[f]], frozens[f])
                     )
-                    lora, opt, v, i, m, h = fn(
+                    lora, opt, v, i, m, sc, h = fn(
                         lora, frz, opt, g_tokens, g_logits,
                         g_h if has_h else None, g_valid, bat[f], pub, ksb[f],
                     )
@@ -1385,6 +1436,7 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
                     vs.append(v)
                     idxs.append(i)
                     ms.append(m)
+                    scs.append(sc)
                     hs.append(h)
                 # the union wire: bucket-concatenated rows, vocab-indexed —
                 # aggregation is row-permutation-invariant, so no cohort
@@ -1392,10 +1444,11 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
                 v_all = jnp.concatenate(vs)
                 i_all = jnp.concatenate(idxs)
                 m_all = jnp.concatenate(ms)
+                sc_all = jnp.concatenate(scs) if scs[0] is not None else None
                 h_all = jnp.concatenate(hs) if hs[0] is not None else None
                 s_lora, s_opt, b_logits, b_h, d_loss = server_fn(
-                    s_lora, s_frozen, s_opt, v_all, i_all, m_all, h_all,
-                    ks_all, pub,
+                    s_lora, s_frozen, s_opt, v_all, i_all, m_all, sc_all,
+                    h_all, ks_all, pub,
                 )
                 # pad rows ride at k = 0, so the real cohort's mean is just
                 # the padded sum over the true cohort size
@@ -1670,6 +1723,16 @@ def make_engine(kind: str, clients: list[Client], cfg: ModelConfig, **kwargs):
         for e2e_only in ("server", "server_distill_steps", "aggregation"):
             kwargs.pop(e2e_only, None)
     if kind == "sequential":
+        if kwargs.get("quantize_wire"):
+            raise NotImplementedError(
+                "quantize_wire is not supported by the sequential reference"
+                " engine — use 'batched', 'fused' or 'fused_e2e'"
+            )
+        if kwargs.get("compute_dtype", "float32") != "float32":
+            raise NotImplementedError(
+                "compute_dtype is not supported by the sequential reference"
+                " engine — use 'fused' or 'fused_e2e'"
+            )
         return SequentialEngine(
             clients, cfg,
             value_bits=kwargs.get("value_bits", 16), k_min=kwargs.get("k_min", 1),
@@ -1678,6 +1741,9 @@ def make_engine(kind: str, clients: list[Client], cfg: ModelConfig, **kwargs):
     if kind == "batched":
         kwargs.pop("shard_clients", None)
         kwargs.pop("use_kernels", None)
+        # the batched engine is the fp32 per-phase reference; the bf16 round
+        # body exists only on the fused single-executable paths
+        kwargs.pop("compute_dtype", None)
         if hetero:
             return HeteroClientEngine(kind, clients, **kwargs)
         return BatchedEngine(clients, cfg, **kwargs)

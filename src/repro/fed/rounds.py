@@ -91,6 +91,17 @@ class FedConfig:
     eval_size: int = 512
     use_kernels: bool = False
     restrict_to_support: bool = False
+    # Quantize the sparse uplink wire to int8 values + one fp32 scale per
+    # (client, sample) row: (value, index) entries are priced at 8 bits, so
+    # the same Shannon budget affords a genuinely larger adaptive k at a
+    # fixed SNR (the projection h stays at ``channel.value_bits``).  Served
+    # by the batched/fused engines; "sequential" rejects it.
+    quantize_wire: bool = False
+    # Round-body compute dtype for the fused engines ("float32" |
+    # "bfloat16"): forward/backward math runs in the given dtype while the
+    # LoRA/optimizer master state stays fp32 (the cast lives inside the
+    # differentiated loss, so grads accumulate back to fp32 before AdamW).
+    compute_dtype: str = "float32"
     channel: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
     # Backbone pretraining (simulates the paper's pretrained GPT-2 W'; the
     # pretrain split is disjoint from public/private/eval).  0 disables.
@@ -255,6 +266,8 @@ def run_federated(
         last_only=fed.last_only,
         shard_clients=fed.shard_clients,
         use_kernels=fed.use_kernels,
+        quantize_wire=fed.quantize_wire,
+        compute_dtype=fed.compute_dtype,
         # fused_e2e only: the engine owns the server phase too
         server=server,
         server_distill_steps=fed.server_distill_steps,

@@ -25,7 +25,7 @@ from repro.core.distill import (
     teacher_log_probs,
     total_distill_loss,
 )
-from repro.core.topk import SparseWire, sparsify_wire, topk_mask_dynamic
+from repro.core.topk import QuantizedWire, SparseWire, sparsify_wire, topk_mask_dynamic
 from repro.lora import merge_lora, split_lora
 from repro.models import forward
 from repro.optim import AdamWState, adamw_init, adamw_update
@@ -52,6 +52,21 @@ __all__ = [
 def class_logits(logits_last: jax.Array, num_classes: int) -> jax.Array:
     """(B, V) last-position logits -> (B, num_classes) class readout."""
     return logits_last[..., :num_classes]
+
+
+def _cast_params(params, compute_dtype: str):
+    """Cast float params to the round body's compute dtype (bf16-buffer
+    pattern): the fp32 LoRA stays the master copy — this cast sits inside
+    the differentiated graph, so its VJP accumulates the low-precision
+    grads back into fp32 before AdamW sees them.  ``float32`` is the
+    identity (no graph change)."""
+    if compute_dtype == "float32":
+        return params
+    dt = jnp.dtype(compute_dtype)
+    return jax.tree.map(
+        lambda x: x.astype(dt) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params,
+    )
 
 
 def last_logits(
@@ -102,6 +117,7 @@ def _finetune_loss_fn(
     num_classes: int,
     last_only: bool = True,
     class_head_only: bool = True,
+    compute_dtype: str = "float32",
 ) -> Callable:
     """loss(lora, frozen, batch) -> (nll + moe_aux, acc) — the shared core
     of the sequential step, the batched cohort step and the fused round.
@@ -114,7 +130,7 @@ def _finetune_loss_fn(
     full-(B,T,V) head before it)."""
 
     def loss_fn(lora, frozen, batch):
-        params = merge_lora(lora, frozen)
+        params = _cast_params(merge_lora(lora, frozen), compute_dtype)
         last, aux = last_logits(
             params, cfg, {"tokens": batch["tokens"]}, last_only=last_only,
             head_cols=num_classes if (last_only and class_head_only) else None,
@@ -215,13 +231,14 @@ def _distill_loss_fn(
     lam: float,
     restrict_to_support: bool,
     last_only: bool = True,
+    compute_dtype: str = "float32",
 ) -> Callable:
     """loss(lora, frozen, tokens, g_logits, g_h) -> (L_total, parts)."""
 
     use_h = cfg.lora is not None
 
     def loss_fn(lora, frozen, tokens, g_logits, g_h):
-        params = merge_lora(lora, frozen)
+        params = _cast_params(merge_lora(lora, frozen), compute_dtype)
         own, aux = last_logits(params, cfg, {"tokens": tokens}, last_only=last_only)
         loss, parts = total_distill_loss(
             g_logits,
@@ -242,6 +259,7 @@ def _distill_loss_cached_fn(
     temperature: float,
     lam: float,
     last_only: bool = True,
+    compute_dtype: str = "float32",
 ) -> Callable:
     """loss(lora, frozen, tokens, t_logp, th_logp, support_mask) with the
     TEACHER log-probs precomputed (:func:`repro.core.distill.
@@ -254,7 +272,7 @@ def _distill_loss_cached_fn(
     use_h = cfg.lora is not None
 
     def loss_fn(lora, frozen, tokens, t_logp, th_logp, support_mask):
-        params = merge_lora(lora, frozen)
+        params = _cast_params(merge_lora(lora, frozen), compute_dtype)
         own, aux = last_logits(params, cfg, {"tokens": tokens}, last_only=last_only)
         loss = kl_divergence_from_log_probs(
             t_logp, own, temperature, mask=support_mask
@@ -383,6 +401,7 @@ def _client_round_core(
     gate_distill: bool,
     kd_loss: Callable | None = None,
     class_head_only: bool = True,
+    compute_dtype: str = "float32",
 ) -> Callable:
     """Per-client round body shared by the fused and fused-e2e round fns:
     ``distill_steps`` distillation updates, ``local_steps`` supervised
@@ -403,9 +422,13 @@ def _client_round_core(
     round passes precomputed teacher log-probs into
     :func:`_distill_loss_cached_fn` instead).
     """
-    ft_loss = _finetune_loss_fn(cfg, num_classes, last_only, class_head_only)
+    ft_loss = _finetune_loss_fn(
+        cfg, num_classes, last_only, class_head_only, compute_dtype
+    )
     if kd_loss is None:
-        kd_loss = _distill_loss_fn(cfg, temperature, lam, restrict_to_support, last_only)
+        kd_loss = _distill_loss_fn(
+            cfg, temperature, lam, restrict_to_support, last_only, compute_dtype
+        )
 
     def client_round(lora, frozen, opt, g_tokens, kd_args, g_valid, batches, pub_tokens):
         # -- lines 5-7: local distillation against the broadcast knowledge --
@@ -433,7 +456,8 @@ def _client_round_core(
 
         # -- line 9: public last-position inference --
         last, aux = last_logits(
-            merge_lora(lora, frozen), cfg, {"tokens": pub_tokens}, last_only=last_only
+            _cast_params(merge_lora(lora, frozen), compute_dtype), cfg,
+            {"tokens": pub_tokens}, last_only=last_only,
         )
         return lora, opt, last, aux.lora_h
 
@@ -457,6 +481,7 @@ def make_fused_round_fn(
     last_only: bool = True,
     use_kernels: bool = False,
     class_head_only: bool = True,
+    compute_dtype: str = "float32",
 ) -> Callable:
     """The whole client phase of Algorithm 1 as ONE function.
 
@@ -487,6 +512,7 @@ def make_fused_round_fn(
         temperature=temperature, lam=lam, restrict_to_support=restrict_to_support,
         local_steps=local_steps, distill_steps=distill_steps, last_only=last_only,
         gate_distill=False, class_head_only=class_head_only,
+        compute_dtype=compute_dtype,
     )
 
     frozen_ax = None if shared_backbone else 0
@@ -547,6 +573,8 @@ def make_bucket_client_phase_fn(
     distill_steps: int = 2,
     shared_backbone: bool = True,
     last_only: bool = True,
+    quantize: bool = False,
+    compute_dtype: str = "float32",
 ) -> Callable:
     """One FAMILY BUCKET's whole client phase as ONE function: the vmapped
     per-client round bodies (distill -> fine-tune -> public inference) plus
@@ -558,7 +586,14 @@ def make_bucket_client_phase_fn(
        batches {tokens (C,S,B,L), labels (C,S,B)}, pub_tokens (P,L),
        ks (C,) int32)
     -> (lora, opt, values (C,P,k_cap), indices (C,P,k_cap),
-        mask (C,P,k_cap), h (C,P,r)|None)
+        mask (C,P,k_cap), scale (C,P)|None, h (C,P,r)|None)
+
+    ``quantize=True`` emits the int8 :class:`repro.core.topk.QuantizedWire`
+    straight from the sparsifier — ``values`` is then int8 and ``scale``
+    carries the per-(client, sample) dequantization factors (``None`` on
+    the float wire).  ``compute_dtype`` selects the round body's forward/
+    backward precision (bf16-buffer pattern: fp32 LoRA/optimizer master,
+    low-precision compute).
 
     This is the per-bucket executable of the heterogeneous round engine
     (:class:`repro.fed.engine.HeteroFusedE2EEngine`): the fleet is
@@ -574,13 +609,15 @@ def make_bucket_client_phase_fn(
     the cold-server round is DATA (``g_valid``), one executable serves every
     round of a run (per ``k_cap`` bucket).
     """
-    cached_kd = _distill_loss_cached_fn(cfg, temperature, lam, last_only)
+    cached_kd = _distill_loss_cached_fn(
+        cfg, temperature, lam, last_only, compute_dtype
+    )
     client_round = _client_round_core(
         cfg, num_classes, lr=lr, weight_decay=weight_decay,
         distill_lr=distill_lr, temperature=temperature, lam=lam,
         restrict_to_support=restrict_to_support, local_steps=local_steps,
         distill_steps=distill_steps, last_only=last_only, gate_distill=True,
-        kd_loss=cached_kd,
+        kd_loss=cached_kd, compute_dtype=compute_dtype,
     )
     frozen_ax = None if shared_backbone else 0
     vm = jax.vmap(
@@ -596,8 +633,9 @@ def make_bucket_client_phase_fn(
         lora, opt, last, h = vm(
             lora, frozen, opt, g_tokens, t_cache, g_valid, batches, pub_tokens
         )
-        wire = sparsify_wire(last, ks, k_cap)
-        return lora, opt, wire.values, wire.indices, wire.mask, h
+        wire = sparsify_wire(last, ks, k_cap, quantize=quantize)
+        scale = wire.scale if quantize else None
+        return lora, opt, wire.values, wire.indices, wire.mask, scale, h
 
     return fn
 
@@ -616,6 +654,8 @@ def make_server_phase_fn(
     send_h: bool = True,
     last_only: bool = True,
     use_kernels: bool = False,
+    quantize: bool = False,
+    compute_dtype: str = "float32",
 ) -> Callable:
     """The whole SERVER phase of one round as ONE function (Algorithm 1
     lines 13-16 + the next round's broadcast recompute), consuming the
@@ -623,8 +663,14 @@ def make_server_phase_fn(
 
     fn(s_lora, s_frozen, s_opt,
        values (N,P,k_cap), indices (N,P,k_cap), mask (N,P,k_cap),
-       h (N,P,r)|None, ks (N,) int32, pub_tokens (P,L))
+       scale (N,P)|None, h (N,P,r)|None, ks (N,) int32, pub_tokens (P,L))
     -> (s_lora, s_opt, b_logits (P,V), b_h (P,r)|None, d_loss ())
+
+    ``quantize=True`` reads the uplink as the int8
+    :class:`repro.core.topk.QuantizedWire` (``values`` int8 + per-row
+    ``scale``); aggregation then runs the dequantize-fused route of
+    :func:`repro.core.aggregation.aggregate_wire` (the Pallas kernel with
+    ``use_kernels``) — the float wire ignores ``scale`` (pass ``None``).
 
     ``vocab`` is the fleet's SHARED vocabulary — the wire's indices address
     it directly, which is exactly why heterogeneous families interoperate
@@ -635,11 +681,20 @@ def make_server_phase_fn(
     DATA and reports a NaN ``d_loss``; the broadcast still refreshes on the
     current public batch, exactly like the host round loop.
     """
-    server_kd_loss = _distill_loss_cached_fn(server_cfg, temperature, lam, last_only)
+    server_kd_loss = _distill_loss_cached_fn(
+        server_cfg, temperature, lam, last_only, compute_dtype
+    )
     teacher_cache = _teacher_cache_fn(temperature, restrict_to_support, True)
 
-    def fn(s_lora, s_frozen, s_opt, values, indices, mask, h, ks, pub_tokens):
-        wire = SparseWire(values=values, indices=indices, mask=mask, vocab=vocab)
+    def fn(s_lora, s_frozen, s_opt, values, indices, mask, scale, h, ks,
+           pub_tokens):
+        if quantize:
+            wire = QuantizedWire(
+                values=values, scale=scale, indices=indices, mask=mask,
+                vocab=vocab,
+            )
+        else:
+            wire = SparseWire(values=values, indices=indices, mask=mask, vocab=vocab)
         n_tx = jnp.sum((ks > 0).astype(jnp.int32))
 
         # -- line 15: aggregation from the wire (eqs. 6-7) --
@@ -682,8 +737,8 @@ def make_server_phase_fn(
 
         # -- lines 1-2 of the NEXT round: refreshed broadcast knowledge --
         b_last, b_aux = last_logits(
-            merge_lora(s_lora, s_frozen), server_cfg,
-            {"tokens": pub_tokens}, last_only=last_only,
+            _cast_params(merge_lora(s_lora, s_frozen), compute_dtype),
+            server_cfg, {"tokens": pub_tokens}, last_only=last_only,
         )
         return s_lora, s_opt, b_last, b_aux.lora_h, d_loss
 
@@ -712,6 +767,8 @@ def make_fused_e2e_round_fn(
     last_only: bool = True,
     use_kernels: bool = False,
     shard_clients: bool = False,
+    quantize: bool = False,
+    compute_dtype: str = "float32",
 ) -> Callable:
     """ONE whole federated round — client phase AND server phase — as ONE
     function (Fig. 1 steps 1-10 / Algorithm 1 lines 3-16).
@@ -723,8 +780,15 @@ def make_fused_e2e_round_fn(
        ks (C,) int32)
     -> (lora, opt, s_lora, s_opt,
         values (C,P,k_cap), indices (C,P,k_cap),      # sparse uplink wire
+        scale (C,P)|None,                             # int8 wire dequant rows
         b_logits (P,V), b_h (P,r)|None,               # next-round broadcast
         d_loss ())                                    # last server-distill loss
+
+    ``quantize=True`` carries the uplink as the int8
+    :class:`repro.core.topk.QuantizedWire` (values int8 + per-(client,
+    sample) scale) and aggregates through the dequantize-fused route;
+    ``compute_dtype`` selects the round body's forward/backward precision
+    (fp32 LoRA/optimizer state stays the master copy).
 
     Extends :func:`make_fused_round_fn` past the server boundary:
 
@@ -773,13 +837,15 @@ def make_fused_e2e_round_fn(
     teacher carries no gradient).
     """
     use_h = client_cfg.lora is not None
-    cached_kd = _distill_loss_cached_fn(client_cfg, temperature, lam, last_only)
+    cached_kd = _distill_loss_cached_fn(
+        client_cfg, temperature, lam, last_only, compute_dtype
+    )
     client_round = _client_round_core(
         client_cfg, num_classes, lr=lr, weight_decay=weight_decay,
         distill_lr=distill_lr, temperature=temperature, lam=lam,
         restrict_to_support=restrict_to_support, local_steps=local_steps,
         distill_steps=distill_steps, last_only=last_only, gate_distill=True,
-        kd_loss=cached_kd,
+        kd_loss=cached_kd, compute_dtype=compute_dtype,
     )
     frozen_ax = None if shared_backbone else 0
     vm = jax.vmap(
@@ -792,6 +858,7 @@ def make_fused_e2e_round_fn(
         restrict_to_support=restrict_to_support,
         server_distill_steps=server_distill_steps, aggregation=aggregation,
         send_h=send_h, last_only=last_only, use_kernels=use_kernels,
+        quantize=quantize, compute_dtype=compute_dtype,
     )
 
     def client_phase(lora, frozen, opt, g_tokens, t_cache, g_valid,
@@ -799,13 +866,15 @@ def make_fused_e2e_round_fn(
         """Lines 3-11 for (a device's shard of) the cohort: the vmapped
         per-client round bodies + the sparse-wire sparsifier.  Everything
         here is per-client-independent, so it shards cleanly over the
-        cohort axis; the wire triple it returns is the ONLY client-phase
-        product the (replicated) server phase reads besides ``h``."""
+        cohort axis; the wire it returns (plus the quantized wire's scale
+        rows) is the ONLY client-phase product the (replicated) server
+        phase reads besides ``h``."""
         lora, opt, last, h = vm(
             lora, frozen, opt, g_tokens, t_cache, g_valid, batches, pub_tokens
         )
-        wire = sparsify_wire(last, ks, k_cap)
-        return lora, opt, wire.values, wire.indices, wire.mask, h
+        wire = sparsify_wire(last, ks, k_cap, quantize=quantize)
+        scale = wire.scale if quantize else None
+        return lora, opt, wire.values, wire.indices, wire.mask, scale, h
 
     if shard_clients:
         from jax.experimental.shard_map import shard_map
@@ -818,7 +887,7 @@ def make_fused_e2e_round_fn(
             client_phase,
             mesh=cohort_mesh(),
             in_specs=(c, frozen_spec, c, r, r, r, c, r, c),
-            out_specs=(c, c, c, c, c, c),
+            out_specs=(c, c, c, c, c, c, c),
             check_rep=False,
         )
 
@@ -827,16 +896,16 @@ def make_fused_e2e_round_fn(
         # -- client phase (lines 3-11); broadcast teacher softmaxed ONCE,
         # then the whole phase device-parallel over the cohort axis when
         # shard_clients; the uplink leaves it as the sparse wire --
-        lora, opt, w_values, w_indices, w_mask, h = client_phase(
+        lora, opt, w_values, w_indices, w_mask, w_scale, h = client_phase(
             lora, frozen, opt, g_tokens, teacher_cache(g_logits, g_h), g_valid,
             batches, pub_tokens, ks
         )
         # -- server phase (lines 13-16 + next-round broadcast), replicated --
         s_lora, s_opt, b_last, b_h, d_loss = server_phase(
-            s_lora, s_frozen, s_opt, w_values, w_indices, w_mask, h, ks,
-            pub_tokens,
+            s_lora, s_frozen, s_opt, w_values, w_indices, w_mask, w_scale, h,
+            ks, pub_tokens,
         )
-        return (lora, opt, s_lora, s_opt, w_values, w_indices,
+        return (lora, opt, s_lora, s_opt, w_values, w_indices, w_scale,
                 b_last, b_h, d_loss)
 
     return fn

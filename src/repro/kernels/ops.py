@@ -13,7 +13,11 @@ import jax.numpy as jnp
 
 from repro.kernels.distill_kl import distill_kl_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.sparse_agg import scatter_wire_sums_pallas, sparse_agg_pallas
+from repro.kernels.sparse_agg import (
+    scatter_wire_sums_dequant_pallas,
+    scatter_wire_sums_pallas,
+    sparse_agg_pallas,
+)
 from repro.kernels.topk_select import topk_mask_dynamic_pallas, topk_mask_pallas
 
 __all__ = [
@@ -22,6 +26,7 @@ __all__ = [
     "distill_kl",
     "sparse_aggregate",
     "scatter_wire_sums",
+    "scatter_wire_sums_dequant",
     "flash_attention",
     "interpret_mode",
 ]
@@ -89,6 +94,35 @@ def scatter_wire_sums(
         num.reshape(lead + (vocab,)).astype(a.dtype),
         den.reshape(lead + (vocab,)).astype(b.dtype),
     )
+
+
+def scatter_wire_sums_dequant(
+    q_values: jax.Array,
+    scale: jax.Array,
+    mask: jax.Array,
+    indices: jax.Array,
+    vocab: int,
+    mode: str = "adaptive",
+) -> tuple[jax.Array, jax.Array]:
+    """Dequantize-fused scatter-accumulate from the int8 quantized wire:
+    ``q_values/mask/indices (N, ..., k)`` + per-row ``scale (N, ...)`` ->
+    ``(num, den)`` each ``(..., vocab)`` fp32 for the given aggregation
+    mode.  The float values and both contribution channels are rebuilt
+    inside the kernel per grid step — the wire crosses HBM at 1 byte/value
+    and nothing of size O(N·B·V) is ever formed."""
+    n, k = q_values.shape[0], q_values.shape[-1]
+    lead = q_values.shape[1:-1]
+    fold = lambda x: x.reshape((n, -1, k))
+    num, den = scatter_wire_sums_dequant_pallas(
+        fold(q_values),
+        scale.reshape((n, -1)),
+        fold(mask.astype(jnp.int8)),
+        fold(indices),
+        vocab,
+        mode,
+        interpret=interpret_mode(),
+    )
+    return num.reshape(lead + (vocab,)), den.reshape(lead + (vocab,))
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:

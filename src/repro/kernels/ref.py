@@ -16,6 +16,7 @@ __all__ = [
     "distill_kl_ref",
     "sparse_agg_ref",
     "scatter_wire_sums_ref",
+    "scatter_wire_sums_dequant_ref",
     "flash_attention_ref",
 ]
 
@@ -89,6 +90,33 @@ def scatter_wire_sums_ref(
         b.astype(jnp.float32)
     )
     return num, den
+
+
+def scatter_wire_sums_dequant_ref(
+    q_values: jax.Array,
+    scale: jax.Array,
+    mask: jax.Array,
+    indices: jax.Array,
+    vocab: int,
+    mode: str = "adaptive",
+) -> tuple[jax.Array, jax.Array]:
+    """Dequantize-fused wire scatter spec: reconstruct each entry's float
+    value (``q * scale`` per row, 0 off the transmit mask), then build the
+    mode's two contribution channels and scatter-accumulate as
+    :func:`scatter_wire_sums_ref`.
+
+    ``q_values (N, rows, k) int8``, ``scale (N, rows)``, ``mask`` bool or
+    {0, 1}, ``indices (N, rows, k)`` -> ``(num, den)`` each ``(rows, vocab)``.
+    """
+    m = mask.astype(jnp.float32)
+    v = q_values.astype(jnp.float32) * scale.astype(jnp.float32)[..., None] * m
+    if mode == "adaptive":
+        a, b = jnp.abs(v) * v, jnp.abs(v)
+    elif mode in ("zeropad", "mean_nonzero"):
+        a, b = v, m
+    else:
+        raise ValueError(f"unknown aggregation mode: {mode!r}")
+    return scatter_wire_sums_ref(a, b, indices, vocab)
 
 
 def flash_attention_ref(

@@ -20,7 +20,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["sparse_agg_pallas", "scatter_wire_sums_pallas"]
+__all__ = [
+    "sparse_agg_pallas",
+    "scatter_wire_sums_pallas",
+    "scatter_wire_sums_dequant_pallas",
+]
 
 ROWS_BLK = 8
 VOCAB_BLK = 2048
@@ -153,4 +157,99 @@ def scatter_wire_sums_pallas(
         ],
         interpret=interpret,
     )(a, b, indices)
+    return num[:rows], den[:rows]
+
+
+# ---------------------------------------------------------------------------
+# Dequantize-fused wire scatter: the QuantizedWire's int8 values + per-row
+# float32 scale go straight into the kernel — the float values and both
+# per-entry contribution channels are reconstructed in-register per grid
+# step, so the HBM-side wire stays 1 byte/value (vs 4 for pre-dequantized
+# float contributions) and nothing of size O(N·rows·V) ever exists.  Mode
+# is static: unlike the float kernel above (mode-agnostic, callers
+# pre-compute the channels), the fusion point is exactly that the channels
+# are NOT pre-computed, so the kernel must know which ones to build.
+# ---------------------------------------------------------------------------
+
+
+def _scatter_wire_dequant_kernel(
+    q_ref, scale_ref, mask_ref, idx_ref, num_ref, den_ref, *, mode: str
+):
+    q = q_ref[...].astype(jnp.float32)  # (N, R_b, k) int8 -> f32
+    sc = scale_ref[...].astype(jnp.float32)  # (N, R_b)
+    m = mask_ref[...].astype(jnp.float32)  # (N, R_b, k) int8 in {0, 1}
+    idx = idx_ref[...]  # (N, R_b, k) int32, valid in [0, V)
+    v = q * sc[:, :, None] * m  # dequantized values, 0 where masked
+    if mode == "adaptive":
+        a, b = jnp.abs(v) * v, jnp.abs(v)
+    else:  # zeropad / mean_nonzero: value and transmit-count channels
+        a, b = v, m
+    n, rb, k = a.shape
+    vocab = num_ref.shape[-1]
+    row = jax.lax.broadcasted_iota(jnp.int32, (rb, k), 0)
+
+    def body(i, carry):
+        num, den = carry
+        num = num.at[row, idx[i]].add(a[i])
+        den = den.at[row, idx[i]].add(b[i])
+        return num, den
+
+    num, den = jax.lax.fori_loop(
+        0,
+        n,
+        body,
+        (jnp.zeros((rb, vocab), jnp.float32), jnp.zeros((rb, vocab), jnp.float32)),
+    )
+    num_ref[...] = num
+    den_ref[...] = den
+
+
+@functools.partial(jax.jit, static_argnames=("vocab", "mode", "interpret"))
+def scatter_wire_sums_dequant_pallas(
+    q_values: jax.Array,
+    scale: jax.Array,
+    mask: jax.Array,
+    indices: jax.Array,
+    vocab: int,
+    mode: str = "adaptive",
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Dequantize-fused two-channel wire scatter.
+
+    ``q_values (N, rows, k) int8``, ``scale (N, rows) f32``,
+    ``mask (N, rows, k) int8 in {0, 1}``, ``indices (N, rows, k) int32`` ->
+    ``(num, den)`` each ``(rows, vocab)`` fp32 for the given aggregation
+    ``mode`` (static).  Masked entries contribute exactly 0 to both
+    channels regardless of their index."""
+    assert q_values.ndim == 3 and q_values.shape == mask.shape == indices.shape
+    assert scale.shape == q_values.shape[:2]
+    if mode not in ("adaptive", "zeropad", "mean_nonzero"):
+        raise ValueError(f"unknown aggregation mode: {mode!r}")
+    n, rows, k = q_values.shape
+    rb = _scatter_rows_block(vocab, rows)
+    rpad = (-rows) % rb
+    if rpad:
+        pad3 = ((0, 0), (0, rpad), (0, 0))
+        q_values = jnp.pad(q_values, pad3)
+        mask = jnp.pad(mask, pad3)  # zero mask -> zero contributions at idx 0
+        indices = jnp.pad(indices, pad3)
+        scale = jnp.pad(scale, ((0, 0), (0, rpad)))
+    r_all = q_values.shape[1]
+    grid = (r_all // rb,)
+
+    wire_spec = pl.BlockSpec((n, rb, k), lambda r: (0, r, 0))
+    scale_spec = pl.BlockSpec((n, rb), lambda r: (0, r))
+    out_spec = pl.BlockSpec((rb, vocab), lambda r: (r, 0))
+    num, den = pl.pallas_call(
+        functools.partial(_scatter_wire_dequant_kernel, mode=mode),
+        grid=grid,
+        in_specs=[wire_spec, scale_spec, wire_spec, wire_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((r_all, vocab), jnp.float32),
+            jax.ShapeDtypeStruct((r_all, vocab), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_values, scale, mask, indices)
     return num[:rows], den[:rows]

@@ -85,6 +85,15 @@ def main(argv=None) -> int:
     ap.add_argument("--iid", action="store_true")
     ap.add_argument("--lam", type=float, default=0.03)
     ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--quantize-wire", action="store_true",
+                    help="int8-quantize the sparse uplink wire (one fp32 "
+                         "scale per (client, sample) row): entries are "
+                         "priced at 8 bits, so the same Shannon budget "
+                         "affords a larger adaptive k at fixed SNR")
+    ap.add_argument("--compute-dtype", choices=["float32", "bfloat16"],
+                    default="float32",
+                    help="fused engines: round-body compute dtype; fp32 "
+                         "master LoRA/optimizer state is kept either way")
     ap.add_argument("--public-batch", type=int, default=128)
     ap.add_argument("--out", default="experiments/fed")
     args = ap.parse_args(argv)
@@ -107,6 +116,8 @@ def main(argv=None) -> int:
         seed=args.seed,
         lam=args.lam,
         use_kernels=args.use_kernels,
+        quantize_wire=args.quantize_wire,
+        compute_dtype=args.compute_dtype,
         last_only=not args.full_head,
         shard_clients=args.shard_clients,
         scan_rounds=args.scan_rounds,

@@ -3,6 +3,14 @@
 Moment dtype is configurable (``ModelConfig.optimizer_state_dtype``): the
 biggest assigned configs (jamba 398B) store m/v in bfloat16 to fit v5e HBM
 (DESIGN §4); the update math always runs in fp32.
+
+Mixed-precision (bf16-buffer) training: when the live params are kept in a
+low-precision compute dtype (bf16 round bodies), ``adamw_init(...,
+master_dtype="float32")`` stores an fp32 MASTER copy of the params inside
+the optimizer state; ``adamw_update`` then reads/updates the master (so
+tiny updates are never swallowed by bf16 rounding across steps) and emits
+the live params as a cast of it.  With ``master_dtype=None`` (default) the
+state and update are exactly the classic master-free AdamW.
 """
 
 from __future__ import annotations
@@ -12,22 +20,33 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["AdamWState", "adamw_init", "adamw_update", "apply_updates", "global_norm"]
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "global_norm"]
 
 
 class AdamWState(NamedTuple):
     m: dict
     v: dict
     count: jax.Array  # () int32
+    # fp32 master params for low-precision live params; None -> masterless
+    # (the default, and the state every pre-existing checkpoint holds).
+    master: dict | None = None
 
 
-def adamw_init(params, *, state_dtype: str = "float32") -> AdamWState:
+def adamw_init(
+    params, *, state_dtype: str = "float32", master_dtype: str | None = None
+) -> AdamWState:
     dt = jnp.dtype(state_dtype)
     zeros = lambda p: jnp.zeros(p.shape, dt)
+    master = (
+        None
+        if master_dtype is None
+        else jax.tree.map(lambda p: p.astype(jnp.dtype(master_dtype)), params)
+    )
     return AdamWState(
         m=jax.tree.map(zeros, params),
         v=jax.tree.map(zeros, params),
         count=jnp.zeros((), jnp.int32),
+        master=master,
     )
 
 
@@ -73,10 +92,21 @@ def adamw_update(
         step = mhat / (jnp.sqrt(vhat) + eps)
         p32 = p.astype(jnp.float32)
         new_p = p32 - lr * (step + weight_decay * p32)
-        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+        return new_p, m32.astype(m.dtype), v32.astype(v.dtype)
 
-    flat = jax.tree.map(upd, grads, state.m, state.v, params)
-    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
-    new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
-    new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
-    return new_params, AdamWState(m=new_m, v=new_v, count=count)
+    # With a master, the update reads/advances the fp32 copy and the live
+    # (possibly bf16) params are re-emitted as its cast; without one, the
+    # fp32 math on the live params is bitwise the pre-master behaviour.
+    src = params if state.master is None else state.master
+    is_tup = lambda x: isinstance(x, tuple)
+    flat = jax.tree.map(upd, grads, state.m, state.v, src)
+    new_p32 = jax.tree.map(lambda t: t[0], flat, is_leaf=is_tup)
+    new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=is_tup)
+    new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=is_tup)
+    new_params = jax.tree.map(lambda np_, p: np_.astype(p.dtype), new_p32, params)
+    new_master = (
+        None
+        if state.master is None
+        else jax.tree.map(lambda np_, mp: np_.astype(mp.dtype), new_p32, state.master)
+    )
+    return new_params, AdamWState(m=new_m, v=new_v, count=count, master=new_master)

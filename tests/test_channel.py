@@ -126,7 +126,8 @@ def test_simulator_dropout_keyed_per_client_and_seed():
 def test_topk_budget_reserved_bits():
     """Reserving the LoRA-projection bits shrinks k so the REALIZED payload
     (projection included) fits the budget; an unaffordable reservation
-    behaves like deep fade (survival floor / dropout)."""
+    DROPS the round (no survival floor — a floored payload could not fit
+    the link by construction)."""
     st = ChannelState(bandwidth_hz=1e6, snr_db=0.0, eta=0.5, deadline_s=1.0)
     # budget = 5e5 bits; d = 32 for vocab 50288
     base = topk_budget(st, vocab_size=50_288, num_samples=100)
@@ -135,13 +136,52 @@ def test_topk_budget_reserved_bits():
     assert k == math.floor((5e5 - reserved) / 32 / 100) < base
     # realized payload (entries + projection) respects the budget
     assert 100 * k * 32 + reserved <= st.bit_budget
-    # reservation >= budget: survival floor at k_min=1, dropout at k_min=0
+    # reservation >= budget: the round is dropped at ANY k_min — emitting a
+    # k_min-floored payload whose reservation alone exceeds the link would
+    # break PayloadSpec.fits-by-construction
     assert topk_budget(
         st, vocab_size=50_288, num_samples=100, reserved_bits=1e6
-    ) == 1
+    ) == 0
     assert topk_budget(
         st, vocab_size=50_288, num_samples=100, reserved_bits=1e6, k_min=0
     ) == 0
+
+
+# ---- PR 6 budget regression: survival floor vs unaffordable reservation ----
+
+
+def test_topk_budget_reservation_exceeding_budget_drops_round():
+    """ISSUE repro: a 100-bit link with a 1000-bit LoRA-projection
+    reservation must yield k == 0 (drop the round entirely), never a
+    k_min-floored payload that cannot fit the link.  The survival floor
+    only applies to bare-entry links (no reservation)."""
+    from repro.core.protocol import PayloadSpec
+
+    link = ChannelState(bandwidth_hz=100.0, snr_db=0.0, eta=1.0, deadline_s=1.0)
+    assert link.bit_budget == pytest.approx(100.0)
+    # bare-entry link: floor keeps the client alive at k_min
+    assert topk_budget(link, vocab_size=32, num_samples=10, k_min=1) == 1
+    # 1000-bit reservation >> 100-bit budget: must drop, even at k_min >= 1
+    assert (
+        topk_budget(
+            link, vocab_size=32, num_samples=10, k_min=1, reserved_bits=1000.0
+        )
+        == 0
+    )
+    # and every k > 0 the floor could have emitted indeed does NOT fit
+    spec = PayloadSpec(num_samples=10, vocab=32, k=1, lora_rank=8, value_bits=16)
+    assert not spec.fits(link)
+    # partial-affordability boundary: reservation below budget but leaving
+    # room for less than one entry -> still dropped (a floored payload
+    # including the reservation would not fit either)
+    d = bits_per_entry(16, 32)
+    assert (
+        topk_budget(
+            link, vocab_size=32, num_samples=10, k_min=1,
+            reserved_bits=link.bit_budget - 0.5 * d,
+        )
+        == 0
+    )
 
 
 def test_topk_for_lora_rank_reserves_projection():

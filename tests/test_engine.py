@@ -681,3 +681,124 @@ def test_scan_rounds_without_shared_backbone():
     np.testing.assert_allclose(loop.server_acc, scan.server_acc, atol=1e-6)
     np.testing.assert_allclose(loop.client_acc, scan.client_acc, atol=1e-6)
     np.testing.assert_allclose(loop.distill_loss, scan.distill_loss, rtol=1e-4)
+
+
+# ---- PR 6: quantized wire + bf16 round body -------------------------------
+
+
+def test_fused_e2e_quantized_wire_format_and_pricing():
+    """quantize_wire=True swaps the e2e uplink to a QuantizedWire (int8
+    values + per-row f32 scale), keeps the adaptive-k bookkeeping, prices
+    every payload at 8-bit entries, and densifies to the float wire within
+    the per-row quantization step (amax/127)."""
+    from repro.core.topk import QUANT_LEVELS, QuantizedWire
+
+    ds, c_q = _mini_cohort(3)
+    _, c_f = _mini_cohort(3)
+    # generous links: k saturates at vocab for both formats, so the wires
+    # carry the SAME support and differ only in value encoding
+    good = ChannelState(bandwidth_hz=1e7, snr_db=20.0, eta=0.5, deadline_s=1.0)
+    states = BatchedChannelState.from_states([good] * 3)
+    pub = jnp.asarray(ds.tokens[:16])
+
+    quant = _e2e_engine(c_q, ds, quantize_wire=True)
+    flt = _e2e_engine(c_f, ds)
+    pq = quant.run_round([0, 1, 2], pub, None, states, adaptive_k=True, send_h=True)
+    pf = flt.run_round([0, 1, 2], pub, None, states, adaptive_k=True, send_h=True)
+
+    assert pq.ks == pf.ks  # identical k bookkeeping at saturated budgets
+    assert pq.dense is None
+    wire = pq.sparse
+    assert isinstance(wire, QuantizedWire)
+    assert wire.values.dtype == jnp.int8 and wire.scale.dtype == jnp.float32
+    assert not isinstance(pf.sparse, QuantizedWire)
+
+    # payload accounting: 8-bit entries, h kept at its own width, and a
+    # strictly cheaper wire than the float run at identical k
+    for qp, fp in zip(pq.payloads, pf.payloads):
+        assert qp.spec.k == fp.spec.k
+        assert qp.spec.value_bits == 8 and qp.spec.h_value_bits == 16
+        assert qp.spec.uplink_bits < fp.spec.uplink_bits
+
+    # the dequantized wire sits within one quantization step of the float
+    # wire row-by-row (documented loosened tolerance for the int8 path)
+    dq = np.asarray(wire_densify(wire))
+    df = np.asarray(wire_densify(pf.sparse))
+    step = np.max(np.abs(df), axis=-1, keepdims=True) / QUANT_LEVELS
+    assert np.all(np.abs(dq - df) <= step + 1e-4)
+
+
+def test_fused_e2e_quantized_run_matches_float_accuracy_shape():
+    """Full fed run with quantize_wire=True: under the tight bench channel
+    the 8-bit entry pricing buys a strictly LARGER adaptive k somewhere
+    (never smaller anywhere), downlink is unchanged, and the accuracy
+    trajectory stays within the loosened quant tolerance of the float
+    run."""
+    ds = _dataset()
+    flt = run_federated(CLIENT, SERVER, ds, _cfg("fused_e2e"))
+    qnt = run_federated(CLIENT, SERVER, ds, _cfg("fused_e2e", quantize_wire=True))
+
+    kf = np.asarray(flt.per_client_k, dtype=float)
+    kq = np.asarray(qnt.per_client_k, dtype=float)
+    assert kq.shape == kf.shape
+    assert np.all(kq >= kf), "8-bit pricing must never shrink k"
+    assert np.any(kq > kf), "tight channel: cheaper entries must buy more k"
+    for a, b in zip(flt.ledger.rounds, qnt.ledger.rounds):
+        assert a.downlink_bytes == b.downlink_bytes
+        assert a.num_transmitters == b.num_transmitters
+    # same eval shape; quantization noise may move the tiny-scale accuracy
+    # by a few eval samples, not wholesale
+    np.testing.assert_allclose(qnt.server_acc, flt.server_acc, atol=0.15)
+    np.testing.assert_allclose(qnt.client_acc, flt.client_acc, atol=0.15)
+
+
+def test_fused_e2e_bf16_round_body_parity():
+    """compute_dtype='bfloat16' (bf16 round body, fp32 master LoRA +
+    optimizer state) keeps the k/bytes bookkeeping bit-identical to the
+    fp32 run and the accuracies within the loosened bf16 tolerance."""
+    ds = _dataset()
+    f32 = run_federated(CLIENT, SERVER, ds, _cfg("fused_e2e"))
+    bf = run_federated(
+        CLIENT, SERVER, ds, _cfg("fused_e2e", compute_dtype="bfloat16")
+    )
+    # channel bookkeeping is value-independent: bit-identical
+    assert f32.per_client_k == bf.per_client_k
+    for a, b in zip(f32.ledger.rounds, bf.ledger.rounds):
+        assert a.uplink_bytes == b.uplink_bytes
+        assert a.downlink_bytes == b.downlink_bytes
+    np.testing.assert_allclose(bf.server_acc, f32.server_acc, atol=0.15)
+    np.testing.assert_allclose(bf.client_acc, f32.client_acc, atol=0.15)
+
+
+def test_e2e_dequant_fused_aggregation_never_densifies_stack():
+    """The quantized route's acceptance check, mirroring the float one: the
+    dequantize-fused aggregation (int8 wire in, (B, V) teacher out) never
+    materialises the (N, B, V) dense stack — dequantization lives inside
+    the O(N·B·k_cap) working set — for both the pure-jnp scatter and the
+    Pallas kernel route."""
+    import jax
+
+    from repro.core.aggregation import aggregate_wire, max_intermediate_elems
+    from repro.core.topk import QuantizedWire
+
+    n, rows, vocab, k_cap = 10, 64, 8192, 256
+
+    def make_agg(use_kernel):
+        def agg(values, scale, indices, mask, n_tx):
+            wire = QuantizedWire(
+                values=values, scale=scale, indices=indices, mask=mask, vocab=vocab
+            )
+            return aggregate_wire(
+                wire, "adaptive", num_transmitters=n_tx, use_kernel=use_kernel
+            )
+        return agg
+
+    for use_kernel in (False, True):
+        jaxpr = jax.make_jaxpr(make_agg(use_kernel))(
+            jnp.zeros((n, rows, k_cap), jnp.int8), jnp.ones((n, rows), jnp.float32),
+            jnp.zeros((n, rows, k_cap), jnp.int32),
+            jnp.zeros((n, rows, k_cap), bool), jnp.int32(n),
+        )
+        worst = max_intermediate_elems(jaxpr)
+        assert worst < n * rows * vocab, use_kernel
+        assert worst <= rows * vocab, use_kernel

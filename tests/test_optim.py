@@ -2,6 +2,7 @@
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.optim import adamw_init, adamw_update, constant, global_norm, warmup_cosine, warmup_linear
@@ -54,3 +55,55 @@ def test_schedules():
     assert float(lin(5)) == pytest.approx(2.0)
     assert float(lin(50)) == pytest.approx(0.0, abs=1e-6)
     assert float(constant(0.3)(123)) == pytest.approx(0.3)
+
+
+def test_adamw_master_tracks_fp32_reference():
+    """PR-6 bf16-buffer pattern: bf16 live params + fp32 master in the
+    optimizer state stay close to the all-fp32 reference trajectory, while
+    masterless bf16 params lose tiny updates to rounding."""
+    key = jax.random.PRNGKey(0)
+    w0 = jax.random.normal(key, (64,))
+    g_keys = jax.random.split(jax.random.fold_in(key, 1), 20)
+
+    # fp32 reference
+    p32 = {"w": w0}
+    o32 = adamw_init(p32)
+    # bf16 live params with an fp32 master
+    pbf = {"w": w0.astype(jnp.bfloat16)}
+    obf = adamw_init(pbf, master_dtype="float32")
+    assert obf.master["w"].dtype == jnp.float32
+
+    for gk in g_keys:
+        g = jax.random.normal(gk, (64,)) * 1e-3
+        p32, o32 = adamw_update({"w": g}, o32, p32, lr=1e-3)
+        pbf, obf = adamw_update(
+            {"w": g.astype(jnp.bfloat16)}, obf, pbf, lr=1e-3
+        )
+
+    assert pbf["w"].dtype == jnp.bfloat16
+    assert obf.master["w"].dtype == jnp.float32
+    drift = float(jnp.max(jnp.abs(obf.master["w"] - p32["w"])))
+    assert drift < 0.02, f"master drifted {drift} from the fp32 reference"
+    # the live params are exactly the master's cast — never stale
+    np.testing.assert_array_equal(
+        np.asarray(pbf["w"]),
+        np.asarray(obf.master["w"].astype(jnp.bfloat16)),
+    )
+
+
+def test_adamw_masterless_path_unchanged():
+    """master=None (the default, and every pre-existing checkpoint) must be
+    bitwise the pre-master behaviour — same arrays, master stays None."""
+    params = {"w": jnp.array([1.0, -2.0, 0.5])}
+    opt = adamw_init(params)
+    assert opt.master is None
+    g = {"w": jnp.array([0.1, 0.2, -0.3])}
+    new_p, new_opt = adamw_update(g, opt, params, lr=1e-2)
+    assert new_opt.master is None
+    # hand-rolled single fp32 AdamW step (b1=.9, b2=.999, step 1 bias corr)
+    m = 0.1 * jnp.asarray([0.1, 0.2, -0.3])
+    v = 0.001 * jnp.asarray([0.1, 0.2, -0.3]) ** 2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.999)
+    want = params["w"] - 1e-2 * mhat / (jnp.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), np.asarray(want), rtol=1e-6)

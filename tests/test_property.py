@@ -303,3 +303,107 @@ def test_aggregation_modes_agree_on_dense_stacks(n, vocab, seed):
     np.testing.assert_allclose(
         aggregate_adaptive(same), aggregate_zeropad(same), rtol=1e-4, atol=1e-5
     )
+
+
+# ---- PR 6: quantized wire + budget-floor correctness -----------------------
+
+
+@given(
+    bandwidth=st.floats(1e2, 1e9),
+    snr_db=st.floats(-20, 40),
+    eta=st.floats(0.01, 1.0),
+    deadline=st.floats(0.01, 10.0),
+    vocab=st.integers(2, 300_000),
+    samples=st.integers(1, 5000),
+    rank=st.integers(1, 64),
+)
+@SETTINGS
+def test_reserved_payload_fits_by_construction_at_k_min_one(
+    bandwidth, snr_db, eta, deadline, vocab, samples, rank
+):
+    """INVARIANT (PR-6 budget fix): with a projection reservation, EVERY
+    transmitted payload fits the Shannon budget — even at ``k_min == 1``.
+    The survival floor never manufactures an unfittable payload; when the
+    reservation cannot ride the link, the round is dropped (k == 0)."""
+    state = ChannelState(bandwidth, snr_db, eta, deadline)
+    reserved = samples * rank * 16
+    k = topk_budget(
+        state, vocab_size=vocab, num_samples=samples, k_min=1,
+        reserved_bits=reserved,
+    )
+    if k > 0:
+        spec = PayloadSpec(num_samples=samples, vocab=vocab, k=k, lora_rank=rank)
+        assert spec.fits(state)
+    else:
+        # dropped: even the k = 1 floor payload would not have fit
+        floor = PayloadSpec(num_samples=samples, vocab=vocab, k=1, lora_rank=rank)
+        assert not floor.fits(state)
+
+
+@given(
+    n=st.integers(1, 5),
+    rows=st.integers(1, 3),
+    vocab=st.integers(8, 96),
+    scale_pow=st.integers(-20, 20),
+    seed=st.integers(0, 2**30),
+    data=st.data(),
+)
+@SETTINGS
+def test_quantize_wire_roundtrip_properties(n, rows, vocab, scale_pow, seed, data):
+    """INVARIANTS (PR-6 quantized wire): for any budgets (k = 0 stragglers
+    included) and logit magnitudes across 40 binary orders of magnitude —
+    the scale is strictly positive, dequantization is NaN-free, straggler
+    rows round-trip to exact zeros, and the per-entry error is bounded by
+    one quantization step (amax/127) per row."""
+    from repro.core.topk import QUANT_LEVELS, dequantize_wire
+
+    ks = data.draw(st.lists(st.integers(0, vocab), min_size=n, max_size=n))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, rows, vocab))
+    x = x * (2.0 ** scale_pow)
+    k_cap = max(max(ks), 1)
+    w = sparsify_wire(x, jnp.asarray(ks, jnp.int32), k_cap)
+    q = sparsify_wire(x, jnp.asarray(ks, jnp.int32), k_cap, quantize=True)
+
+    assert bool(jnp.all(q.scale > 0))
+    back = dequantize_wire(q)
+    assert bool(jnp.all(jnp.isfinite(back.values)))
+    # error bound per row: one step of the symmetric int8 code
+    amax = jnp.max(jnp.abs(jnp.where(w.mask, w.values, 0.0)), axis=-1)
+    err = jnp.max(jnp.abs(back.values - jnp.where(w.mask, w.values, 0.0)), axis=-1)
+    assert bool(jnp.all(err <= amax / QUANT_LEVELS + 1e-30))
+    # straggler rows: all-masked -> exact zeros and unit scale
+    for i, k in enumerate(ks):
+        if k == 0:
+            assert float(jnp.sum(jnp.abs(back.values[i]))) == 0.0
+            np.testing.assert_array_equal(np.asarray(q.scale[i]), 1.0)
+
+
+@given(
+    n=st.integers(1, 5),
+    rows=st.integers(1, 3),
+    vocab=st.integers(8, 96),
+    mode=st.sampled_from(["adaptive", "zeropad", "mean_nonzero"]),
+    seed=st.integers(0, 2**30),
+    data=st.data(),
+)
+@SETTINGS
+def test_quantized_aggregate_wire_close_to_float(n, rows, vocab, mode, seed, data):
+    """INVARIANT (PR-6): aggregating the int8 wire lands within quantization
+    tolerance of aggregating the float wire, in all three modes.  The
+    loosened tolerance is the documented quant parity bound: aggregation is
+    convex in the client values (adaptive re-weights by |v|, hence the
+    softer relative bound), and each value moves at most amax/127."""
+    ks = data.draw(st.lists(st.integers(0, vocab), min_size=n, max_size=n))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, rows, vocab)) * 5.0
+    k_cap = max(max(ks), 1)
+    w = sparsify_wire(x, jnp.asarray(ks, jnp.int32), k_cap)
+    q = sparsify_wire(x, jnp.asarray(ks, jnp.int32), k_cap, quantize=True)
+
+    got = aggregate_wire(q, mode)
+    want = aggregate_wire(w, mode)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    step = float(jnp.max(jnp.abs(x))) / 127.0
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=2.5 * step + 1e-6,
+        rtol=0.05,
+    )

@@ -57,3 +57,62 @@ def test_uplink_payload_bytes():
     spec = PayloadSpec(num_samples=4, vocab=256, k=2, lora_rank=None)
     up = UplinkPayload(client_id=0, spec=spec)
     assert up.bytes == spec.uplink_bytes
+
+
+# ---- PR 6: value-bits split (quantized wire) + export surface --------------
+
+
+def test_payload_spec_h_value_bits_split():
+    """A quantized payload prices its (value, index) entries at 8 bits while
+    the unquantized LoRA projection keeps its own width (h_value_bits)."""
+    q = PayloadSpec(
+        num_samples=10, vocab=65_536, k=5, lora_rank=8,
+        value_bits=8, h_value_bits=16,
+    )
+    # d = 8 + 16 index bits; + 8*16 bits of h per sample
+    assert q.uplink_bits == 10 * 5 * 24 + 10 * 8 * 16
+    # h_value_bits=None falls back to value_bits for the projection
+    f = PayloadSpec(num_samples=10, vocab=65_536, k=5, lora_rank=8, value_bits=8)
+    assert f.uplink_bits == 10 * 5 * 24 + 10 * 8 * 8
+    # at equal k the quantized spec is strictly cheaper than the float one
+    base = PayloadSpec(num_samples=10, vocab=65_536, k=5, lora_rank=8)
+    assert q.uplink_bits < base.uplink_bits
+
+
+def test_make_upload_payload_quantize_pricing():
+    """The engines' single accounting source prices quantized uploads at
+    8-bit entries + value_bits projection."""
+    from repro.configs import get_smoke_config
+
+    from repro.fed.client import make_upload_payload
+
+    cfg = get_smoke_config("gpt2-paper")
+    q, rank = make_upload_payload(
+        cfg, 0, 10, 5, send_h=True, value_bits=16, snr_db=0.0, quantize=True
+    )
+    f, _ = make_upload_payload(
+        cfg, 0, 10, 5, send_h=True, value_bits=16, snr_db=0.0
+    )
+    assert rank == cfg.lora.rank
+    assert q.spec.value_bits == 8 and q.spec.h_value_bits == 16
+    assert f.spec.value_bits == 16 and f.spec.h_value_bits is None
+    # equal-shape savings: same k, same h, strictly fewer bits on the wire
+    assert q.spec.uplink_bits < f.spec.uplink_bits
+    # the projection is priced identically in both, so the whole difference
+    # is the 8 bits shaved off each of the 10*5 (value, index) entries
+    assert f.spec.uplink_bits - q.spec.uplink_bits == 10 * 5 * 8
+    from repro.core.channel import bits_per_entry
+
+    h_bits = lora_projection_bits(10, cfg.lora.rank, 16)
+    assert q.spec.uplink_bits == 10 * 5 * bits_per_entry(8, cfg.vocab_size) + h_bits
+
+
+def test_protocol_exports_downlink_and_round_totals():
+    """PR-6 export fix: downlink_bits/total_round_bytes are public API (the
+    engines and ledger plots import them)."""
+    import repro.core.protocol as proto
+
+    assert "downlink_bits" in proto.__all__
+    assert "total_round_bytes" in proto.__all__
+    assert callable(proto.downlink_bits)
+    assert callable(proto.total_round_bytes)

@@ -90,3 +90,121 @@ def test_wire_union_helpers_pad_concat_take():
         pad_wire(w2, 4)  # cannot shrink
     with pytest.raises(ValueError):
         concat_wires([w1, sparsify_wire(x1, jnp.asarray([1, 1]), 2)._replace(vocab=64)])
+
+
+# ---- PR 6 regression: padded-wire index-0 clobber -------------------------
+
+
+def test_padded_wire_preserves_index_zero_entry():
+    """ISSUE repro: ``pad_wire`` appends masked entries at (value 0,
+    index 0); a ``.at[idx].set`` densification scatter leaves the winner
+    among duplicate indices unspecified, so a pad entry could CLOBBER a
+    genuine vocab-index-0 top-k entry.  The wire scatter must be
+    order-free (``.add``): index 0's logit must survive padding."""
+    from repro.core.topk import (
+        concat_wires, pad_wire, sparsify_wire, wire_densify, wire_support,
+    )
+
+    # index 0 holds the LARGEST logit, so it is always in the top-k support
+    x = jnp.asarray([[5.0, 1.0, 0.5, 0.2]])
+    w = sparsify_wire(x, jnp.asarray([2]), k_cap=2)
+    padded = pad_wire(w, 4)  # two masked (0, index 0) pad entries per row
+
+    d = wire_densify(padded)
+    assert float(d[0, 0]) == 5.0, "pad entry clobbered the index-0 logit"
+    np.testing.assert_allclose(d, jnp.asarray([[5.0, 1.0, 0.0, 0.0]]), atol=0)
+
+    s = wire_support(padded)
+    assert bool(s[0, 0]), "pad entry clobbered the index-0 support bit"
+    np.testing.assert_array_equal(s, jnp.asarray([[True, True, False, False]]))
+
+    # the same hazard through the hetero union path: a narrow bucket padded
+    # up to a wider one, then concatenated — index-0 entries must survive
+    y = jnp.asarray([[3.0, 2.0, 1.0, 0.5]])
+    wide = sparsify_wire(y, jnp.asarray([4]), k_cap=4)
+    union = concat_wires([w, wide])
+    du = wire_densify(union)
+    assert float(du[0, 0]) == 5.0 and float(du[1, 0]) == 3.0
+
+
+# ---- PR 6: int8 quantized wire --------------------------------------------
+
+
+def test_quantize_wire_roundtrip_bounds():
+    """Dequantized values sit within amax/127 of the float wire per row,
+    the scale is strictly positive, and off-mask entries stay exact zeros."""
+    from repro.core.topk import (
+        QUANT_LEVELS, dequantize_wire, quantize_wire, sparsify_wire, wire_densify,
+    )
+
+    x = jax.random.normal(jax.random.PRNGKey(7), (3, 4, 64)) * 10.0
+    ks = jnp.asarray([5, 0, 64])  # incl. a dropped straggler row
+    w = sparsify_wire(x, ks, k_cap=64)
+    q = quantize_wire(w)
+    assert q.values.dtype == jnp.int8 and q.scale.dtype == jnp.float32
+    assert bool(jnp.all(q.scale > 0))
+
+    back = dequantize_wire(q)
+    amax = jnp.max(jnp.abs(jnp.where(w.mask, w.values, 0.0)), axis=-1)
+    err = jnp.max(jnp.abs(back.values - w.values), axis=-1)
+    # half-step rounding bound: |v - q*s| <= s/2 = amax/254
+    assert bool(jnp.all(err <= amax / QUANT_LEVELS))
+    # straggler row (k = 0): exact zeros, scale clamped to 1
+    np.testing.assert_array_equal(np.asarray(back.values[1]), 0.0)
+    np.testing.assert_array_equal(np.asarray(q.scale[1]), 1.0)
+    # support is preserved exactly (quantization never moves the mask)
+    np.testing.assert_array_equal(np.asarray(q.mask), np.asarray(w.mask))
+    np.testing.assert_allclose(
+        np.asarray(wire_densify(q)),
+        np.asarray(wire_densify(back)),
+        atol=0,
+    )
+
+
+def test_sparsify_wire_quantize_emits_quantized():
+    from repro.core.topk import QuantizedWire, quantize_wire, sparsify_wire
+
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 3, 32))
+    ks = jnp.asarray([4, 7])
+    direct = sparsify_wire(x, ks, k_cap=8, quantize=True)
+    assert isinstance(direct, QuantizedWire)
+    two_step = quantize_wire(sparsify_wire(x, ks, k_cap=8))
+    for a, b in zip(direct[:4], two_step[:4]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quantized_wire_pad_concat_take():
+    """pad/concat/take are format-polymorphic; mixing formats raises."""
+    import pytest
+
+    from repro.core.topk import (
+        concat_wires, pad_wire, sparsify_wire, take_wire_rows, wire_densify,
+    )
+
+    x1 = jax.random.normal(jax.random.PRNGKey(9), (2, 3, 32))
+    x2 = jax.random.normal(jax.random.PRNGKey(10), (3, 3, 32))
+    q1 = sparsify_wire(x1, jnp.asarray([4, 0]), k_cap=4, quantize=True)
+    q2 = sparsify_wire(x2, jnp.asarray([8, 2, 5]), k_cap=8, quantize=True)
+
+    padded = pad_wire(q1, 8)
+    assert padded.k_cap == 8
+    np.testing.assert_allclose(
+        np.asarray(wire_densify(padded)), np.asarray(wire_densify(q1)), atol=0
+    )
+    union = concat_wires([q1, q2])
+    assert union.values.shape == (5, 3, 8) and union.scale.shape == (5, 3)
+    np.testing.assert_allclose(
+        np.asarray(wire_densify(union)),
+        np.concatenate(
+            [np.asarray(wire_densify(q1)), np.asarray(wire_densify(q2))]
+        ),
+        atol=0,
+    )
+    taken = take_wire_rows(union, [3, 0])
+    np.testing.assert_allclose(
+        np.asarray(wire_densify(taken)),
+        np.asarray(wire_densify(union))[[3, 0]],
+        atol=0,
+    )
+    with pytest.raises(ValueError):
+        concat_wires([q1, sparsify_wire(x2, jnp.asarray([1, 1, 1]), 4)])
