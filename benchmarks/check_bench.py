@@ -23,10 +23,21 @@ stay dense-stack-free, the int8 wire must be strictly cheaper than the float
 wire at equal shape, and the 8-bit entry pricing must never shrink the
 adaptive mean k at the same Shannon budget.
 
+The PR-7 scenario record (BENCH_scenario, written by examples/
+scenario_suite.py) is gated as well (see ``check_scenario``): every channel-
+dynamics preset must have well-formed accuracy-vs-communication curves, the
+``iid`` preset must be bit-identical to the legacy no-scenario path, and —
+because channel draws are keyed per (seed, round, cid) and cohorts are
+prefix-stable — the quick run's per-round uplink bytes must match the
+committed record's leading rounds byte-for-byte (a payload-bytes regression
+gate; an intentional format change must refresh BENCH_scenario.json in the
+same PR).
+
 Run (CI does exactly this):
 
     python benchmarks/engine_bench.py --quick --round-only
     python benchmarks/engine_bench.py --quick --quant-only
+    PYTHONPATH=src python examples/scenario_suite.py --quick
     python benchmarks/check_bench.py
 
 Pure stdlib; exits non-zero with a one-line reason per failed check.
@@ -131,6 +142,89 @@ def check_quant(record: dict, label: str) -> list[str]:
     return failures
 
 
+_SCENARIO_PRESETS = ("iid", "gauss_markov", "jakes", "gilbert_elliott", "mobility")
+
+
+def check_scenario(fresh: dict, committed: dict) -> list[str]:
+    """Gate on the scenario-suite records (fresh quick run vs the committed
+    full one):
+
+    1. every preset's curves are present and well-formed in BOTH records —
+       equal-length server_acc / cum_uplink_mb / uplink_bytes arrays,
+       accuracies in [0, 1], cumulative uplink non-decreasing;
+    2. ``iid_bit_identical`` true in BOTH — the ``iid`` preset stayed
+       bit-identical (per-client k, uplink bytes, 1e-6 accuracies) to the
+       legacy no-scenario i.i.d. path;
+    3. the committed ``gilbert_elliott`` run actually burst (outage_rate
+       > 0) — the two-state chain is engaged, not silently disabled;
+    4. no payload-bytes regression: the quick run is a prefix of the full
+       one (same seed, same per-(seed, round, cid) channel keying), so each
+       fresh round's uplink bytes must not exceed the committed record's
+       same-round bytes, per scenario.
+    """
+    failures = []
+
+    for label, record in (("fresh", fresh), ("committed", committed)):
+        scen = record.get("scenarios", {})
+        missing = [p for p in _SCENARIO_PRESETS if p not in scen]
+        if missing:
+            failures.append(f"[scenario-{label}] missing presets: {missing}")
+            continue
+        for name in _SCENARIO_PRESETS:
+            s = scen[name]
+            acc = s.get("server_acc") or []
+            cum = s.get("cum_uplink_mb") or []
+            raw = s.get("uplink_bytes") or []
+            if not acc or not (len(acc) == len(cum) == len(raw)):
+                failures.append(
+                    f"[scenario-{label}] {name}: malformed curves "
+                    f"(len acc={len(acc)}, cum={len(cum)}, bytes={len(raw)})"
+                )
+                continue
+            if not all(0.0 <= a <= 1.0 for a in acc):
+                failures.append(
+                    f"[scenario-{label}] {name}: server_acc out of [0, 1]"
+                )
+            if any(b > a for a, b in zip(cum[1:], cum)):
+                failures.append(
+                    f"[scenario-{label}] {name}: cum_uplink_mb not "
+                    "non-decreasing"
+                )
+        if record.get("iid_bit_identical") is not True:
+            failures.append(
+                f"[scenario-{label}] iid_bit_identical is not true: the iid "
+                "preset diverged from the legacy no-scenario i.i.d. path"
+            )
+
+    ge = committed.get("scenarios", {}).get("gilbert_elliott", {})
+    if not ge.get("outage_rate", 0.0) > 0.0:
+        failures.append(
+            "[scenario-committed] gilbert_elliott outage_rate is not > 0: "
+            "the burst chain never engaged"
+        )
+
+    for name in _SCENARIO_PRESETS:
+        fb = fresh.get("scenarios", {}).get(name, {}).get("uplink_bytes") or []
+        cb = committed.get("scenarios", {}).get(name, {}).get("uplink_bytes") or []
+        if len(fb) > len(cb):
+            failures.append(
+                f"[scenario] {name}: fresh run has more rounds ({len(fb)}) "
+                f"than the committed record ({len(cb)}) — cannot prefix-check"
+            )
+            continue
+        for r, (f_bytes, c_bytes) in enumerate(zip(fb, cb)):
+            if f_bytes > c_bytes:
+                failures.append(
+                    f"[scenario] {name} round {r}: uplink bytes regressed "
+                    f"({f_bytes} > committed {c_bytes}) — if the payload "
+                    "change is intentional, refresh BENCH_scenario.json in "
+                    "this PR"
+                )
+                break
+
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument(
@@ -158,6 +252,16 @@ def main(argv=None) -> int:
         default=os.path.join(_REPO_ROOT, "BENCH_quant.json"),
         help="the committed full-size quant reference record",
     )
+    ap.add_argument(
+        "--scenario-fresh",
+        default=os.path.join(_REPO_ROOT, "BENCH_scenario.quick.json"),
+        help="scenario record written by the quick suite run just executed",
+    )
+    ap.add_argument(
+        "--scenario-committed",
+        default=os.path.join(_REPO_ROOT, "BENCH_scenario.json"),
+        help="the committed full-size scenario reference record",
+    )
     args = ap.parse_args(argv)
 
     for path in (args.fresh, args.committed):
@@ -170,6 +274,11 @@ def main(argv=None) -> int:
             print(f"[check_bench] FAIL: {path} does not exist "
                   "(run benchmarks/engine_bench.py --quick --quant-only first)")
             return 2
+    for path in (args.scenario_fresh, args.scenario_committed):
+        if not os.path.exists(path):
+            print(f"[check_bench] FAIL: {path} does not exist "
+                  "(run examples/scenario_suite.py --quick first)")
+            return 2
     with open(args.fresh) as f:
         fresh = json.load(f)
     with open(args.committed) as f:
@@ -178,10 +287,15 @@ def main(argv=None) -> int:
         quant_fresh = json.load(f)
     with open(args.quant_committed) as f:
         quant_committed = json.load(f)
+    with open(args.scenario_fresh) as f:
+        scenario_fresh = json.load(f)
+    with open(args.scenario_committed) as f:
+        scenario_committed = json.load(f)
 
     failures = check(fresh, committed, min_speedup=args.min_speedup)
     failures += check_quant(quant_fresh, "quant-fresh")
     failures += check_quant(quant_committed, "quant-committed")
+    failures += check_scenario(scenario_fresh, scenario_committed)
     if failures:
         for msg in failures:
             print(f"[check_bench] FAIL: {msg}")
@@ -195,7 +309,9 @@ def main(argv=None) -> int:
         "dequant dense-stack-free, equal-shape bytes "
         f"{quant_fresh['equal_shape']['quant_uplink_bytes']} < "
         f"{quant_fresh['equal_shape']['float_uplink_bytes']}, mean-k ratio "
-        f"{quant_fresh['speedups']['quant_vs_float_mean_k']}x >= 1x"
+        f"{quant_fresh['speedups']['quant_vs_float_mean_k']}x >= 1x; "
+        f"scenario gate: {len(_SCENARIO_PRESETS)} preset curves well-formed, "
+        "iid bit-identical to legacy, no per-round uplink-bytes regression"
     )
     return 0
 

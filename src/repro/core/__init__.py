@@ -2,6 +2,8 @@
 
 Public API:
   channel     — Shannon-capacity byte budgets (paper eq. 5, §III-A)
+  scenario    — time-correlated channel dynamics (Gauss-Markov / Jakes
+                fading, Gilbert-Elliott outage, mobility trajectories)
   topk        — adaptive Top-k sparsification (eqs. 3-4)
   aggregation — adaptive / zeropad / mean aggregation (eqs. 6-7)
   distill     — logits + LoRA-projection KL losses (eqs. 8-10)
@@ -17,6 +19,7 @@ from repro.core.aggregation import (
 )
 from repro.core.channel import (
     BatchedChannelState,
+    ChannelCarry,
     ChannelConfig,
     ChannelSimulator,
     ChannelState,
@@ -24,6 +27,12 @@ from repro.core.channel import (
     capacity_bps,
     topk_budget,
     topk_budget_batch,
+)
+from repro.core.scenario import (
+    SCENARIOS,
+    ScenarioConfig,
+    get_scenario,
+    jakes_rho,
 )
 from repro.core.distill import (
     DEFAULT_LAMBDA,
@@ -57,6 +66,7 @@ __all__ = [
     "aggregate_sparse",
     "aggregate_zeropad",
     "BatchedChannelState",
+    "ChannelCarry",
     "ChannelConfig",
     "ChannelSimulator",
     "ChannelState",
@@ -64,6 +74,10 @@ __all__ = [
     "capacity_bps",
     "topk_budget",
     "topk_budget_batch",
+    "SCENARIOS",
+    "ScenarioConfig",
+    "get_scenario",
+    "jakes_rho",
     "DEFAULT_LAMBDA",
     "DEFAULT_TEMPERATURE",
     "kl_divergence",

@@ -29,9 +29,20 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.core.scenario import (
+    ScenarioConfig,
+    exp_to_gauss,
+    gauss_to_exp_power,
+    ge_stationary_bad,
+    ge_step,
+    trajectory_offset_db,
+    uniform_to_gauss,
+)
+
 __all__ = [
     "ChannelState",
     "BatchedChannelState",
+    "ChannelCarry",
     "ChannelConfig",
     "ChannelSimulator",
     "capacity_bps",
@@ -235,6 +246,31 @@ class ChannelConfig:
     value_bits: int = 16
     min_k: int = 1  # survival floor; 0 lets deep-fade clients drop the round
     dropout_prob: float = 0.0  # per-(round, client) outage probability
+    # Channel dynamics (repro.core.scenario): None keeps the i.i.d.
+    # per-round fading/dropout above; a ScenarioConfig upgrades the
+    # simulator to time-correlated fading (Gauss-Markov / Jakes), bursty
+    # Gilbert-Elliott outage, and deterministic SNR/mobility trajectories.
+    # The default ScenarioConfig() is bit-identical to None.
+    scenario: ScenarioConfig | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelCarry:
+    """Per-fleet channel state between rounds (scenario dynamics).
+
+    ``z`` is the Gaussian-copula AR(1) fading state and ``bad`` the
+    Gilbert-Elliott outage state, one entry per fleet client.  The carry is
+    a pure value: :meth:`ChannelSimulator.step_channel` maps the carry for
+    round ``t-1`` plus the ``(seed, t, cid)``-keyed draws to the carry for
+    round ``t`` — replaying from :meth:`ChannelSimulator.init_channel_carry`
+    always reproduces the same trajectory, so realisations are independent
+    of query order and cohort composition (PR-4's guarantees extended to
+    stateful channels).
+    """
+
+    round_index: int  # the round this carry has evolved THROUGH (-1 = init)
+    z: np.ndarray  # (N,) f64 AR(1) fading state
+    bad: np.ndarray  # (N,) bool Gilbert-Elliott outage state
 
 
 class ChannelSimulator:
@@ -256,9 +292,13 @@ class ChannelSimulator:
     """
 
     # Stream domains: fading and outage draws must stay on disjoint keys so
-    # enabling dropout never perturbs the fading realisation of a run.
+    # enabling dropout never perturbs the fading realisation of a run.  The
+    # scenario init states (AR(1) z_{-1}, Gilbert-Elliott stationary start)
+    # live on their own domains for the same reason.
     _FADING_DOMAIN = 7
     _OUTAGE_DOMAIN = 8
+    _FADING_INIT_DOMAIN = 9
+    _GE_INIT_DOMAIN = 10
 
     def __init__(self, num_clients: int, config: ChannelConfig | None = None, *, seed: int = 0):
         self.num_clients = int(num_clients)
@@ -269,6 +309,16 @@ class ChannelSimulator:
         self._shadowing_db = self._rng.normal(
             0.0, self.config.shadowing_std_db, size=self.num_clients
         )
+        # Scenario replay cache: realised (snr_db, outage) arrays per round,
+        # built by stepping the pure carry from round 0.  Contiguous replay
+        # is what makes random-access ``states(t, ids)`` independent of the
+        # order rounds are queried in.
+        self._carry: ChannelCarry | None = None
+        self._realised: list[tuple[np.ndarray, np.ndarray]] = []
+
+    @property
+    def scenario(self) -> ScenarioConfig | None:
+        return self.config.scenario
 
     def _stream(self, domain: int, round_index: int, cid: int) -> np.random.Generator:
         """Fresh generator keyed by (seed, domain, round, client)."""
@@ -278,12 +328,149 @@ class ChannelSimulator:
             )
         )
 
+    def _validate_query(self, round_index: int, client_ids: Sequence[int]) -> list[int]:
+        """Shared hygiene for ``states``/``topk_for``: rounds are 0-based and
+        a cohort is a set — silently accepting a negative round or duplicate
+        ids would silently desynchronise the (seed, round, cid) keying."""
+        if round_index < 0:
+            raise ValueError(
+                f"round_index must be >= 0, got {round_index} (rounds are "
+                "0-based; the simulator has no pre-federation realisations)"
+            )
+        ids = [int(c) for c in client_ids]
+        if len(set(ids)) != len(ids):
+            dups = sorted({c for c in ids if ids.count(c) > 1})
+            raise ValueError(
+                f"duplicate client_ids in cohort: {dups} — a cohort selects "
+                "each client at most once; duplicates would double-count "
+                "budgets/payloads for one physical link"
+            )
+        return ids
+
+    # -- scenario dynamics: pure carry API -------------------------------
+
+    def init_channel_carry(self) -> ChannelCarry:
+        """Fleet channel state BEFORE round 0 (stationary start).
+
+        ``z_{-1} ~ N(0, 1)`` per client (own stream domain) makes the AR(1)
+        fading chain stationary from the very first round — the round-0
+        marginal already matches the i.i.d. model.  The Gilbert-Elliott
+        state starts from its stationary distribution.  With no scenario
+        (or the default one) both states are identically zero/False and
+        never consulted.
+        """
+        sc = self.config.scenario or ScenarioConfig()
+        n = self.num_clients
+        z = np.zeros(n, dtype=np.float64)
+        if self.config.fast_fading and sc.effective_rho > 0.0:
+            z = uniform_to_gauss([
+                self._stream(self._FADING_INIT_DOMAIN, 0, cid).random()
+                for cid in range(n)
+            ])
+        bad = np.zeros(n, dtype=bool)
+        if sc.p_gb is not None:
+            pi_bad = ge_stationary_bad(*sc.ge_params(self.config.dropout_prob))
+            if pi_bad > 0.0:
+                bad = np.array([
+                    self._stream(self._GE_INIT_DOMAIN, 0, cid).random() < pi_bad
+                    for cid in range(n)
+                ])
+        return ChannelCarry(round_index=-1, z=z, bad=bad)
+
+    def step_channel(
+        self, carry: ChannelCarry, round_index: int
+    ) -> tuple[ChannelCarry, np.ndarray, np.ndarray]:
+        """Advance the fleet's channel state through one round (pure).
+
+        Returns ``(carry', snr_db, outage)`` with per-fleet-client arrays:
+        ``snr_db[cid]`` is client ``cid``'s realised SNR for ``round_index``
+        (``-inf`` in outage) and ``outage`` the Gilbert-Elliott bad states.
+        Draws are keyed ``(seed, round, cid)`` exactly like the i.i.d.
+        simulator — same streams, same first draw — so ``rho = 0`` with the
+        i.i.d.-equivalent outage chain reproduces the stateless simulator
+        bit for bit.  The carry must be stepped contiguously (correlation
+        makes round ``t`` depend on ``t-1``); random access goes through
+        :meth:`states`, which replays and caches from round 0.
+        """
+        if round_index != carry.round_index + 1:
+            raise ValueError(
+                f"step_channel must advance contiguously: carry is at round "
+                f"{carry.round_index}, got round_index {round_index}"
+            )
+        cfg = self.config
+        sc = cfg.scenario or ScenarioConfig()
+        n = self.num_clients
+        snr = cfg.mean_snr_db + self._shadowing_db.astype(np.float64)
+        if sc.snr_drift_db_per_round != 0.0 or sc.snr_amp_db != 0.0:
+            snr = snr + np.array([
+                trajectory_offset_db(sc, round_index, cid, n) for cid in range(n)
+            ])
+        z = carry.z
+        if cfg.fast_fading:
+            power = np.array([
+                self._stream(self._FADING_DOMAIN, round_index, cid).exponential(1.0)
+                for cid in range(n)
+            ])
+            rho = sc.effective_rho
+            if rho > 0.0:
+                # Gaussian-copula AR(1): stationary Exp(1) marginal at any
+                # rho; rho = 0 keeps the RAW draw (bit-identical i.i.d.).
+                z = rho * z + math.sqrt(1.0 - rho * rho) * exp_to_gauss(power)
+                power = gauss_to_exp_power(z)
+            snr = snr + np.array([
+                10.0 * math.log10(max(1e-6, float(p))) for p in power
+            ])
+        bad = np.zeros(n, dtype=bool)
+        if sc.p_gb is not None:
+            p_gb, p_bg = sc.ge_params(cfg.dropout_prob)
+            if p_gb > 0.0:
+                u = np.array([
+                    self._stream(self._OUTAGE_DOMAIN, round_index, cid).random()
+                    for cid in range(n)
+                ])
+                bad = ge_step(carry.bad, u, p_gb, p_bg)
+        elif cfg.dropout_prob > 0.0:
+            # memoryless dropout coin — the i.i.d. simulator's exact branch
+            u = np.array([
+                self._stream(self._OUTAGE_DOMAIN, round_index, cid).random()
+                for cid in range(n)
+            ])
+            bad = u < cfg.dropout_prob
+        snr = np.where(bad, -np.inf, snr)
+        return ChannelCarry(round_index=round_index, z=z, bad=bad), snr, bad
+
+    def _ensure_realised(self, round_index: int) -> None:
+        if self._carry is None:
+            self._carry = self.init_channel_carry()
+        while len(self._realised) <= round_index:
+            self._carry, snr, bad = self.step_channel(
+                self._carry, len(self._realised)
+            )
+            self._realised.append((snr, bad))
+
     def states(self, round_index: int, client_ids: Sequence[int]) -> list[ChannelState]:
         cfg = self.config
+        client_ids = self._validate_query(round_index, client_ids)
         eta = cfg.eta if cfg.eta is not None else 1.0 / max(1, len(client_ids))
+        if cfg.scenario is not None:
+            if any(not 0 <= c < self.num_clients for c in client_ids):
+                raise ValueError(
+                    f"scenario channels track per-fleet state: client_ids "
+                    f"must be in [0, {self.num_clients}), got {client_ids}"
+                )
+            self._ensure_realised(round_index)
+            snr_all, _bad = self._realised[round_index]
+            return [
+                ChannelState(
+                    bandwidth_hz=cfg.bandwidth_hz,
+                    snr_db=float(snr_all[cid]),
+                    eta=eta,
+                    deadline_s=cfg.deadline_s,
+                )
+                for cid in client_ids
+            ]
         out = []
         for cid in client_ids:
-            cid = int(cid)
             snr = cfg.mean_snr_db + float(self._shadowing_db[cid % self.num_clients])
             if cfg.fast_fading:
                 # Rayleigh power fading: 10*log10(Exp(1)) has mean ~ -2.5 dB.
@@ -302,6 +489,68 @@ class ChannelSimulator:
                 )
             )
         return out
+
+    def scan_channel_inputs(self, num_rounds: int, *, start_round: int = 0) -> dict:
+        """Host-precomputed operands for the in-scan channel replica.
+
+        The compiled multi-round drivers evolve ``(z, bad)`` as scan carry
+        from these f32 DATA operands (:func:`repro.fed.steps
+        .make_channel_step_fn`): per-round copula normals ``w``, outage
+        uniforms ``u`` and deterministic base SNR (mean + shadowing +
+        trajectory), plus the scalar dynamics ``rho``/``p_gb``/``p_bg``/
+        ``fade_scale``.  Because every scenario differs only through these
+        operands, one executable serves all presets (``rho = 0`` is the
+        i.i.d. case).  The draws come from the very streams the host
+        realisation consumes, so the in-scan trajectory replays the host
+        one (f32 vs f64 rounding aside).
+        """
+        if num_rounds < 0 or start_round < 0:
+            raise ValueError("num_rounds and start_round must be >= 0")
+        cfg = self.config
+        sc = cfg.scenario or ScenarioConfig()
+        n = self.num_clients
+        carry = self.init_channel_carry()
+        for t in range(start_round):
+            carry, _snr, _bad = self.step_channel(carry, t)
+        rho = sc.effective_rho if cfg.fast_fading else 0.0
+        if sc.p_gb is not None:
+            p_gb, p_bg = sc.ge_params(cfg.dropout_prob)
+        else:
+            p_gb, p_bg = float(cfg.dropout_prob), 1.0 - float(cfg.dropout_prob)
+        outage_on = p_gb > 0.0
+        w = np.zeros((num_rounds, n), dtype=np.float64)
+        u = np.ones((num_rounds, n), dtype=np.float64)
+        base = np.zeros((num_rounds, n), dtype=np.float64)
+        shadow = cfg.mean_snr_db + self._shadowing_db.astype(np.float64)
+        for r in range(num_rounds):
+            t = start_round + r
+            base[r] = shadow
+            if sc.snr_drift_db_per_round != 0.0 or sc.snr_amp_db != 0.0:
+                base[r] += np.array([
+                    trajectory_offset_db(sc, t, cid, n) for cid in range(n)
+                ])
+            if cfg.fast_fading:
+                p = np.array([
+                    self._stream(self._FADING_DOMAIN, t, cid).exponential(1.0)
+                    for cid in range(n)
+                ])
+                w[r] = exp_to_gauss(p)
+            if outage_on:
+                u[r] = np.array([
+                    self._stream(self._OUTAGE_DOMAIN, t, cid).random()
+                    for cid in range(n)
+                ])
+        return {
+            "z0": carry.z.astype(np.float32),
+            "bad0": carry.bad.copy(),
+            "w": w.astype(np.float32),
+            "u": u.astype(np.float32),
+            "base_snr_db": base.astype(np.float32),
+            "rho": np.float32(rho),
+            "p_gb": np.float32(p_gb if outage_on else 0.0),
+            "p_bg": np.float32(p_bg if outage_on else 1.0),
+            "fade_scale": np.float32(1.0 if cfg.fast_fading else 0.0),
+        }
 
     def states_batched(
         self, round_index: int, client_ids: Sequence[int]

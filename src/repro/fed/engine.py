@@ -90,6 +90,36 @@ def k_cap_bucket(ks: Sequence[int], vocab: int) -> int:
     return min(cap, vocab)
 
 
+def _channel_scan_ops(channel_scan: dict, num_rounds: int) -> tuple:
+    """Validate + device-stage a ``scan_channel_inputs`` dict for the
+    multi-round drivers: (z0, bad0, w, u, base_snr_db, rho, p_gb, p_bg,
+    fade_scale).  Every element is DATA — the drivers compile one channel
+    program for all scenarios."""
+    try:
+        w = np.asarray(channel_scan["w"])
+    except KeyError as e:
+        raise ValueError(f"channel_scan is missing key {e}") from None
+    if w.ndim != 2 or w.shape[0] < num_rounds:
+        raise ValueError(
+            f"channel_scan covers {w.shape[0] if w.ndim == 2 else '?'} "
+            f"rounds, need {num_rounds} "
+            "(ChannelSimulator.scan_channel_inputs(num_rounds))"
+        )
+    return (
+        jnp.asarray(channel_scan["z0"], jnp.float32),
+        jnp.asarray(channel_scan["bad0"], bool),
+        jnp.asarray(w[:num_rounds], jnp.float32),
+        jnp.asarray(np.asarray(channel_scan["u"])[:num_rounds], jnp.float32),
+        jnp.asarray(
+            np.asarray(channel_scan["base_snr_db"])[:num_rounds], jnp.float32
+        ),
+        jnp.asarray(channel_scan["rho"], jnp.float32),
+        jnp.asarray(channel_scan["p_gb"], jnp.float32),
+        jnp.asarray(channel_scan["p_bg"], jnp.float32),
+        jnp.asarray(channel_scan["fade_scale"], jnp.float32),
+    )
+
+
 def fake_quant_dense(dense: jax.Array) -> jax.Array:
     """Quantize-dequantize a densified top-k stack through the int8 wire's
     per-(client, sample)-row symmetric code — what the dense-path engines
@@ -191,6 +221,13 @@ class RoundsTrajectory:
     server_acc: list[float] | None = None
     client_acc: list[float] | None = None
     family_client_acc: list[list[float]] | None = None
+    # Scenario runs only (``channel_scan`` passed): the in-scan channel
+    # replica's per-round realised cohort SNR (dB, -inf in outage) and
+    # Gilbert-Elliott outage flags — scanned outputs of the same compiled
+    # dispatch, evolved from the channel carry (f32 replica of the host
+    # realisation that priced ``ks``/``payloads``).
+    snr_db: list[list[float]] | None = None
+    outage: list[list[bool]] | None = None
 
 
 class SequentialEngine:
@@ -861,13 +898,16 @@ class FusedE2EEngine(_ServerOwnerMixin, FusedEngine):
     # -- multi-round scan driver ------------------------------------------
     def _rounds_driver(
         self, k_cap: int, send_h: bool, num_rounds: int, n_real: int,
-        has_eval: bool,
+        has_eval: bool, has_chan: bool,
     ):
-        key = (k_cap, send_h, num_rounds, n_real, has_eval)
+        key = (k_cap, send_h, num_rounds, n_real, has_eval, has_chan)
         if key in self._drivers:
             return self._drivers[key]
         fn = self._e2e_fn(k_cap, send_h)
         has_h = self.server.cfg.lora is not None
+        # in-scan channel replica: scenario dynamics as f32 data, so the
+        # same executable serves every preset (rho=0 == i.i.d.)
+        chan_step = fed_steps.make_channel_step_fn() if has_chan else None
         # in-scan eval tap: same last-position class-logit accuracy as the
         # host-side make_eval_fn, traced into the scanned round program
         server_eval = fed_steps.make_scan_eval_fn(
@@ -881,10 +921,14 @@ class FusedE2EEngine(_ServerOwnerMixin, FusedEngine):
 
         def driver(fleet_lora, fleet_opt, s_lora, s_opt, frozen, s_frozen,
                    g_tokens, g_logits, g_h, g_valid, sels, kss, pubs, batches,
-                   *eval_args):
+                   chan, *eval_args):
+            if has_chan:
+                ch_z0, ch_bad0, ch_w, ch_u, ch_base, rho, p_gb, p_bg, fade = chan
+
             def body(carry, xs):
-                fleet_lora, fleet_opt, s_lora, s_opt, g_tokens, g_logits, g_h, g_valid = carry
-                sel, ks, pub, bat = xs
+                (fleet_lora, fleet_opt, s_lora, s_opt,
+                 g_tokens, g_logits, g_h, g_valid, ch_state) = carry
+                sel, ks, pub, bat, ch_xs = xs
                 lora = jax.tree.map(lambda x: x[sel], fleet_lora)
                 opt = jax.tree.map(lambda x: x[sel], fleet_opt)
                 # one shared W' broadcasts into the cohort; per-client
@@ -923,17 +967,31 @@ class FusedE2EEngine(_ServerOwnerMixin, FusedEngine):
                         frz if shared else jax.tree.map(lambda x: x[0], frz),
                         ev_tokens, ev_labels,
                     )
+                if has_chan:
+                    # channel state advances as scan carry; the realised
+                    # cohort SNR/outage are tapped as scanned outputs
+                    ch_z, ch_bad = ch_state
+                    w_t, u_t, base_t = ch_xs
+                    ch_z, ch_bad, snr = chan_step(
+                        ch_z, ch_bad, w_t, u_t, base_t, rho, p_gb, p_bg, fade
+                    )
+                    ch_state = (ch_z, ch_bad)
+                    tap["snr_db"] = snr[sel[:n_real]]
+                    tap["outage"] = ch_bad[sel[:n_real]]
                 carry = (
                     fleet_lora, fleet_opt, s_lora, s_opt,
                     pub, b_logits, b_h if has_h else g_h, jnp.ones((), bool),
+                    ch_state,
                 )
                 return carry, tap
 
+            ch_state0 = (ch_z0, ch_bad0) if has_chan else ()
+            ch_xs_all = (ch_w, ch_u, ch_base) if has_chan else ()
             carry, taps = jax.lax.scan(
                 body,
                 (fleet_lora, fleet_opt, s_lora, s_opt,
-                 g_tokens, g_logits, g_h, g_valid),
-                (sels, kss, pubs, batches),
+                 g_tokens, g_logits, g_h, g_valid, ch_state0),
+                (sels, kss, pubs, batches, ch_xs_all),
                 length=num_rounds,
             )
             return carry, taps
@@ -952,9 +1010,19 @@ class FusedE2EEngine(_ServerOwnerMixin, FusedEngine):
         send_h: bool,
         eval_tokens: jax.Array | None = None,
         eval_labels: jax.Array | None = None,
+        channel_scan: dict | None = None,
     ) -> "RoundsTrajectory":
         """Run R whole federated rounds as ONE compiled ``lax.scan`` — the
         steady-state amortised driver (dispatch cost O(1) for the block).
+
+        ``channel_scan`` (a :meth:`ChannelSimulator.scan_channel_inputs`
+        dict) additionally evolves the scenario channel state — AR(1)
+        fading ``z``, Gilbert-Elliott outage — INSIDE the scan as carry,
+        with every dynamics parameter an f32 data operand: one executable
+        serves all scenario presets (``rho = 0`` replays i.i.d.).  The
+        per-round realised cohort SNR/outage come back as scanned outputs
+        (``RoundsTrajectory.snr_db``/``outage``); budgets stay host-side
+        scalar math, priced from the same (seed, round, cid)-keyed chain.
 
         Per-round cohort selection/channel budgets stay host-side scalar
         math (ledger parity with the round-at-a-time path); the per-round
@@ -976,12 +1044,15 @@ class FusedE2EEngine(_ServerOwnerMixin, FusedEngine):
         if (eval_tokens is None) != (eval_labels is None):
             raise ValueError("pass eval_tokens and eval_labels together")
         has_eval = eval_tokens is not None
+        has_chan = channel_scan is not None
         num_rounds = len(sels)
         if num_rounds == 0:  # degenerate no-op, like zero host-loop rounds
             return RoundsTrajectory(
                 ks=[], payloads=[], mean_k=[], distill_loss=[],
                 server_acc=[] if has_eval else None,
                 client_acc=[] if has_eval else None,
+                snr_db=[] if has_chan else None,
+                outage=[] if has_chan else None,
             )
         n_samples = int(pubs[0].shape[0])
         n_real = len(sels[0])
@@ -1034,20 +1105,27 @@ class FusedE2EEngine(_ServerOwnerMixin, FusedEngine):
             eval_args = (
                 jnp.asarray(eval_tokens[:seen]), jnp.asarray(eval_labels[:seen])
             )
-        driver = self._rounds_driver(k_cap, send_h, num_rounds, n_real, has_eval)
+        chan_ops = _channel_scan_ops(channel_scan, num_rounds) if has_chan else ()
+        driver = self._rounds_driver(
+            k_cap, send_h, num_rounds, n_real, has_eval, has_chan
+        )
         carry, taps = driver(
             self._lora, self._opt, self._s_lora, self._s_opt,
             self._frozen, self._s_frozen,
             g_tokens, g_logits, g_h, jnp.asarray(g_valid),
-            sels_arr, kss_arr, pubs_arr, batches, *eval_args,
+            sels_arr, kss_arr, pubs_arr, batches, chan_ops, *eval_args,
         )
         (self._lora, self._opt, self._s_lora, self._s_opt,
-         self._b_tokens, self._b_logits, self._b_h, _valid) = carry
+         self._b_tokens, self._b_logits, self._b_h, _valid, _chan) = carry
         self._d_loss = taps["distill_loss"][-1]
 
         def _tolist(name):
             return [float(x) for x in np.asarray(taps[name])]
 
+        snr_db = outage = None
+        if has_chan:
+            snr_db = [[float(x) for x in row] for row in np.asarray(taps["snr_db"])]
+            outage = [[bool(x) for x in row] for row in np.asarray(taps["outage"])]
         return RoundsTrajectory(
             ks=all_ks,
             payloads=all_payloads,
@@ -1055,6 +1133,8 @@ class FusedE2EEngine(_ServerOwnerMixin, FusedEngine):
             distill_loss=_tolist("distill_loss"),
             server_acc=_tolist("server_acc") if has_eval else None,
             client_acc=_tolist("client_acc") if has_eval else None,
+            snr_db=snr_db,
+            outage=outage,
         )
 
 
@@ -1378,11 +1458,12 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
     # -- R heterogeneous rounds as ONE compiled lax.scan ------------------
     def _hetero_rounds_driver(
         self, k_cap: int, send_h: bool, num_rounds: int, n_real: int,
-        caps: tuple[int, ...], has_eval: bool,
+        caps: tuple[int, ...], has_eval: bool, has_chan: bool,
     ):
-        key = (k_cap, send_h, num_rounds, n_real, caps, has_eval)
+        key = (k_cap, send_h, num_rounds, n_real, caps, has_eval, has_chan)
         if key in self._drivers:
             return self._drivers[key]
+        chan_step = fed_steps.make_channel_step_fn() if has_chan else None
         fns = [self._client_phase_fn(bi, k_cap) for bi in range(len(self.buckets))]
         server_fn = fed_steps.make_server_phase_fn(
             self.server.cfg, send_h=send_h, **self._server_kwargs
@@ -1403,11 +1484,15 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
         def driver(fleet_loras, fleet_opts, s_lora, s_opt, frozens, s_frozen,
                    g_tokens, g_logits, g_h, g_valid,
                    gathers, scatters, kss_b, batches_b, kss_all, pubs,
-                   *eval_args):
+                   chan, *eval_args):
+            if has_chan:
+                (ch_z0, ch_bad0, ch_w, ch_u, ch_base,
+                 rho, p_gb, p_bg, fade, sels_data) = chan
+
             def body(carry, xs):
                 (fleet_loras, fleet_opts, s_lora, s_opt,
-                 g_tokens, g_logits, g_h, g_valid) = carry
-                gath, scat, ksb, bat, ks_all, pub = xs
+                 g_tokens, g_logits, g_h, g_valid, ch_state) = carry
+                gath, scat, ksb, bat, ks_all, pub, ch_xs = xs
                 vs, idxs, ms, scs, hs = [], [], [], [], []
                 new_loras, new_opts = [], []
                 for f, fn in enumerate(fns):
@@ -1475,17 +1560,32 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
                         )
                         fam.append(family_evals[f](lf, ff, ev_tokens, ev_labels))
                     tap["family_client_acc"] = jnp.stack(fam)
+                if has_chan:
+                    # hetero cohorts are bucket-local in-program; the global
+                    # cohort ids ride along as data purely for the tap gather
+                    ch_z, ch_bad = ch_state
+                    w_t, u_t, base_t, sel_real = ch_xs
+                    ch_z, ch_bad, snr = chan_step(
+                        ch_z, ch_bad, w_t, u_t, base_t, rho, p_gb, p_bg, fade
+                    )
+                    ch_state = (ch_z, ch_bad)
+                    tap["snr_db"] = snr[sel_real]
+                    tap["outage"] = ch_bad[sel_real]
                 carry = (
                     tuple(new_loras), tuple(new_opts), s_lora, s_opt,
                     pub, b_logits, b_h if has_h else g_h, jnp.ones((), bool),
+                    ch_state,
                 )
                 return carry, tap
 
+            ch_state0 = (ch_z0, ch_bad0) if has_chan else ()
+            ch_xs_all = (ch_w, ch_u, ch_base, sels_data) if has_chan else ()
             carry, taps = jax.lax.scan(
                 body,
                 (fleet_loras, fleet_opts, s_lora, s_opt,
-                 g_tokens, g_logits, g_h, g_valid),
-                (gathers, scatters, kss_b, batches_b, kss_all, pubs),
+                 g_tokens, g_logits, g_h, g_valid, ch_state0),
+                (gathers, scatters, kss_b, batches_b, kss_all, pubs,
+                 ch_xs_all),
                 length=num_rounds,
             )
             return carry, taps
@@ -1504,8 +1604,15 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
         send_h: bool,
         eval_tokens: jax.Array | None = None,
         eval_labels: jax.Array | None = None,
+        channel_scan: dict | None = None,
     ) -> RoundsTrajectory:
         """Run R whole heterogeneous rounds as ONE compiled ``lax.scan``.
+
+        ``channel_scan`` evolves the scenario channel state inside the scan
+        exactly as on the homogeneous path (see
+        :meth:`FusedE2EEngine.run_rounds`); the global cohort ids ride
+        along as data so the per-round SNR/outage tap can gather the
+        fleet-wide realisation into cohort order.
 
         Family participation varies per round, but every compiled shape is
         static: each bucket is padded to its block-wide maximum cohort slice
@@ -1524,6 +1631,7 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
         if (eval_tokens is None) != (eval_labels is None):
             raise ValueError("pass eval_tokens and eval_labels together")
         has_eval = eval_tokens is not None
+        has_chan = channel_scan is not None
         num_rounds = len(sels)
         if num_rounds == 0:
             return RoundsTrajectory(
@@ -1531,6 +1639,8 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
                 server_acc=[] if has_eval else None,
                 client_acc=[] if has_eval else None,
                 family_client_acc=[] if has_eval else None,
+                snr_db=[] if has_chan else None,
+                outage=[] if has_chan else None,
             )
         n_samples = int(pubs[0].shape[0])
         n_real = len(sels[0])
@@ -1662,18 +1772,23 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
                 jnp.asarray(eval_tokens[:seen]), jnp.asarray(eval_labels[:seen])
             )
 
+        chan_ops = ()
+        if has_chan:
+            chan_ops = _channel_scan_ops(channel_scan, num_rounds) + (
+                jnp.asarray(np.asarray(sels), jnp.int32),  # (R, n_real)
+            )
         driver = self._hetero_rounds_driver(
-            k_cap, send_h, num_rounds, n_real, caps, has_eval
+            k_cap, send_h, num_rounds, n_real, caps, has_eval, has_chan
         )
         carry, taps = driver(
             tuple(fleet_loras), tuple(fleet_opts),
             self._s_lora, self._s_opt, tuple(frozens), self._s_frozen,
             g_tokens, g_logits, g_h, jnp.asarray(g_valid),
             tuple(gathers), tuple(scatters), tuple(kss_b), tuple(batches_b),
-            kss_all, pubs_arr, *eval_args,
+            kss_all, pubs_arr, chan_ops, *eval_args,
         )
         (out_loras, out_opts, self._s_lora, self._s_opt,
-         self._b_tokens, self._b_logits, self._b_h, _valid) = carry
+         self._b_tokens, self._b_logits, self._b_h, _valid, _chan) = carry
         for be, lora, opt in zip(self._b, out_loras, out_opts):
             n = jax.tree.leaves(be._lora)[0].shape[0]
             be._lora = jax.tree.map(lambda x: x[:n], lora)
@@ -1690,6 +1805,10 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
             client_acc = [
                 family_acc[r][first_bucket[r]] for r in range(num_rounds)
             ]
+        snr_db = outage = None
+        if has_chan:
+            snr_db = [[float(x) for x in row] for row in np.asarray(taps["snr_db"])]
+            outage = [[bool(x) for x in row] for row in np.asarray(taps["outage"])]
         return RoundsTrajectory(
             ks=all_ks,
             payloads=all_payloads,
@@ -1698,6 +1817,8 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
             server_acc=_tolist("server_acc") if has_eval else None,
             client_acc=client_acc,
             family_client_acc=family_acc,
+            snr_db=snr_db,
+            outage=outage,
         )
 
     @staticmethod

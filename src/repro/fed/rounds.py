@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.channel import ChannelConfig, ChannelSimulator
+from repro.core.scenario import ScenarioConfig, get_scenario
 from repro.core.protocol import CommLedger, RoundStats, downlink_bits
 from repro.data.partition import dirichlet_partition, iid_partition, split_public_private
 from repro.data.synthetic import IntentDataset
@@ -103,6 +104,14 @@ class FedConfig:
     # differentiated loss, so grads accumulate back to fp32 before AdamW).
     compute_dtype: str = "float32"
     channel: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
+    # Channel-dynamics scenario: a repro.core.scenario preset name
+    # ("iid" | "gauss_markov" | "jakes" | "gilbert_elliott" | "mobility"),
+    # a ScenarioConfig, or None (i.i.d., bit-identical to the pre-scenario
+    # simulator).  When set it overrides ``channel.scenario``; with
+    # scan_rounds the channel state additionally evolves INSIDE the
+    # compiled multi-round scan (one executable for every scenario) and
+    # the per-round realised SNR/outage come back in FedRun.
+    scenario: "str | ScenarioConfig | None" = None
     # Backbone pretraining (simulates the paper's pretrained GPT-2 W'; the
     # pretrain split is disjoint from public/private/eval).  0 disables.
     # Clients: supervised (they fine-tune on labelled shards anyway);
@@ -131,6 +140,10 @@ class FedRun:
     # Heterogeneous scan runs only: per-round accuracy per family bucket
     # (fleet bucket order) from the in-scan eval tap.
     family_client_acc: list[list[float]] | None = None
+    # Scenario scan runs only: per-round cohort realised SNR (dB, -inf in
+    # outage) and outage flags from the in-scan channel tap.
+    snr_db: list[list[float]] | None = None
+    outage: list[list[bool]] | None = None
 
     def summary(self) -> dict:
         return {
@@ -236,7 +249,12 @@ def run_federated(
         last_only=fed.last_only,
         initial_params=server_init,
     )
-    chan_sim = ChannelSimulator(fed.num_clients, fed.channel, seed=fed.seed)
+    channel_cfg = fed.channel
+    if fed.scenario is not None:
+        channel_cfg = dataclasses.replace(
+            channel_cfg, scenario=get_scenario(fed.scenario)
+        )
+    chan_sim = ChannelSimulator(fed.num_clients, channel_cfg, seed=fed.seed)
 
     # held-out eval split (from the private pool tail, disjoint from clients'
     # data only in expectation at reduced scale; standard FedD evaluation)
@@ -317,13 +335,20 @@ def run_federated(
                 eval_tokens=jnp.asarray(eval_tokens[:seen]),
                 eval_labels=jnp.asarray(eval_labels[:seen]),
             )
+        chan_kw = {}
+        if chan_sim.scenario is not None:
+            # scenario channel state evolves inside the same compiled scan;
+            # budgets above were priced from the identical host chain
+            chan_kw = dict(channel_scan=chan_sim.scan_channel_inputs(fed.rounds))
         traj = engine.run_rounds(
             sels, pubs, states_list,
             adaptive_k=preset["adaptive_k"], send_h=preset["send_h"],
-            **eval_kw,
+            **eval_kw, **chan_kw,
         )
         engine.sync_server()
         run.family_client_acc = traj.family_client_acc
+        run.snr_db = traj.snr_db
+        run.outage = traj.outage
         b_rank = server_cfg.lora.rank if server_cfg.lora is not None else None
         b_bits = downlink_bits(fed.public_batch, server_cfg.vocab_size, b_rank)
         for rnd in range(fed.rounds):

@@ -45,6 +45,7 @@ __all__ = [
     "make_fused_e2e_round_fn",
     "make_eval_fn",
     "make_scan_eval_fn",
+    "make_channel_step_fn",
     "init_lora_opt",
 ]
 
@@ -998,3 +999,37 @@ def make_eval_fn(
         return correct / max(1, seen)
 
     return evaluate
+
+
+def make_channel_step_fn() -> Callable:
+    """One in-scan channel-dynamics step (``repro.core.scenario`` replica).
+
+    channel_step(z, bad, w, u, base_snr_db, rho, p_gb, p_bg, fade_scale)
+        -> (z', bad', snr_db)
+
+    Pure jnp, traced into the multi-round scan body: the AR(1) fading carry
+    ``z`` and Gilbert-Elliott outage carry ``bad`` evolve from the host's
+    precomputed copula normals ``w`` and outage uniforms ``u``
+    (:meth:`repro.core.channel.ChannelSimulator.scan_channel_inputs`).  All
+    scenario parameters are f32 DATA operands — ``rho = 0`` replays the
+    i.i.d. channel, ``fade_scale = 0`` a fading-free one, the
+    i.i.d.-equivalent ``(p_gb, p_bg)`` a memoryless dropout coin — so ONE
+    compiled executable serves every scenario preset.
+
+    This is the observability replica of the host-side f64 realisation
+    (the k/byte budgets stay host-side scalar math, ledger-exact); it taps
+    each round's realised SNR/outage into the trajectory.  f32 recursion
+    tracks the f64 chain to ~1e-2 dB over a scan block (the AR(1) map is
+    contracting, so rounding does not accumulate).
+    """
+
+    def channel_step(z, bad, w, u, base_snr_db, rho, p_gb, p_bg, fade_scale):
+        z = rho * z + jnp.sqrt(jnp.maximum(1.0 - rho * rho, 0.0)) * w
+        u_fade = jnp.clip(jax.scipy.special.ndtr(z), 1e-7, 1.0 - 1e-7)
+        power = -jnp.log1p(-u_fade)
+        fade_db = 10.0 * jnp.log10(jnp.maximum(power, 1e-6))
+        bad = jnp.where(bad, u < 1.0 - p_bg, u < p_gb)
+        snr_db = jnp.where(bad, -jnp.inf, base_snr_db + fade_scale * fade_db)
+        return z, bad, snr_db
+
+    return channel_step

@@ -94,6 +94,12 @@ def main(argv=None) -> int:
                     default="float32",
                     help="fused engines: round-body compute dtype; fp32 "
                          "master LoRA/optimizer state is kept either way")
+    ap.add_argument("--scenario", default=None,
+                    help="channel-dynamics preset from repro.core.scenario "
+                         "(iid | gauss_markov | jakes | gilbert_elliott | "
+                         "mobility): time-correlated fading / bursty outage "
+                         "/ mobility trajectories.  Default: the i.i.d. "
+                         "per-round channel")
     ap.add_argument("--public-batch", type=int, default=128)
     ap.add_argument("--out", default="experiments/fed")
     args = ap.parse_args(argv)
@@ -121,6 +127,7 @@ def main(argv=None) -> int:
         last_only=not args.full_head,
         shard_clients=args.shard_clients,
         scan_rounds=args.scan_rounds,
+        scenario=args.scenario,
     )
     run = run_federated(client_cfg, REDUCED_SERVER, ds, fed, verbose=True)
 
@@ -129,6 +136,13 @@ def main(argv=None) -> int:
         "method": args.method,
         "families": args.families,
         "family_client_acc": run.family_client_acc,
+        "scenario": args.scenario,
+        # scenario scan runs only: the in-scan channel tap (-inf SNR in
+        # outage is not valid JSON; clamp to a sentinel)
+        "snr_db": None if run.snr_db is None else [
+            [x if math.isfinite(x) else -1e9 for x in row] for row in run.snr_db
+        ],
+        "outage": run.outage,
         "fed": {k: v for k, v in dataclasses.asdict(fed).items() if not isinstance(v, dict)},
         "server_acc": run.server_acc,
         "client_acc": run.client_acc,

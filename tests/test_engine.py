@@ -802,3 +802,68 @@ def test_e2e_dequant_fused_aggregation_never_densifies_stack():
         worst = max_intermediate_elems(jaxpr)
         assert worst < n * rows * vocab, use_kernel
         assert worst <= rows * vocab, use_kernel
+
+
+# ---- PR 7: correlated-channel scenarios -----------------------------------
+
+
+def test_four_way_engine_parity_correlated_scenario():
+    """sequential/batched/fused/fused_e2e under a gauss_markov correlated
+    channel with min_k=0 + memoryless outage (so straggler k=0 rounds
+    occur): identical per-client adaptive k and ledger bytes, 1e-6
+    accuracies.  The correlated budgets stay host-side scalar math shared
+    by every engine, so correlation cannot split the engines."""
+    ds = _dataset()
+    chan = ChannelConfig(
+        bandwidth_hz=2e5, mean_snr_db=2.0, min_k=0, dropout_prob=0.25
+    )
+    runs = {
+        e: run_federated(
+            CLIENT, SERVER, ds,
+            _cfg(e, channel=chan, rounds=3, scenario="gauss_markov"),
+        )
+        for e in ("sequential", "batched", "fused", "fused_e2e")
+    }
+    ref = runs["sequential"]
+    # the constrained correlated channel must actually produce stragglers
+    assert any(k == 0 for ks in ref.per_client_k for k in ks)
+    for name, run in runs.items():
+        assert run.per_client_k == ref.per_client_k, name
+        for a, b in zip(ref.ledger.rounds, run.ledger.rounds):
+            assert a.uplink_bytes == b.uplink_bytes, name
+            assert a.downlink_bytes == b.downlink_bytes, name
+            assert a.num_transmitters == b.num_transmitters, name
+        np.testing.assert_allclose(run.server_acc, ref.server_acc, atol=1e-6)
+        np.testing.assert_allclose(run.client_acc, ref.client_acc, atol=1e-6)
+
+
+def test_scan_rounds_correlated_matches_per_round_fedrun():
+    """scan_rounds under a jakes scenario: the one-dispatch scan (channel
+    state as carry) reproduces the per-round fused_e2e host loop's k/bytes
+    bit-for-bit and accuracies at 1e-6, and only the scan exposes the
+    in-scan (snr_db, outage) channel tap."""
+    ds = _dataset()
+    chan = ChannelConfig(
+        bandwidth_hz=2e5, mean_snr_db=2.0, min_k=0, dropout_prob=0.25
+    )
+    kw = dict(channel=chan, rounds=3, scenario="jakes", pretrain_steps=0)
+    loop = run_federated(CLIENT, SERVER, ds, _cfg("fused_e2e", **kw))
+    scan = run_federated(
+        CLIENT, SERVER, ds, _cfg("fused_e2e", scan_rounds=True, **kw)
+    )
+    assert loop.per_client_k == scan.per_client_k
+    for a, b in zip(loop.ledger.rounds, scan.ledger.rounds):
+        assert a.uplink_bytes == b.uplink_bytes
+        assert a.downlink_bytes == b.downlink_bytes
+        assert a.num_transmitters == b.num_transmitters
+    np.testing.assert_allclose(loop.server_acc, scan.server_acc, atol=1e-6)
+    np.testing.assert_allclose(loop.client_acc, scan.client_acc, atol=1e-6)
+    # the tap is scan-only, shaped (rounds, cohort), outage <-> k == 0 of a
+    # client whose budget was killed by -inf SNR
+    assert loop.snr_db is None and loop.outage is None
+    assert len(scan.snr_db) == 3 and len(scan.outage) == 3
+    for ks, out in zip(scan.per_client_k, scan.outage):
+        assert len(out) == len(ks)
+        for k, o in zip(ks, out):
+            if o:
+                assert k == 0

@@ -287,3 +287,40 @@ def test_channel_budgets_differ_per_client(hetero_round):
     )
     tight = chan.topk_for(0, [0, 1, 2], vocab_size=VOCAB, num_samples=32)
     assert len(set(tight)) > 1  # different fades -> different adaptive k
+
+
+# ---- PR 7: correlated-channel scenarios -----------------------------------
+
+
+def test_hetero_parity_correlated_scenario():
+    """The family-bucketed engines reproduce the sequential reference on a
+    mixed dense+SSM fleet under a gauss_markov correlated channel with
+    outage-driven k=0 stragglers; the hetero multi-round scan carries the
+    channel state too and exposes the in-scan tap."""
+    ds = _dataset()
+    chan = ChannelConfig(
+        bandwidth_hz=2e5, mean_snr_db=2.0, min_k=0, dropout_prob=0.25
+    )
+    kw = dict(channel=chan, rounds=3, scenario="gauss_markov")
+    seq = run_federated(FAMILIES, H_SERVER, ds, _cfg("sequential", **kw))
+    assert any(k == 0 for ks in seq.per_client_k for k in ks)
+    for engine in ("batched", "fused_e2e"):
+        oth = run_federated(FAMILIES, H_SERVER, ds, _cfg(engine, **kw))
+        assert oth.per_client_k == seq.per_client_k, engine
+        for a, b in zip(seq.ledger.rounds, oth.ledger.rounds):
+            assert a.uplink_bytes == b.uplink_bytes, engine
+            assert a.num_transmitters == b.num_transmitters, engine
+        np.testing.assert_allclose(oth.server_acc, seq.server_acc, atol=1e-6)
+        np.testing.assert_allclose(oth.client_acc, seq.client_acc, atol=1e-6)
+    scan = run_federated(
+        FAMILIES, H_SERVER, ds, _cfg("fused_e2e", scan_rounds=True, **kw)
+    )
+    assert scan.per_client_k == seq.per_client_k
+    for a, b in zip(seq.ledger.rounds, scan.ledger.rounds):
+        assert a.uplink_bytes == b.uplink_bytes
+    np.testing.assert_allclose(scan.server_acc, seq.server_acc, atol=1e-6)
+    assert len(scan.outage) == 3
+    for ks, out in zip(scan.per_client_k, scan.outage):
+        for k, o in zip(ks, out):
+            if o:
+                assert k == 0
