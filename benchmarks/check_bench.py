@@ -33,11 +33,21 @@ committed record's leading rounds byte-for-byte (a payload-bytes regression
 gate; an intentional format change must refresh BENCH_scenario.json in the
 same PR).
 
+The PR-8 fault record (BENCH_faults, written by examples/fault_suite.py) is
+gated too (see ``check_faults``): the ``none`` preset must stay
+bit-identical to a run with no faults configured at all (both records), the
+committed ``corruption`` run must actually engage (quarantined uploads > 0
+with retransmission bytes on the ledger), the ``crashes`` run must crash
+someone, and — fault draws being keyed per (seed, domain, round, cid) — the
+quick run's per-round uplink bytes and quarantine counts must equal the
+committed record's leading rounds exactly.
+
 Run (CI does exactly this):
 
     python benchmarks/engine_bench.py --quick --round-only
     python benchmarks/engine_bench.py --quick --quant-only
     PYTHONPATH=src python examples/scenario_suite.py --quick
+    PYTHONPATH=src python examples/fault_suite.py --quick
     python benchmarks/check_bench.py
 
 Pure stdlib; exits non-zero with a one-line reason per failed check.
@@ -225,6 +235,91 @@ def check_scenario(fresh: dict, committed: dict) -> list[str]:
     return failures
 
 
+_FAULT_PRESETS = ("none", "corruption", "crashes", "bursty", "lossy")
+
+
+def check_faults(fresh: dict, committed: dict) -> list[str]:
+    """Gate on the fault-suite records (fresh quick run vs the committed
+    full one):
+
+    1. every preset's curves are present and well-formed in BOTH records;
+    2. ``no_fault_bit_identical`` true in BOTH — the ``none`` preset stayed
+       indistinguishable from a run with no fault machinery configured;
+    3. the committed ``corruption`` run actually engaged: quarantined
+       uploads > 0 AND retransmission bytes > 0 on the ledger; the
+       committed ``crashes`` run crashed someone;
+    4. determinism prefix: fault draws are keyed per (seed, domain, round,
+       cid), so each fresh round's uplink bytes and quarantine/crash counts
+       must EQUAL the committed record's same-round values, per preset.
+    """
+    failures = []
+
+    for label, record in (("fresh", fresh), ("committed", committed)):
+        presets = record.get("presets", {})
+        missing = [p for p in _FAULT_PRESETS if p not in presets]
+        if missing:
+            failures.append(f"[faults-{label}] missing presets: {missing}")
+            continue
+        for name in _FAULT_PRESETS:
+            s = presets[name]
+            acc = s.get("server_acc") or []
+            raw = s.get("uplink_bytes") or []
+            if not acc or len(acc) != len(raw):
+                failures.append(
+                    f"[faults-{label}] {name}: malformed curves "
+                    f"(len acc={len(acc)}, bytes={len(raw)})"
+                )
+        if record.get("no_fault_bit_identical") is not True:
+            failures.append(
+                f"[faults-{label}] no_fault_bit_identical is not true: the "
+                "'none' preset diverged from a run with no fault machinery"
+            )
+
+    corr = committed.get("presets", {}).get("corruption", {})
+    if not sum(corr.get("num_quarantined") or [0]) > 0:
+        failures.append(
+            "[faults-committed] corruption preset never quarantined an "
+            "upload: the fault injection is not engaging"
+        )
+    if not sum(corr.get("retrans_bytes") or [0.0]) > 0.0:
+        failures.append(
+            "[faults-committed] corruption preset shows no retransmission "
+            "bytes: HARQ retries are not reaching the ledger"
+        )
+    crashes = committed.get("presets", {}).get("crashes", {})
+    if not sum(crashes.get("num_crashed") or [0]) > 0:
+        failures.append(
+            "[faults-committed] crashes preset never crashed a client"
+        )
+
+    for name in _FAULT_PRESETS:
+        fp = fresh.get("presets", {}).get(name, {})
+        cp = committed.get("presets", {}).get(name, {})
+        for field in ("uplink_bytes", "num_quarantined", "num_crashed"):
+            fv = fp.get(field)
+            cv = cp.get(field)
+            if fv is None or cv is None:
+                continue  # taps absent for the disabled 'none' preset
+            if len(fv) > len(cv):
+                failures.append(
+                    f"[faults] {name}: fresh run has more rounds "
+                    f"({len(fv)}) than the committed record ({len(cv)})"
+                )
+                break
+            for r, (f_val, c_val) in enumerate(zip(fv, cv)):
+                if f_val != c_val:
+                    failures.append(
+                        f"[faults] {name} round {r}: {field} diverged from "
+                        f"the committed record ({f_val} != {c_val}) — fault "
+                        "realisations are keyed, so this is a determinism "
+                        "or accounting regression; an intentional change "
+                        "must refresh BENCH_faults.json in this PR"
+                    )
+                    break
+
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument(
@@ -262,6 +357,16 @@ def main(argv=None) -> int:
         default=os.path.join(_REPO_ROOT, "BENCH_scenario.json"),
         help="the committed full-size scenario reference record",
     )
+    ap.add_argument(
+        "--faults-fresh",
+        default=os.path.join(_REPO_ROOT, "BENCH_faults.quick.json"),
+        help="fault record written by the quick suite run just executed",
+    )
+    ap.add_argument(
+        "--faults-committed",
+        default=os.path.join(_REPO_ROOT, "BENCH_faults.json"),
+        help="the committed full-size fault reference record",
+    )
     args = ap.parse_args(argv)
 
     for path in (args.fresh, args.committed):
@@ -279,6 +384,11 @@ def main(argv=None) -> int:
             print(f"[check_bench] FAIL: {path} does not exist "
                   "(run examples/scenario_suite.py --quick first)")
             return 2
+    for path in (args.faults_fresh, args.faults_committed):
+        if not os.path.exists(path):
+            print(f"[check_bench] FAIL: {path} does not exist "
+                  "(run examples/fault_suite.py --quick first)")
+            return 2
     with open(args.fresh) as f:
         fresh = json.load(f)
     with open(args.committed) as f:
@@ -291,11 +401,16 @@ def main(argv=None) -> int:
         scenario_fresh = json.load(f)
     with open(args.scenario_committed) as f:
         scenario_committed = json.load(f)
+    with open(args.faults_fresh) as f:
+        faults_fresh = json.load(f)
+    with open(args.faults_committed) as f:
+        faults_committed = json.load(f)
 
     failures = check(fresh, committed, min_speedup=args.min_speedup)
     failures += check_quant(quant_fresh, "quant-fresh")
     failures += check_quant(quant_committed, "quant-committed")
     failures += check_scenario(scenario_fresh, scenario_committed)
+    failures += check_faults(faults_fresh, faults_committed)
     if failures:
         for msg in failures:
             print(f"[check_bench] FAIL: {msg}")
@@ -311,7 +426,10 @@ def main(argv=None) -> int:
         f"{quant_fresh['equal_shape']['float_uplink_bytes']}, mean-k ratio "
         f"{quant_fresh['speedups']['quant_vs_float_mean_k']}x >= 1x; "
         f"scenario gate: {len(_SCENARIO_PRESETS)} preset curves well-formed, "
-        "iid bit-identical to legacy, no per-round uplink-bytes regression"
+        "iid bit-identical to legacy, no per-round uplink-bytes regression; "
+        f"fault gate: {len(_FAULT_PRESETS)} presets, none bit-identical to "
+        "fault-free, corruption quarantines with retrans bytes on the "
+        "ledger, per-round realisations match the committed record"
     )
     return 0
 

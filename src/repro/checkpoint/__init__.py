@@ -1,3 +1,17 @@
-from repro.checkpoint.ckpt import latest_step, restore, restore_step, save, save_step
+from repro.checkpoint.ckpt import (
+    latest_step,
+    restore,
+    restore_step,
+    save,
+    save_step,
+    step_metadata,
+)
 
-__all__ = ["latest_step", "restore", "restore_step", "save", "save_step"]
+__all__ = [
+    "latest_step",
+    "restore",
+    "restore_step",
+    "save",
+    "save_step",
+    "step_metadata",
+]

@@ -3,6 +3,14 @@
 Good enough for single-host CPU runs and tests; on a real pod this module
 would be swapped for a tensorstore-backed async writer, but the API
 (save/restore/latest) is the deployment-shaped one.
+
+Crash-safety contract (PR 8): :func:`save` is ATOMIC — the arrays and the
+metadata sidecar are written to temp files in the target directory and
+``os.replace``d into place, so a process killed mid-save can never leave a
+truncated "latest" checkpoint under the final name.  :func:`latest_step`
+additionally verifies candidates are readable zip archives and skips
+partially-written/unparseable entries (e.g. leftovers from a pre-atomic
+writer or a torn copy), so resume always lands on a loadable step.
 """
 
 from __future__ import annotations
@@ -10,12 +18,20 @@ from __future__ import annotations
 import json
 import os
 import re
+import zipfile
 from typing import Any
 
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "save_step", "restore_step"]
+__all__ = [
+    "save",
+    "restore",
+    "latest_step",
+    "save_step",
+    "restore_step",
+    "step_metadata",
+]
 
 _SEP = "__"
 
@@ -39,16 +55,44 @@ def _path_str(p) -> str:
 
 
 def save(path: str, tree: Any, *, metadata: dict | None = None) -> None:
+    """Atomically write ``tree`` (and optional JSON ``metadata`` sidecar).
+
+    Both files are staged as temporaries in the destination directory and
+    moved into place with ``os.replace`` (atomic within a filesystem), the
+    arrays FIRST: a crash between the two replaces leaves a valid array
+    file with a stale/absent sidecar, never a torn one.
+    """
+    if not path.endswith(".npz"):
+        path = path + ".npz"
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
-    np.savez(path, **flat)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)  # a file OBJECT: savez cannot rename it
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
     if metadata is not None:
-        with open(path + ".meta.json", "w") as f:
-            json.dump(metadata, f)
+        meta_path = path + ".meta.json"
+        tmp = f"{meta_path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(metadata, f)
+            os.replace(tmp, meta_path)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
 
 
 def restore(path: str, like: Any) -> Any:
-    """Restore into the structure of ``like`` (shapes/dtypes preserved)."""
+    """Restore into the structure of ``like`` (shapes/dtypes preserved).
+
+    Raises ``ValueError`` (not a bare ``assert``, which vanishes under
+    ``python -O``) naming the offending key when the checkpoint is missing
+    a leaf or stores one at a different shape than ``like`` expects.
+    """
     if not path.endswith(".npz"):
         path = path + ".npz"
     data = np.load(path)
@@ -56,27 +100,71 @@ def restore(path: str, like: Any) -> Any:
     leaves = []
     for path_keys, leaf in paths:
         key = _SEP.join(_path_str(p) for p in path_keys)
+        if key not in data:
+            raise ValueError(
+                f"checkpoint {path} has no entry for {key!r} — the stored "
+                "tree does not match the requested structure"
+            )
         arr = data[key]
-        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint {path} entry {key!r} has shape {arr.shape}, "
+                f"but the target structure expects {tuple(leaf.shape)}"
+            )
         leaves.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+
+
 def save_step(ckpt_dir: str, step: int, tree: Any, **meta) -> str:
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    path = _step_path(ckpt_dir, step)
     save(path, tree, metadata={"step": step, **meta})
     return path
 
 
 def latest_step(ckpt_dir: str) -> int | None:
+    """Newest VALID step in ``ckpt_dir`` (None when there is none).
+
+    A candidate must both match the ``step_NNNNNNNN.npz`` name and be a
+    readable zip archive — a truncated or corrupt file (crash mid-copy,
+    disk-full tail) is skipped so resume falls back to the newest loadable
+    step instead of dying on ``np.load``.
+    """
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [
-        int(m.group(1))
-        for f in os.listdir(ckpt_dir)
-        if (m := re.match(r"step_(\d+)\.npz$", f))
-    ]
-    return max(steps) if steps else None
+    steps = sorted(
+        (
+            int(m.group(1))
+            for f in os.listdir(ckpt_dir)
+            if (m := re.match(r"step_(\d+)\.npz$", f))
+        ),
+        reverse=True,
+    )
+    for step in steps:
+        path = _step_path(ckpt_dir, step)
+        try:
+            if zipfile.is_zipfile(path):
+                return step
+        except OSError:
+            continue
+    return None
+
+
+def step_metadata(ckpt_dir: str, step: int) -> dict | None:
+    """The JSON metadata sidecar saved with ``save_step`` (None when absent
+    or unparseable — metadata is advisory, a torn sidecar must not block a
+    restore of the arrays)."""
+    path = _step_path(ckpt_dir, step) + ".meta.json"
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
 
 
 def restore_step(ckpt_dir: str, like: Any, step: int | None = None) -> tuple[Any, int]:
@@ -84,5 +172,4 @@ def restore_step(ckpt_dir: str, like: Any, step: int | None = None) -> tuple[Any
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
-    return restore(path, like), step
+    return restore(_step_path(ckpt_dir, step), like), step

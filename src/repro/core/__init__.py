@@ -4,6 +4,7 @@ Public API:
   channel     — Shannon-capacity byte budgets (paper eq. 5, §III-A)
   scenario    — time-correlated channel dynamics (Gauss-Markov / Jakes
                 fading, Gilbert-Elliott outage, mobility trajectories)
+  faults      — fault injection, wire quarantine, HARQ retransmission
   topk        — adaptive Top-k sparsification (eqs. 3-4)
   aggregation — adaptive / zeropad / mean aggregation (eqs. 6-7)
   distill     — logits + LoRA-projection KL losses (eqs. 8-10)
@@ -43,6 +44,18 @@ from repro.core.distill import (
     soft_labels,
     total_distill_loss,
 )
+from repro.core.faults import (
+    FAULTS,
+    FaultCarry,
+    FaultConfig,
+    FaultResolution,
+    FaultSimulator,
+    corrupt_wire,
+    get_faults,
+    quarantine_wire,
+    validate_dense,
+    validate_wire,
+)
 from repro.core.protocol import (
     CommLedger,
     PayloadSpec,
@@ -78,6 +91,16 @@ __all__ = [
     "ScenarioConfig",
     "get_scenario",
     "jakes_rho",
+    "FAULTS",
+    "FaultCarry",
+    "FaultConfig",
+    "FaultResolution",
+    "FaultSimulator",
+    "corrupt_wire",
+    "get_faults",
+    "quarantine_wire",
+    "validate_dense",
+    "validate_wire",
     "DEFAULT_LAMBDA",
     "DEFAULT_TEMPERATURE",
     "kl_divergence",

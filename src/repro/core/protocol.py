@@ -102,15 +102,25 @@ class PayloadSpec:
 @dataclasses.dataclass
 class UplinkPayload:
     """One client's realized upload for a round (arrays live elsewhere;
-    this is the manifest used for accounting)."""
+    this is the manifest used for accounting).
+
+    ``attempts`` is the number of HARQ transmissions actually made (PR 8):
+    every attempt re-spends the full payload on the air, so the ledger
+    bytes are ``attempts * spec.uplink_bytes``.  ``delivered=False`` marks
+    a quarantined upload whose attempts were spent without a usable copy
+    arriving — the bytes still count (they were transmitted), the payload
+    just contributes nothing to aggregation.
+    """
 
     client_id: int
     spec: PayloadSpec
     snr_db: float = float("nan")
+    attempts: int = 1
+    delivered: bool = True
 
     @property
     def bytes(self) -> float:
-        return self.spec.uplink_bytes
+        return self.attempts * self.spec.uplink_bytes
 
 
 @dataclasses.dataclass
@@ -129,6 +139,18 @@ class RoundStats:
     # excluded from aggregation).  None -> engine predates this field.
     num_selected: int | None = None
     num_transmitters: int | None = None
+    # Fault-tolerance taps (PR 8; None/0.0 when fault injection is off).
+    # num_quarantined counts uploads the server rejected (corruption that
+    # exhausted HARQ retries, or wire validation failures) — distinct from
+    # num_crashed, whose uploads never arrived at all.  fault_counts breaks
+    # the losses down per reason ("crash" | "corrupt" | "invalid_wire");
+    # retrans_bytes is the on-air cost beyond each delivered payload's first
+    # copy (HARQ retries + quarantined attempts), already included in
+    # uplink_bytes.
+    num_quarantined: int | None = None
+    num_crashed: int | None = None
+    fault_counts: dict | None = None
+    retrans_bytes: float = 0.0
 
     @property
     def total_bytes(self) -> float:

@@ -75,7 +75,45 @@ __all__ = [
     "make_engine",
     "tree_stack",
     "k_cap_bucket",
+    "cohort_budgets",
 ]
+
+
+def cohort_budgets(
+    states,
+    cfg: ModelConfig,
+    n_samples: int,
+    adaptive_k: bool,
+    n_cohort: int,
+    send_h: bool = False,
+    *,
+    value_bits: int = 16,
+    k_min: int = 1,
+    quantize_wire: bool = False,
+) -> list[int]:
+    """Per-client adaptive k for a cohort — ONE host-side scalar routine
+    shared by every engine (and by the fault layer, which must price
+    attempted uploads with exactly the engines' k math so HARQ retries and
+    quarantine decisions can never drift from what the engine transmits).
+
+    With ``send_h`` the LoRA-projection bits are reserved out of each
+    budget first (see :meth:`repro.fed.client.Client.upload`).  Under
+    ``quantize_wire`` the (value, index) entries are priced at 8 value
+    bits — the same Shannon budget genuinely affords a larger k — while
+    the unquantized projection stays at ``value_bits``.
+    """
+    if not adaptive_k:
+        return [cfg.vocab_size] * n_cohort
+    reserved = (
+        lora_projection_bits(n_samples, cfg.lora.rank, value_bits)
+        if (send_h and cfg.lora is not None)
+        else 0
+    )
+    wire_bits = 8 if quantize_wire else value_bits
+    return topk_budget_batch(
+        states, vocab_size=cfg.vocab_size, num_samples=n_samples,
+        value_bits=wire_bits, k_min=k_min, reserved_bits=reserved,
+    )
 
 
 def k_cap_bucket(ks: Sequence[int], vocab: int) -> int:
@@ -254,6 +292,21 @@ class SequentialEngine:
         """Current parameters of one client (for evaluation)."""
         return self.clients[cid].params
 
+    def fleet_state(self) -> dict:
+        """The whole fleet's trainable state as one checkpointable pytree.
+        Per-client subtrees (not a stacked axis): the sequential engine
+        serves mixed-architecture fleets natively, so client leaves need
+        not share shapes."""
+        return {
+            f"client{i}": {"params": c.params, "opt": c.opt}
+            for i, c in enumerate(self.clients)
+        }
+
+    def load_fleet_state(self, state: dict) -> None:
+        for i, c in enumerate(self.clients):
+            c.params = jax.tree.map(jnp.asarray, state[f"client{i}"]["params"])
+            c.opt = jax.tree.map(jnp.asarray, state[f"client{i}"]["opt"])
+
     def run_round(
         self,
         sel: Sequence[int],
@@ -368,6 +421,19 @@ class BatchedEngine:
         )
         return merge_lora(lora_i, frozen_i)
 
+    def fleet_state(self) -> dict:
+        """The engine-held fleet state as one checkpointable pytree.  The
+        frozen backbone is included so a restored run never depends on the
+        construction path reproducing it (it does today, but checkpoints
+        should stand alone)."""
+        return {"lora": self._lora, "opt": self._opt, "frozen": self._frozen}
+
+    def load_fleet_state(self, state: dict) -> None:
+        as_jax = lambda tree: jax.tree.map(jnp.asarray, tree)  # noqa: E731
+        self._lora = as_jax(state["lora"])
+        self._opt = as_jax(state["opt"])
+        self._frozen = as_jax(state["frozen"])
+
     # -- round plumbing shared by the batched and fused engines ----------
     def _gather_cohort(self, sel: Sequence[int]):
         """One gather per leaf: the selected cohort's (lora, frozen, opt)."""
@@ -393,24 +459,13 @@ class BatchedEngine:
         self, states, n_samples: int, adaptive_k: bool, n_cohort: int,
         send_h: bool = False,
     ):
-        """Per-client adaptive k — the same host-side scalar math as the
-        sequential reference, so k (and bytes) can never drift.  With
-        ``send_h`` the LoRA-projection bits are reserved out of each budget
-        first (see :meth:`repro.fed.client.Client.upload`).  Under
-        ``quantize_wire`` the (value, index) entries are priced at 8 value
-        bits — the same Shannon budget genuinely affords a larger k — while
-        the unquantized projection stays at ``value_bits``."""
-        if not adaptive_k:
-            return [self.cfg.vocab_size] * n_cohort
-        reserved = (
-            lora_projection_bits(n_samples, self.cfg.lora.rank, self.value_bits)
-            if (send_h and self.cfg.lora is not None)
-            else 0
-        )
-        wire_bits = 8 if self.quantize_wire else self.value_bits
-        return topk_budget_batch(
-            states, vocab_size=self.cfg.vocab_size, num_samples=n_samples,
-            value_bits=wire_bits, k_min=self.k_min, reserved_bits=reserved,
+        """Per-client adaptive k — delegates to the module-level
+        :func:`cohort_budgets` (the same host-side scalar math as the
+        sequential reference, so k and bytes can never drift)."""
+        return cohort_budgets(
+            states, self.cfg, n_samples, adaptive_k, n_cohort, send_h,
+            value_bits=self.value_bits, k_min=self.k_min,
+            quantize_wire=self.quantize_wire,
         )
 
     def _upload_manifests(self, cohort, states, ks, n_samples: int, send_h: bool):
@@ -726,6 +781,28 @@ class _ServerOwnerMixin:
         object (for evaluation / checkpointing)."""
         self.server.params = merge_lora(self._s_lora, self._s_frozen)
         self.server.opt = self._s_opt
+
+    def server_state(self) -> dict:
+        """The engine-held server state as one checkpointable pytree."""
+        return {
+            "s_lora": self._s_lora,
+            "s_frozen": self._s_frozen,
+            "s_opt": self._s_opt,
+        }
+
+    def load_server_state(self, state: dict) -> None:
+        as_jax = lambda tree: jax.tree.map(jnp.asarray, tree)  # noqa: E731
+        self._s_lora = as_jax(state["s_lora"])
+        self._s_frozen = as_jax(state["s_frozen"])
+        self._s_opt = as_jax(state["s_opt"])
+        self.sync_server()
+
+    def load_broadcast(self, tokens, logits, h=None) -> None:
+        """Restore the in-program broadcast carry (the knowledge the NEXT
+        round's cohort distills against) from a checkpoint."""
+        self._b_tokens = jnp.asarray(tokens)
+        self._b_logits = jnp.asarray(logits)
+        self._b_h = None if h is None else jnp.asarray(h)
 
 
 class FusedE2EEngine(_ServerOwnerMixin, FusedEngine):
@@ -1176,6 +1253,13 @@ class HeteroClientEngine:
         bi, local = self._where[int(cid)]
         return self._engines[bi].client_params(local)
 
+    def fleet_state(self) -> dict:
+        return {f"bucket{i}": e.fleet_state() for i, e in enumerate(self._engines)}
+
+    def load_fleet_state(self, state: dict) -> None:
+        for i, e in enumerate(self._engines):
+            e.load_fleet_state(state[f"bucket{i}"])
+
     def run_round(
         self,
         sel: Sequence[int],
@@ -1361,6 +1445,13 @@ class HeteroFusedE2EEngine(_ServerOwnerMixin):
     def client_params(self, cid: int):
         bi, local = self._where[int(cid)]
         return self._b[bi].client_params(local)
+
+    def fleet_state(self) -> dict:
+        return {f"bucket{i}": b.fleet_state() for i, b in enumerate(self._b)}
+
+    def load_fleet_state(self, state: dict) -> None:
+        for i, b in enumerate(self._b):
+            b.load_fleet_state(state[f"bucket{i}"])
 
     # -- one whole heterogeneous round -----------------------------------
     def run_round(

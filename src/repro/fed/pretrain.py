@@ -32,6 +32,18 @@ __all__ = ["pretrain_classifier"]
 _CACHE: dict = {}
 
 
+def _owned(tree):
+    """Deep-copy the leaf buffers of a cached param tree.
+
+    Callers hand pretrained params to engines whose compiled steps DONATE
+    input buffers (fused/fused_e2e); returning the cache's own arrays lets
+    the first donation delete the cached buffers and poison every later
+    run in the process ("buffer has been deleted or donated").  An
+    identity ``tree.map`` is NOT enough — it copies the tree structure but
+    aliases the same device buffers."""
+    return jax.tree.map(jnp.copy, tree)
+
+
 def _supervised_step(cfg: ModelConfig, num_classes: int, lr: float, last_only: bool):
     def loss_fn(params, batch):
         # last_only head: classification reads the final position exclusively,
@@ -73,7 +85,7 @@ def pretrain_classifier(
     key = (cfg.name, cfg.num_layers, cfg.d_model, steps, lr, seed, len(pretrain_data),
            num_classes, batch_size, last_only)
     if key in _CACHE:
-        return jax.tree.map(lambda x: x, _CACHE[key])  # shallow copy semantics
+        return _owned(_CACHE[key])
 
     params = model_init(jax.random.PRNGKey(seed), cfg)
     opt = adamw_init(params, state_dtype=cfg.optimizer_state_dtype)
@@ -102,7 +114,7 @@ def pretrain_classifier(
     params = merge_lora(fresh_lora, frozen)
 
     _CACHE[key] = params
-    return params
+    return _owned(params)
 
 
 def pretrain_lm(
@@ -120,7 +132,7 @@ def pretrain_lm(
     pretrained model whose task knowledge arrives via distillation)."""
     key = ("lm", cfg.name, cfg.num_layers, cfg.d_model, steps, lr, seed, len(pretrain_data))
     if key in _CACHE:
-        return _CACHE[key]
+        return _owned(_CACHE[key])
 
     from repro.launch.steps import make_train_step
 
@@ -144,4 +156,4 @@ def pretrain_lm(
     _, frozen = split_lora(params)
     params = merge_lora(fresh_lora, frozen)
     _CACHE[key] = params
-    return params
+    return _owned(params)

@@ -18,19 +18,23 @@ Four method presets reproduce the paper's comparison (§IV):
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Literal, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint as ckpt_io
 from repro.configs.base import ModelConfig
 from repro.core.channel import ChannelConfig, ChannelSimulator
+from repro.core.faults import FaultConfig, FaultSimulator, get_faults, validate_dense
 from repro.core.scenario import ScenarioConfig, get_scenario
 from repro.core.protocol import CommLedger, RoundStats, downlink_bits
 from repro.data.partition import dirichlet_partition, iid_partition, split_public_private
 from repro.data.synthetic import IntentDataset
-from repro.fed.client import Client
-from repro.fed.engine import BroadcastState, make_engine
+from repro.fed.client import Client, make_upload_payload
+from repro.fed.engine import BroadcastState, cohort_budgets, make_engine
 from repro.fed.server import Server
 from repro.fed.steps import EVAL_BATCH, make_eval_fn
 
@@ -112,6 +116,16 @@ class FedConfig:
     # compiled multi-round scan (one executable for every scenario) and
     # the per-round realised SNR/outage come back in FedRun.
     scenario: "str | ScenarioConfig | None" = None
+    # Fault-injection scenario (repro.core.faults): a preset name
+    # ("none" | "corruption" | "crashes" | "bursty" | "lossy"), a
+    # FaultConfig, or None.  Drawn from (seed, round, cid)-keyed streams on
+    # domains disjoint from the channel simulator's, so enabling faults
+    # never perturbs a run's channel realisation; the "none" preset is
+    # bit-identical to None on every engine path.  Non-delivering clients
+    # (crashed mid-upload / quarantined after exhausting HARQ retries) are
+    # excluded from aggregation through the existing k = 0 transmit-mask
+    # pattern; their on-air bytes stay on the ledger.
+    faults: "str | FaultConfig | None" = None
     # Backbone pretraining (simulates the paper's pretrained GPT-2 W'; the
     # pretrain split is disjoint from public/private/eval).  0 disables.
     # Clients: supervised (they fine-tune on labelled shards anyway);
@@ -144,12 +158,38 @@ class FedRun:
     # outage) and outage flags from the in-scan channel tap.
     snr_db: list[list[float]] | None = None
     outage: list[list[bool]] | None = None
+    # Fault-injection runs only (None when FedConfig.faults is off):
+    # per-round counts of quarantined uploads (corruption that exhausted
+    # HARQ retries, plus wire-validation rejections) and mid-upload crashes,
+    # the per-round retransmission bytes (on-air cost beyond each delivered
+    # payload's first copy — included in the ledger's uplink_bytes), and
+    # each selected client's ATTEMPTED adaptive k.  per_client_k/mean_k
+    # keep reporting the DELIVERED view (0 for a lost upload), so
+    # attempted_k is what separates "budget afforded nothing" from "died on
+    # the air".
+    num_quarantined: list[int] | None = None
+    num_crashed: list[int] | None = None
+    retrans_bytes: list[float] | None = None
+    attempted_k: list[list[int]] | None = None
 
     def summary(self) -> dict:
+        # NaN-safe best: all-dropped rounds contribute NaN accuracies, and
+        # max() over a list with NaN entries is ORDER-DEPENDENT (any NaN
+        # encountered after the true max poisons the comparison chain).
+        finite = [a for a in self.server_acc if np.isfinite(a)]
         return {
             **self.ledger.summary(),
-            "best_server_acc": max(self.server_acc) if self.server_acc else float("nan"),
+            "best_server_acc": max(finite) if finite else float("nan"),
         }
+
+
+def _config_fingerprint(fed: FedConfig) -> dict:
+    """A JSON-normalised image of the FedConfig for checkpoint/resume
+    compatibility checks.  ``rounds`` is excluded: extending the horizon of
+    a checkpointed run is exactly what resume is for."""
+    d = dataclasses.asdict(fed)
+    d.pop("rounds")
+    return json.loads(json.dumps(d, sort_keys=True, default=str))
 
 
 def run_federated(
@@ -159,6 +199,8 @@ def run_federated(
     fed: FedConfig,
     *,
     verbose: bool = False,
+    ckpt_dir: str | None = None,
+    resume: bool = False,
 ) -> FedRun:
     """Run the whole federation.  ``client_cfg`` may be ONE config (the
     homogeneous fleet of the paper's §IV setup) or a sequence of FAMILY
@@ -167,9 +209,60 @@ def run_federated(
     through the family-bucketed heterogeneous path (`repro.fed.cohort`).
     Families must share a vocabulary and LoRA rank (the paper's §II
     exchange contracts); with pretraining enabled, one backbone is
-    pretrained PER family and shared by that family's clients."""
+    pretrained PER family and shared by that family's clients.
+
+    ``ckpt_dir`` enables crash-safe round-granular checkpoints through
+    :mod:`repro.checkpoint` (atomic writes; one ``step_{r}`` file after
+    every completed round — after every completed BLOCK with
+    ``scan_rounds``, where a round is not a host-visible boundary).
+    ``resume=True`` restores the newest valid checkpoint in ``ckpt_dir``
+    and continues: host RNG draws and per-client batch streams are
+    deterministically replayed through the completed rounds, device state
+    is restored losslessly from the checkpoint, and channels/faults replay
+    for free from their (seed, round, cid) keying — the resumed ``FedRun``
+    is bit-identical to an uninterrupted run.  An empty/missing ``ckpt_dir``
+    with ``resume=True`` simply starts from round 0 (idempotent restart).
+    """
     preset = METHODS[fed.method]
     rng = np.random.default_rng(fed.seed)
+
+    fault_cfg = get_faults(fed.faults)
+    if fault_cfg is not None and not fault_cfg.enabled:
+        fault_cfg = None  # the "none" preset is literally no fault machinery
+    if fault_cfg is not None and not preset["adaptive_k"]:
+        raise ValueError(
+            "fault injection requires an adaptive-k method (faulted clients "
+            "are excluded through the k = 0 transmit-mask path, which "
+            f"method {fed.method!r} never takes)"
+        )
+
+    if resume and ckpt_dir is None:
+        raise ValueError("resume=True requires ckpt_dir")
+    completed = 0
+    ckpt_meta: dict = {}
+    if resume:
+        step = ckpt_io.latest_step(ckpt_dir)
+        if step is not None:
+            completed = int(step)
+            ckpt_meta = ckpt_io.step_metadata(ckpt_dir, step) or {}
+            stored = ckpt_meta.get("config")
+            now = _config_fingerprint(fed)
+            if stored is not None and stored != now:
+                diff = sorted(
+                    k for k in set(stored) | set(now)
+                    if stored.get(k) != now.get(k)
+                )
+                raise ValueError(
+                    f"checkpoint in {ckpt_dir} was written by a different "
+                    f"FedConfig (differing fields: {diff}); resuming it "
+                    "would not reproduce the original trajectory"
+                )
+            if completed >= fed.rounds:
+                raise ValueError(
+                    f"checkpoint already holds {completed} completed rounds "
+                    f">= fed.rounds={fed.rounds}; raise fed.rounds to extend "
+                    "the run"
+                )
 
     families = (
         [client_cfg] if isinstance(client_cfg, ModelConfig) else list(client_cfg)
@@ -188,26 +281,46 @@ def run_federated(
         pre_idx = np.random.default_rng(fed.seed + 31).permutation(len(dataset))
         pretrain_ds = dataset.subset(pre_idx[:n_pre])
         dataset = dataset.subset(pre_idx[n_pre:])
-        # one pretrained backbone per family; family 0 keeps the historical
-        # seed so a homogeneous run is bit-identical to the pre-hetero path
-        for fi, fam in enumerate(families):
-            client_inits[fam] = pretrain_classifier(
-                fam, pretrain_ds, num_classes=dataset.num_classes,
-                steps=fed.pretrain_steps, lr=fed.pretrain_lr,
-                seed=fed.seed + 17 * fi,
-                last_only=fed.last_only, verbose=verbose,
-            )
-        if fed.server_pretrain == "supervised":
-            server_init = pretrain_classifier(
-                server_cfg, pretrain_ds, num_classes=dataset.num_classes,
-                steps=fed.server_pretrain_steps, lr=fed.pretrain_lr,
-                seed=fed.seed + 999, last_only=fed.last_only, verbose=verbose,
-            )
-        elif fed.server_pretrain == "lm":
-            server_init = pretrain_lm(
-                server_cfg, pretrain_ds, steps=fed.server_pretrain_steps,
-                lr=fed.pretrain_lr, seed=fed.seed + 999, verbose=verbose,
-            )
+        # Resuming: every pretrained tensor (client backbones, server init)
+        # is restored from the checkpoint below, so the pretrain COMPUTE is
+        # skipped — only the data split above must still be applied (it
+        # shapes the public/private/eval pools the replayed rounds draw
+        # from).
+        if completed:
+            # Topology-only placeholders: the pretrained run hands every
+            # client of a family the SAME param arrays, which the batched
+            # engines detect (shared_frozen_backbone) and store unstacked.
+            # Resume must reproduce that sharing layout before the restore
+            # overwrites the values, or the checkpoint tree shapes mismatch.
+            from repro.models import init as model_init
+
+            for fi, fam in enumerate(families):
+                client_inits[fam] = model_init(
+                    jax.random.PRNGKey(fed.seed + 17 * fi), fam
+                )
+        else:
+            # one pretrained backbone per family; family 0 keeps the
+            # historical seed so a homogeneous run is bit-identical to the
+            # pre-hetero path
+            for fi, fam in enumerate(families):
+                client_inits[fam] = pretrain_classifier(
+                    fam, pretrain_ds, num_classes=dataset.num_classes,
+                    steps=fed.pretrain_steps, lr=fed.pretrain_lr,
+                    seed=fed.seed + 17 * fi,
+                    last_only=fed.last_only, verbose=verbose,
+                )
+            if fed.server_pretrain == "supervised":
+                server_init = pretrain_classifier(
+                    server_cfg, pretrain_ds, num_classes=dataset.num_classes,
+                    steps=fed.server_pretrain_steps, lr=fed.pretrain_lr,
+                    seed=fed.seed + 999, last_only=fed.last_only,
+                    verbose=verbose,
+                )
+            elif fed.server_pretrain == "lm":
+                server_init = pretrain_lm(
+                    server_cfg, pretrain_ds, steps=fed.server_pretrain_steps,
+                    lr=fed.pretrain_lr, seed=fed.seed + 999, verbose=verbose,
+                )
 
     public, private = split_public_private(dataset, fed.public_size, seed=fed.seed)
     if fed.non_iid:
@@ -255,6 +368,11 @@ def run_federated(
             channel_cfg, scenario=get_scenario(fed.scenario)
         )
     chan_sim = ChannelSimulator(fed.num_clients, channel_cfg, seed=fed.seed)
+    fault_sim = (
+        FaultSimulator(fed.num_clients, fault_cfg, seed=fed.seed)
+        if fault_cfg is not None
+        else None
+    )
 
     # held-out eval split (from the private pool tail, disjoint from clients'
     # data only in expectation at reduced scale; standard FedD evaluation)
@@ -295,6 +413,9 @@ def run_federated(
 
     ledger = CommLedger()
     run = FedRun(ledger=ledger, server_acc=[], client_acc=[], mean_k=[])
+    if fault_sim is not None:
+        run.num_quarantined, run.num_crashed = [], []
+        run.retrans_bytes, run.attempted_k = [], []
 
     pub_rng = np.random.default_rng(fed.seed + 7)
 
@@ -311,18 +432,224 @@ def run_federated(
             chan_sim.states_batched(rnd, list(sel)),
         )
 
+    def apply_faults(rnd, sel, states, fault_inputs=None, round_offset=0):
+        """Resolve this round's deliveries and force the non-delivering
+        clients (crashed mid-upload / HARQ-exhausted corruption) to k = 0
+        BEFORE any engine sees the round, by putting their channel entry
+        into outage (snr -> -inf, zero bit budget).  Every engine —
+        sequential, batched, fused, fused_e2e, hetero, and the multi-round
+        scans (where k is already an int32 data operand) — then excludes
+        them through the ONE existing transmit-mask path; no fault-specific
+        executable exists.  Returns ``(states', attempted_ks, resolution,
+        ghost_payloads)`` with the attempted manifests of quarantined
+        uploads (their bytes were spent on air) for the ledger.
+        """
+        n_samples = fed.public_batch
+        attempted = cohort_budgets(
+            states, cfgs[sel[0]], n_samples, preset["adaptive_k"], len(sel),
+            preset["send_h"], value_bits=fed.channel.value_bits,
+            k_min=fed.channel.min_k, quantize_wire=fed.quantize_wire,
+        )
+        specs, payload_bits = [], []
+        for i, cid in enumerate(sel):
+            if attempted[i] > 0:
+                p, _rank = make_upload_payload(
+                    cfgs[cid], cid, n_samples, attempted[i],
+                    send_h=preset["send_h"], value_bits=fed.channel.value_bits,
+                    snr_db=float(states.snr_db[i]), quantize=fed.quantize_wire,
+                )
+            else:
+                p = None
+            specs.append(p)
+            payload_bits.append(0.0 if p is None else float(p.spec.uplink_bits))
+        budget_bits = [float(st.bit_budget) for st in states]
+        if fault_inputs is not None:
+            res = fault_sim.resolve_from_inputs(
+                fault_inputs, round_offset, sel, attempted,
+                payload_bits, budget_bits,
+            )
+        else:
+            res = fault_sim.resolve_round(
+                rnd, sel, attempted, payload_bits, budget_bits
+            )
+        failed = [
+            i for i, (k, d) in enumerate(zip(attempted, res.delivered))
+            if k > 0 and not d
+        ]
+        if failed:
+            snr = np.array(states.snr_db, dtype=np.float64)
+            snr[failed] = -np.inf
+            states = dataclasses.replace(states, snr_db=snr)
+        ghosts = [specs[i] for i in failed if res.reasons[i] == "corrupt"]
+        for i in failed:
+            if res.reasons[i] == "corrupt":
+                specs[i].attempts = res.attempts[i]
+                specs[i].delivered = False
+        return states, attempted, res, ghosts
+
+    def fault_ledger(sel, res, ghosts, payloads):
+        """Price HARQ retries onto the delivered manifests (in place, so the
+        engine-reported uplink bytes already include them) and account the
+        quarantined attempts.  Returns ``(extra_bytes, retrans_bytes,
+        stats_kw)``: bytes to ADD to the engine-reported uplink (the ghost
+        manifests' spent attempts), the total on-air cost beyond each
+        delivered payload's first copy, and the RoundStats fault taps."""
+        by_cid = {p.client_id: p for p in payloads}
+        retrans = 0.0
+        for i, cid in enumerate(sel):
+            if res.delivered[i] and res.attempts[i] > 1:
+                p = by_cid.get(cid)
+                if p is not None:
+                    p.attempts = res.attempts[i]
+                    retrans += (res.attempts[i] - 1) * p.spec.uplink_bytes
+        extra = float(sum(g.bytes for g in ghosts))
+        retrans += extra
+        counts: dict[str, int] = {}
+        for r in res.reasons:
+            if r is not None:
+                counts[r] = counts.get(r, 0) + 1
+        stats_kw = dict(
+            num_quarantined=res.num_quarantined,
+            num_crashed=res.num_crashed,
+            fault_counts=counts or None,
+            retrans_bytes=retrans,
+        )
+        return extra, retrans, stats_kw
+
+    def record_fault_taps(attempted, res, retrans):
+        run.num_quarantined.append(res.num_quarantined)
+        run.num_crashed.append(res.num_crashed)
+        run.retrans_bytes.append(retrans)
+        run.attempted_k.append(list(attempted))
+
+    # -- crash-safe checkpointing ---------------------------------------
+    def ckpt_tree(like: bool = False):
+        """The full federation state as one checkpointable pytree: fleet
+        LoRA/opt (+ backbone), server state, and — for server-owning
+        engines — the broadcast carry.  ``like=True`` builds the restore
+        skeleton on a freshly-constructed engine, where the broadcast carry
+        does not exist yet and is shaped from the config instead.  Round
+        index and histories ride the JSON metadata sidecar; channel and
+        fault trajectories replay for free from (seed, round, cid) keying.
+        """
+        tree = {"fleet": engine.fleet_state()}
+        if handles_server:
+            tree["server"] = engine.server_state()
+            if like:
+                bc = {
+                    "b_logits": np.zeros(
+                        (fed.public_batch, server_cfg.vocab_size), np.float32
+                    )
+                }
+                if server_cfg.lora is not None:
+                    bc["b_h"] = np.zeros(
+                        (fed.public_batch, server_cfg.lora.rank), np.float32
+                    )
+            else:
+                bc = {"b_logits": engine._b_logits}
+                if engine._b_h is not None:
+                    bc["b_h"] = engine._b_h
+            tree["bcast"] = bc
+        else:
+            tree["server"] = {"s_params": server.params, "s_opt": server.opt}
+        return tree
+
+    def save_ckpt(step: int) -> None:
+        meta = dict(
+            config=_config_fingerprint(fed),
+            server_acc=run.server_acc, client_acc=run.client_acc,
+            mean_k=run.mean_k, per_client_k=run.per_client_k,
+            distill_loss=run.distill_loss,
+            ledger=[dataclasses.asdict(r) for r in ledger.rounds],
+        )
+        for tap in ("num_quarantined", "num_crashed", "retrans_bytes",
+                    "attempted_k", "family_client_acc", "snr_db", "outage"):
+            v = getattr(run, tap)
+            if v is not None:
+                meta[tap] = v
+        ckpt_io.save_step(ckpt_dir, step, ckpt_tree(), **meta)
+
+    resume_bcast: BroadcastState | None = None
+    if completed:
+        tree, _step = ckpt_io.restore_step(ckpt_dir, ckpt_tree(like=True), completed)
+        engine.load_fleet_state(tree["fleet"])
+        if handles_server:
+            engine.load_server_state(tree["server"])
+        else:
+            server.params = jax.tree.map(jnp.asarray, tree["server"]["s_params"])
+            server.opt = jax.tree.map(jnp.asarray, tree["server"]["s_opt"])
+        # Deterministic replay of the host-rng chain through the completed
+        # rounds: the cohort/public/channel draws and each selected client's
+        # private-batch stream advance exactly as the original rounds did,
+        # so round `completed` sees the same draws it would have seen
+        # uninterrupted.  Device state is restored, not recomputed.
+        last_pub = None
+        for rnd in range(completed):
+            sel, pub_tokens, _states = draw_round(rnd)
+            for cid in sel:
+                clients[cid].next_train_batches(fed.local_steps)
+            last_pub = pub_tokens
+        if handles_server:
+            engine.load_broadcast(
+                last_pub, tree["bcast"]["b_logits"], tree["bcast"].get("b_h")
+            )
+            resume_bcast = engine.broadcast_state(last_pub)
+        else:
+            # the broadcast is a pure function of (restored server params,
+            # replayed public batch) — recompute it bit-identically
+            g_logits, g_h, g_bits = server.broadcast(last_pub)
+            resume_bcast = BroadcastState(
+                tokens=last_pub, logits=g_logits, h=g_h, bits=g_bits
+            )
+        # restore the recorded history so the resumed FedRun is the FULL
+        # run's record, not just the tail's
+        run.server_acc[:] = [float(x) for x in ckpt_meta.get("server_acc", [])]
+        run.client_acc[:] = [float(x) for x in ckpt_meta.get("client_acc", [])]
+        run.mean_k[:] = [float(x) for x in ckpt_meta.get("mean_k", [])]
+        run.per_client_k[:] = [
+            [int(k) for k in ks] for ks in ckpt_meta.get("per_client_k", [])
+        ]
+        run.distill_loss[:] = [
+            float(x) for x in ckpt_meta.get("distill_loss", [])
+        ]
+        for tap in ("num_quarantined", "num_crashed", "retrans_bytes",
+                    "attempted_k", "family_client_acc", "snr_db", "outage"):
+            if tap in ckpt_meta:
+                setattr(run, tap, ckpt_meta[tap])
+        for entry in ckpt_meta.get("ledger", []):
+            ledger.record(RoundStats(**entry))
+
     if fed.scan_rounds:
         if not handles_server:
             raise ValueError(
                 "FedConfig.scan_rounds requires engine='fused_e2e' "
                 f"(got {fed.engine!r})"
             )
-        # Pre-draw every round in the same order the per-round loop uses,
-        # then run the whole federation as one compiled multi-round dispatch
-        # with the eval tap inside the scan.
-        sels, pubs, states_list = [], [], []
-        for rnd in range(fed.rounds):
+        # Pre-draw every remaining round in the same order the per-round
+        # loop uses, then run the block as one compiled multi-round dispatch
+        # with the eval tap inside the scan.  A resumed run scans only the
+        # rounds after the checkpoint (the restored broadcast carry warm-
+        # starts it); checkpoint granularity on this path is the BLOCK
+        # boundary — a round inside the scan is not a host-visible state.
+        start = completed
+        n_block = fed.rounds - start
+        fault_inputs = (
+            # the scan path consumes the fault trajectory through its DATA
+            # operands (scan_fault_inputs) — resolved host-side into the
+            # int32 k masks the compiled scan already takes, bit-identical
+            # to the per-round stream path
+            fault_sim.scan_fault_inputs(n_block, start_round=start)
+            if fault_sim is not None
+            else None
+        )
+        sels, pubs, states_list, fault_rows = [], [], [], []
+        for j, rnd in enumerate(range(start, fed.rounds)):
             sel, pub_tokens, states = draw_round(rnd)
+            if fault_sim is not None:
+                states, attempted, res, ghosts = apply_faults(
+                    rnd, sel, states, fault_inputs, j
+                )
+                fault_rows.append((attempted, res, ghosts))
             sels.append(sel)
             pubs.append(pub_tokens)
             states_list.append(states)
@@ -339,30 +666,49 @@ def run_federated(
         if chan_sim.scenario is not None:
             # scenario channel state evolves inside the same compiled scan;
             # budgets above were priced from the identical host chain
-            chan_kw = dict(channel_scan=chan_sim.scan_channel_inputs(fed.rounds))
+            chan_kw = dict(
+                channel_scan=chan_sim.scan_channel_inputs(
+                    n_block, start_round=start
+                )
+            )
         traj = engine.run_rounds(
             sels, pubs, states_list,
             adaptive_k=preset["adaptive_k"], send_h=preset["send_h"],
             **eval_kw, **chan_kw,
         )
         engine.sync_server()
-        run.family_client_acc = traj.family_client_acc
-        run.snr_db = traj.snr_db
-        run.outage = traj.outage
+        # extend (never clobber) the taps a resumed run restored
+        if traj.family_client_acc is not None:
+            run.family_client_acc = (
+                (run.family_client_acc or []) + traj.family_client_acc
+            )
+        if traj.snr_db is not None:
+            run.snr_db = (run.snr_db or []) + traj.snr_db
+            run.outage = (run.outage or []) + traj.outage
         b_rank = server_cfg.lora.rank if server_cfg.lora is not None else None
         b_bits = downlink_bits(fed.public_batch, server_cfg.vocab_size, b_rank)
-        for rnd in range(fed.rounds):
+        for j, rnd in enumerate(range(start, fed.rounds)):
             # an eval split smaller than one batch degenerates to 0.0 on the
             # host path (no whole batch to walk) — mirror it, not NaN
-            s_acc = traj.server_acc[rnd] if traj.server_acc else 0.0
-            c_acc = traj.client_acc[rnd] if traj.client_acc else 0.0
-            downlink = b_bits * len(sels[rnd]) if rnd > 0 else 0
-            uplink = float(sum(p.bytes for p in traj.payloads[rnd]))
+            s_acc = traj.server_acc[j] if traj.server_acc else 0.0
+            c_acc = traj.client_acc[j] if traj.client_acc else 0.0
+            downlink = b_bits * len(sels[j]) if rnd > 0 else 0
+            stats_kw: dict = {}
+            extra = 0.0
+            if fault_rows:
+                attempted, res, ghosts = fault_rows[j]
+                extra, retrans, stats_kw = fault_ledger(
+                    sels[j], res, ghosts, traj.payloads[j]
+                )
+                record_fault_taps(attempted, res, retrans)
+            # after fault_ledger: delivered manifests carry their HARQ
+            # attempts, so p.bytes already prices the retries
+            uplink = float(sum(p.bytes for p in traj.payloads[j])) + extra
             run.server_acc.append(s_acc)
             run.client_acc.append(c_acc)
-            run.mean_k.append(traj.mean_k[rnd])
-            run.per_client_k.append(list(traj.ks[rnd]))
-            run.distill_loss.append(traj.distill_loss[rnd])
+            run.mean_k.append(traj.mean_k[j])
+            run.per_client_k.append(list(traj.ks[j]))
+            run.distill_loss.append(traj.distill_loss[j])
             ledger.record(
                 RoundStats(
                     round_index=rnd,
@@ -370,26 +716,34 @@ def run_federated(
                     downlink_bytes=downlink / 8.0,
                     server_accuracy=s_acc,
                     client_accuracy=c_acc,
-                    distill_loss=traj.distill_loss[rnd],
-                    mean_k=traj.mean_k[rnd],
-                    num_selected=len(sels[rnd]),
-                    num_transmitters=len(traj.payloads[rnd]),
+                    distill_loss=traj.distill_loss[j],
+                    mean_k=traj.mean_k[j],
+                    num_selected=len(sels[j]),
+                    num_transmitters=len(traj.payloads[j]),
+                    **stats_kw,
                 )
             )
             if verbose:
                 print(
                     f"[{fed.method}/{fed.engine}+scan] round {rnd:3d}  "
                     f"server_acc={s_acc:.3f} client_acc={c_acc:.3f}  "
-                    f"mean_k={traj.mean_k[rnd]:7.1f}  uplink={uplink/1e6:.2f}MB  "
-                    f"tx={len(traj.payloads[rnd])}/{len(sels[rnd])}"
+                    f"mean_k={traj.mean_k[j]:7.1f}  uplink={uplink/1e6:.2f}MB  "
+                    f"tx={len(traj.payloads[j])}/{len(sels[j])}"
                 )
+        if ckpt_dir is not None:
+            save_ckpt(fed.rounds)
         return run
 
     # Broadcast knowledge carried across rounds: None until the server has
-    # distilled once (cold server at round 0 -> no downlink that round).
-    bcast: BroadcastState | None = None
-    for rnd in range(fed.rounds):
+    # distilled once (cold server at round 0 -> no downlink that round); a
+    # resumed run re-enters with the checkpointed broadcast.
+    bcast: BroadcastState | None = resume_bcast
+    for rnd in range(completed, fed.rounds):
         sel, pub_tokens, states = draw_round(rnd)
+        fault_row = None
+        if fault_sim is not None:
+            states, attempted, res, ghosts = apply_faults(rnd, sel, states)
+            fault_row = (attempted, res, ghosts)
 
         # one broadcast of last round's knowledge per selected client
         downlink = bcast.bits * len(sel) if bcast is not None else 0
@@ -399,14 +753,45 @@ def run_federated(
             adaptive_k=preset["adaptive_k"], send_h=preset["send_h"],
         )
 
+        stats_kw: dict = {}
+        extra = 0.0
+        if fault_row is not None:
+            attempted, res, ghosts = fault_row
+            extra, retrans, stats_kw = fault_ledger(
+                sel, res, ghosts, phase.payloads
+            )
+            record_fault_taps(attempted, res, retrans)
+
         if handles_server:
             # fused_e2e: aggregation + server distillation + broadcast all
             # happened inside the engine's single compiled round call.
             bcast = engine.broadcast_state(pub_tokens)
             engine.sync_server()
         else:
-            if phase.dense is not None:
-                k_g, h_g = server.aggregate_dense(phase.dense, phase.h)
+            dense, h_stack = phase.dense, phase.h
+            if fault_sim is not None and dense is not None:
+                # server-side integrity gate on the received stack: a
+                # transmitter whose payload decodes to non-finite values is
+                # quarantined instead of poisoning the eq. 6-7 aggregation
+                ok, _reasons = validate_dense(dense, h_stack)
+                if not ok.all():
+                    n_bad = int((~ok).sum())
+                    for i in np.flatnonzero(~ok):
+                        phase.payloads[int(i)].delivered = False
+                    keep = np.flatnonzero(ok)
+                    dense = dense[jnp.asarray(keep)] if len(keep) else None
+                    if h_stack is not None:
+                        h_stack = (
+                            h_stack[jnp.asarray(keep)] if len(keep) else None
+                        )
+                    stats_kw["num_quarantined"] = (
+                        stats_kw.get("num_quarantined") or 0
+                    ) + n_bad
+                    counts = stats_kw.get("fault_counts") or {}
+                    counts["invalid_wire"] = counts.get("invalid_wire", 0) + n_bad
+                    stats_kw["fault_counts"] = counts
+            if dense is not None:
+                k_g, h_g = server.aggregate_dense(dense, h_stack)
                 server.distill(pub_tokens, k_g, h_g)
             # else: every selected client dropped this round -> no
             # aggregation, the server's knowledge simply carries over.
@@ -417,7 +802,7 @@ def run_federated(
         c_acc = evaluate_client[cfgs[sel[0]]](
             engine.client_params(sel[0]), jnp.asarray(eval_tokens), jnp.asarray(eval_labels)
         )
-        uplink = phase.uplink_bytes
+        uplink = phase.uplink_bytes + extra
         d_loss = (
             engine.last_distill_loss if handles_server else float("nan")
         )
@@ -437,6 +822,7 @@ def run_federated(
                 mean_k=float(np.mean(phase.ks)),
                 num_selected=len(sel),
                 num_transmitters=phase.num_transmitters,
+                **stats_kw,
             )
         )
         if verbose:
@@ -445,4 +831,6 @@ def run_federated(
                 f"client_acc={c_acc:.3f}  mean_k={np.mean(phase.ks):7.1f}  "
                 f"uplink={uplink/1e6:.2f}MB  tx={phase.num_transmitters}/{len(sel)}"
             )
+        if ckpt_dir is not None:
+            save_ckpt(rnd + 1)
     return run

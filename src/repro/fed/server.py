@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.aggregation import AggregationMode, aggregate, aggregate_wire
@@ -71,12 +72,36 @@ class Server:
         return k_g, h_g
 
     def aggregate_sparse_wire(
-        self, wire: SparseWire, h_stack: jax.Array | None = None
+        self,
+        wire: SparseWire,
+        h_stack: jax.Array | None = None,
+        *,
+        validate: bool = False,
+        budget_bits=None,
+        value_bits: int = 16,
     ):
         """Aggregate straight from the sparse (values, indices, mask) wire
         format — O(N·P·k_cap) working set, no densified stack (the fused-e2e
         engine runs this same math inside its compiled round; this entry
-        point serves callers holding a wire payload outside it)."""
+        point serves callers holding a wire payload outside it).
+
+        ``validate=True`` runs the server-side integrity gate
+        (:func:`repro.core.faults.validate_wire`: non-finite values,
+        out-of-range indices, and — with ``budget_bits`` — fits-violating
+        byte counts) and quarantines offending client rows through the
+        transmit-mask pattern before aggregating; their ``h`` rows are
+        excluded from the projection mean too."""
+        if validate:
+            from repro.core.faults import quarantine_wire, validate_wire
+
+            ok, _reasons = validate_wire(
+                wire, value_bits=value_bits, budget_bits=budget_bits
+            )
+            if not bool(np.all(ok)):
+                wire = quarantine_wire(wire, ok)
+                if h_stack is not None:
+                    keep = np.flatnonzero(ok)
+                    h_stack = h_stack[jnp.asarray(keep)] if len(keep) else None
         k_g = aggregate_wire(wire, self.aggregation, use_kernel=self.use_kernels)
         h_g = jnp.mean(h_stack, axis=0) if h_stack is not None else None
         return k_g, h_g

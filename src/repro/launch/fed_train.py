@@ -100,9 +100,26 @@ def main(argv=None) -> int:
                          "mobility): time-correlated fading / bursty outage "
                          "/ mobility trajectories.  Default: the i.i.d. "
                          "per-round channel")
+    ap.add_argument("--faults", default=None,
+                    help="fault-injection preset from repro.core.faults "
+                         "(none | corruption | crashes | bursty | lossy): "
+                         "payload corruption with HARQ retransmission, "
+                         "client crashes mid-round, Gilbert-Elliott fault "
+                         "bursts.  Default: no faults")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="write an atomic round-granular checkpoint after "
+                         "every completed round (crash-safe: a kill mid-"
+                         "save never corrupts the latest step)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest valid checkpoint in "
+                         "--ckpt-dir; the resumed run is bit-identical to "
+                         "an uninterrupted one (same k, bytes, accuracies)")
     ap.add_argument("--public-batch", type=int, default=128)
     ap.add_argument("--out", default="experiments/fed")
     args = ap.parse_args(argv)
+
+    if args.resume and args.ckpt_dir is None:
+        ap.error("--resume requires --ckpt-dir")
 
     seq_len = 24
     ds = make_banking77_like(vocab_size=REDUCED_CLIENT.vocab_size, seq_len=seq_len, seed=args.seed)
@@ -128,8 +145,12 @@ def main(argv=None) -> int:
         shard_clients=args.shard_clients,
         scan_rounds=args.scan_rounds,
         scenario=args.scenario,
+        faults=args.faults,
     )
-    run = run_federated(client_cfg, REDUCED_SERVER, ds, fed, verbose=True)
+    run = run_federated(
+        client_cfg, REDUCED_SERVER, ds, fed, verbose=True,
+        ckpt_dir=args.ckpt_dir, resume=args.resume,
+    )
 
     os.makedirs(args.out, exist_ok=True)
     rec = {
@@ -143,6 +164,10 @@ def main(argv=None) -> int:
             [x if math.isfinite(x) else -1e9 for x in row] for row in run.snr_db
         ],
         "outage": run.outage,
+        "faults": args.faults,
+        "num_quarantined": run.num_quarantined,
+        "num_crashed": run.num_crashed,
+        "retrans_bytes": run.retrans_bytes,
         "fed": {k: v for k, v in dataclasses.asdict(fed).items() if not isinstance(v, dict)},
         "server_acc": run.server_acc,
         "client_acc": run.client_acc,

@@ -1,9 +1,20 @@
-"""Checkpoint save/restore."""
+"""Checkpoint save/restore + PR-8 crash-safety contracts (atomic writes,
+torn-file skipping, loud structure mismatches, metadata sidecars)."""
+
+import os
 
 import jax
 import numpy as np
+import pytest
 
-from repro.checkpoint import latest_step, restore_step, save_step
+from repro.checkpoint import (
+    latest_step,
+    restore,
+    restore_step,
+    save,
+    save_step,
+    step_metadata,
+)
 from repro.configs import get_smoke_config
 from repro.models import init
 
@@ -26,3 +37,53 @@ def test_roundtrip(tmp_path):
 
 def test_latest_step_empty(tmp_path):
     assert latest_step(str(tmp_path / "nope")) is None
+
+
+def test_save_is_atomic_no_temp_residue(tmp_path):
+    """save stages through a temp file and os.replace; after it returns the
+    directory holds only the final names (no .tmp leftovers)."""
+    path = str(tmp_path / "ck.npz")
+    save(path, {"a": np.arange(4)}, metadata={"step": 1})
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["ck.npz", "ck.npz.meta.json"]
+
+
+def test_latest_step_skips_torn_files(tmp_path):
+    """A truncated/corrupt step file (crash mid-copy) must not win: resume
+    falls back to the newest LOADABLE step."""
+    save_step(str(tmp_path), 3, {"a": np.arange(4)})
+    # a torn "newer" checkpoint: right name, garbage bytes
+    with open(tmp_path / "step_00000007.npz", "wb") as f:
+        f.write(b"not a zip archive")
+    assert latest_step(str(tmp_path)) == 3
+    tree, step = restore_step(str(tmp_path), {"a": np.zeros(4, np.int64)})
+    assert step == 3
+    np.testing.assert_array_equal(tree["a"], np.arange(4))
+
+
+def test_restore_missing_key_raises(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    save(path, {"a": np.arange(4)})
+    with pytest.raises(ValueError, match="no entry for 'b'"):
+        restore(path, {"a": np.zeros(4, np.int64), "b": np.zeros(2)})
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    save(path, {"a": np.arange(4)})
+    with pytest.raises(ValueError) as ei:
+        restore(path, {"a": np.zeros((2, 2), np.int64)})
+    # the error names the key and both shapes
+    msg = str(ei.value)
+    assert "'a'" in msg and "(4,)" in msg and "(2, 2)" in msg
+
+
+def test_step_metadata(tmp_path):
+    save_step(str(tmp_path), 2, {"a": np.arange(3)}, note="hello", acc=[0.1])
+    meta = step_metadata(str(tmp_path), 2)
+    assert meta == {"step": 2, "note": "hello", "acc": [0.1]}
+    assert step_metadata(str(tmp_path), 9) is None
+    # a torn sidecar is advisory: None, never an exception
+    with open(tmp_path / "step_00000002.npz.meta.json", "w") as f:
+        f.write("{truncated")
+    assert step_metadata(str(tmp_path), 2) is None

@@ -1,0 +1,181 @@
+"""Crash-safe, bit-identical federated resume (PR 8).
+
+The contract: kill a run after round r, resume from the round-granular
+checkpoint, and the completed FedRun is BIT-IDENTICAL to an uninterrupted
+run — same per-client adaptive k, same ledger bytes, same accuracies —
+because device state round-trips losslessly through the f32 npz and the
+host RNG chain is deterministically replayed through the completed rounds.
+Tiny no-pretrain configs keep this in the fast tier; one pretrained case
+covers the pretrain-skip path.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.checkpoint import latest_step, step_metadata
+from repro.configs.base import LoRAConfig
+from repro.configs.gpt2_paper import REDUCED_CLIENT, REDUCED_SERVER
+from repro.core import ChannelConfig
+from repro.data import make_banking77_like
+from repro.fed import FedConfig, run_federated
+
+LORA = LoRAConfig(rank=4, alpha=32.0, dropout=0.0, targets=("q", "v", "head"))
+CLIENT = REDUCED_CLIENT.with_overrides(
+    num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, d_ff=128,
+    vocab_size=256, max_seq_len=32, lora=LORA,
+)
+SERVER = REDUCED_SERVER.with_overrides(
+    num_layers=2, d_model=96, num_heads=2, num_kv_heads=2, d_ff=192,
+    vocab_size=256, max_seq_len=32, lora=LORA,
+)
+CHAN = ChannelConfig(bandwidth_hz=2e5, mean_snr_db=2.0)
+
+
+def _dataset():
+    return make_banking77_like(vocab_size=CLIENT.vocab_size, seq_len=12, total=500, seed=0)
+
+
+def _cfg(engine, rounds=4, local_steps=2, **kw):
+    kw.setdefault("pretrain_steps", 0)
+    return FedConfig(
+        method="adald", engine=engine, num_clients=4, clients_per_round=2,
+        rounds=rounds, public_size=64, public_batch=16, eval_size=64,
+        local_steps=local_steps, distill_steps=1, server_distill_steps=2,
+        seed=0, channel=CHAN, **kw,
+    )
+
+
+def _assert_identical(a, b):
+    assert a.server_acc == b.server_acc
+    assert a.client_acc == b.client_acc
+    assert a.mean_k == b.mean_k
+    assert a.per_client_k == b.per_client_k
+    for ra, rb in zip(a.ledger.rounds, b.ledger.rounds):
+        assert ra.uplink_bytes == rb.uplink_bytes
+        assert ra.downlink_bytes == rb.downlink_bytes
+        assert ra.num_transmitters == rb.num_transmitters
+
+
+@pytest.mark.parametrize("engine", ["sequential", "batched", "fused", "fused_e2e"])
+def test_kill_and_resume_bit_identical(engine, tmp_path):
+    """Run 2 of 4 rounds ("the process was killed"), resume, compare to an
+    uninterrupted 4-round run."""
+    ds = _dataset()
+    full = run_federated(CLIENT, SERVER, ds, _cfg(engine))
+    d = str(tmp_path)
+    run_federated(CLIENT, SERVER, ds, _cfg(engine, rounds=2), ckpt_dir=d)
+    assert latest_step(d) == 2
+    res = run_federated(CLIENT, SERVER, ds, _cfg(engine), ckpt_dir=d, resume=True)
+    _assert_identical(res, full)
+
+
+def test_kill_and_resume_scan_rounds(tmp_path):
+    """The multi-round lax.scan driver checkpoints at block end and resumes
+    a shorter scan bit-identically."""
+    ds = _dataset()
+    scan = lambda rounds: dataclasses.replace(  # noqa: E731
+        _cfg("fused_e2e", rounds=rounds), scan_rounds=True
+    )
+    full = run_federated(CLIENT, SERVER, ds, scan(4))
+    d = str(tmp_path)
+    run_federated(CLIENT, SERVER, ds, scan(2), ckpt_dir=d)
+    res = run_federated(CLIENT, SERVER, ds, scan(4), ckpt_dir=d, resume=True)
+    _assert_identical(res, full)
+
+
+def test_kill_and_resume_with_faults(tmp_path):
+    """Fault streams are keyed by (seed, round, cid): the resumed half sees
+    the exact realisation the uninterrupted run saw."""
+    ds = _dataset()
+    full = run_federated(CLIENT, SERVER, ds, _cfg("batched", faults="corruption"))
+    d = str(tmp_path)
+    run_federated(CLIENT, SERVER, ds,
+                  _cfg("batched", rounds=2, faults="corruption"), ckpt_dir=d)
+    res = run_federated(CLIENT, SERVER, ds,
+                        _cfg("batched", faults="corruption"), ckpt_dir=d, resume=True)
+    _assert_identical(res, full)
+    assert res.num_quarantined == full.num_quarantined
+    assert res.num_crashed == full.num_crashed
+    assert res.retrans_bytes == full.retrans_bytes
+    assert res.attempted_k == full.attempted_k
+
+
+def test_kill_and_resume_with_pretraining(tmp_path):
+    """Pretrained backbones ride the checkpoint: resume skips the pretrain
+    COMPUTE yet stays bit-identical (the shared-backbone layout is
+    reproduced before restore)."""
+    ds = _dataset()
+    cfg = lambda rounds: _cfg(  # noqa: E731
+        "fused_e2e", rounds=rounds, pretrain_steps=4, server_pretrain_steps=4
+    )
+    full = run_federated(CLIENT, SERVER, ds, cfg(3))
+    d = str(tmp_path)
+    run_federated(CLIENT, SERVER, ds, cfg(1), ckpt_dir=d)
+    res = run_federated(CLIENT, SERVER, ds, cfg(3), ckpt_dir=d, resume=True)
+    _assert_identical(res, full)
+
+
+def test_resume_empty_dir_is_fresh_run(tmp_path):
+    """resume=True with no checkpoint present falls back to a fresh run."""
+    ds = _dataset()
+    base = run_federated(CLIENT, SERVER, ds, _cfg("batched", rounds=2))
+    res = run_federated(CLIENT, SERVER, ds, _cfg("batched", rounds=2),
+                        ckpt_dir=str(tmp_path), resume=True)
+    _assert_identical(res, base)
+
+
+def test_resume_requires_ckpt_dir():
+    ds = _dataset()
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        run_federated(CLIENT, SERVER, ds, _cfg("batched"), resume=True)
+
+
+def test_resume_rejects_mismatched_config(tmp_path):
+    """A checkpoint written under a different FedConfig must refuse to
+    resume, naming the differing fields."""
+    ds = _dataset()
+    d = str(tmp_path)
+    run_federated(CLIENT, SERVER, ds, _cfg("batched", rounds=1), ckpt_dir=d)
+    with pytest.raises(ValueError, match="local_steps"):
+        run_federated(CLIENT, SERVER, ds, _cfg("batched", local_steps=3),
+                      ckpt_dir=d, resume=True)
+
+
+def test_resume_rejects_exhausted_horizon(tmp_path):
+    """Resuming a checkpoint that already holds >= rounds completed rounds
+    is an error, not a silent no-op."""
+    ds = _dataset()
+    d = str(tmp_path)
+    run_federated(CLIENT, SERVER, ds, _cfg("batched", rounds=2), ckpt_dir=d)
+    with pytest.raises(ValueError, match="2 completed rounds"):
+        run_federated(CLIENT, SERVER, ds, _cfg("batched", rounds=2),
+                      ckpt_dir=d, resume=True)
+
+
+def test_checkpoint_metadata_carries_history(tmp_path):
+    """The sidecar holds the run history up to its step — what a resumed
+    FedRun restores its lists from."""
+    ds = _dataset()
+    d = str(tmp_path)
+    run = run_federated(CLIENT, SERVER, ds, _cfg("batched", rounds=2), ckpt_dir=d)
+    meta = step_metadata(d, 2)
+    assert meta is not None
+    assert meta["server_acc"] == run.server_acc
+    assert meta["per_client_k"] == run.per_client_k
+    assert len(meta["ledger"]) == 2
+
+
+def test_extended_horizon_resume(tmp_path):
+    """rounds is excluded from the fingerprint: a finished run can be
+    extended by resuming with a larger horizon, and the shared prefix is
+    byte-stable."""
+    ds = _dataset()
+    d = str(tmp_path)
+    short = run_federated(CLIENT, SERVER, ds, _cfg("batched", rounds=2), ckpt_dir=d)
+    longer = run_federated(CLIENT, SERVER, ds, _cfg("batched", rounds=4),
+                           ckpt_dir=d, resume=True)
+    assert longer.server_acc[:2] == short.server_acc
+    assert len(longer.server_acc) == 4
+    full = run_federated(CLIENT, SERVER, ds, _cfg("batched", rounds=4))
+    _assert_identical(longer, full)
