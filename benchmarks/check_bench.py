@@ -42,12 +42,21 @@ someone, and — fault draws being keyed per (seed, domain, round, cid) — the
 quick run's per-round uplink bytes and quarantine counts must equal the
 committed record's leading rounds exactly.
 
+The PR-9 fleet record (BENCH_fleet, written by benchmarks/fleet_bench.py)
+is gated fresh AND committed (see ``check_fleet``): the host fleet store
+must stay bit-identical to the device store at N=10, its between-round
+device footprint must stay flat as the fleet grows (and strictly below
+the device store's stacked fleet), and the per-round latency at any fleet
+size must stay within 1.15x of the 10-client shape — the out-of-core
+round cost is O(cohort), not O(N).
+
 Run (CI does exactly this):
 
     python benchmarks/engine_bench.py --quick --round-only
     python benchmarks/engine_bench.py --quick --quant-only
     PYTHONPATH=src python examples/scenario_suite.py --quick
     PYTHONPATH=src python examples/fault_suite.py --quick
+    PYTHONPATH=src python benchmarks/fleet_bench.py --quick
     python benchmarks/check_bench.py
 
 Pure stdlib; exits non-zero with a one-line reason per failed check.
@@ -320,6 +329,59 @@ def check_faults(fresh: dict, committed: dict) -> list[str]:
     return failures
 
 
+def check_fleet(record: dict, label: str, *, max_latency_ratio: float = 1.15) -> list[str]:
+    """Gate on a BENCH_fleet record (fresh quick AND committed full — the
+    out-of-core guarantees are scale-independent):
+
+    1. ``host_bit_identical`` true — the host-store N=10 run reproduced
+       the device-store run exactly (per-round k, payload bytes, final
+       fleet state);
+    2. device-resident fleet bytes FLAT across N (ratio <= 1.01): the
+       host store's between-round device footprint must not grow with the
+       fleet — and must sit strictly below the device store's N=10 stack
+       (the fleet actually left the device);
+    3. per-round latency ratio vs the N=10 host run <= ``max_latency_ratio``
+       for every N: streaming the cohort costs O(cohort), not O(N).
+    """
+    failures = []
+
+    if record.get("host_bit_identical") is not True:
+        failures.append(
+            f"[{label}] host_bit_identical is not true: the host store "
+            "diverged from the device store at N=10"
+        )
+
+    fleet = record.get("fleet", {})
+    if len(fleet) < 2:
+        failures.append(f"[{label}] fleet sweep has < 2 sizes: {sorted(fleet)}")
+        return failures
+
+    flat = record.get("ratios", {}).get("host_device_bytes_flat")
+    if flat is None or flat > 1.01:
+        failures.append(
+            f"[{label}] host-store device bytes not flat across N "
+            f"(max/min = {flat}): the between-round device footprint is "
+            "scaling with the fleet"
+        )
+    dev_n10 = record.get("device_n10", {}).get("fleet_device_bytes")
+    host_bytes = [e.get("fleet_device_bytes") for e in fleet.values()]
+    if dev_n10 is None or any(b is None or not b < dev_n10 for b in host_bytes):
+        failures.append(
+            f"[{label}] host-store device bytes {host_bytes} not strictly "
+            f"below the device store's N=10 stack ({dev_n10})"
+        )
+
+    for n, ratio in (record.get("ratios", {}).get("latency_vs_n10") or {}).items():
+        if ratio > max_latency_ratio:
+            failures.append(
+                f"[{label}] N={n} per-round latency {ratio}x the N=10 host "
+                f"run exceeds the {max_latency_ratio}x gate: round cost is "
+                "no longer O(cohort)"
+            )
+
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument(
@@ -367,6 +429,21 @@ def main(argv=None) -> int:
         default=os.path.join(_REPO_ROOT, "BENCH_faults.json"),
         help="the committed full-size fault reference record",
     )
+    ap.add_argument(
+        "--fleet-fresh",
+        default=os.path.join(_REPO_ROOT, "BENCH_fleet.quick.json"),
+        help="fleet record written by the quick bench run just executed",
+    )
+    ap.add_argument(
+        "--fleet-committed",
+        default=os.path.join(_REPO_ROOT, "BENCH_fleet.json"),
+        help="the committed full-size fleet reference record",
+    )
+    ap.add_argument(
+        "--fleet-max-latency-ratio", type=float, default=1.15,
+        help="ceiling for the host store's per-round latency at any fleet "
+             "size vs its N=10 run",
+    )
     args = ap.parse_args(argv)
 
     for path in (args.fresh, args.committed):
@@ -389,6 +466,11 @@ def main(argv=None) -> int:
             print(f"[check_bench] FAIL: {path} does not exist "
                   "(run examples/fault_suite.py --quick first)")
             return 2
+    for path in (args.fleet_fresh, args.fleet_committed):
+        if not os.path.exists(path):
+            print(f"[check_bench] FAIL: {path} does not exist "
+                  "(run benchmarks/fleet_bench.py --quick first)")
+            return 2
     with open(args.fresh) as f:
         fresh = json.load(f)
     with open(args.committed) as f:
@@ -405,12 +487,20 @@ def main(argv=None) -> int:
         faults_fresh = json.load(f)
     with open(args.faults_committed) as f:
         faults_committed = json.load(f)
+    with open(args.fleet_fresh) as f:
+        fleet_fresh = json.load(f)
+    with open(args.fleet_committed) as f:
+        fleet_committed = json.load(f)
 
     failures = check(fresh, committed, min_speedup=args.min_speedup)
     failures += check_quant(quant_fresh, "quant-fresh")
     failures += check_quant(quant_committed, "quant-committed")
     failures += check_scenario(scenario_fresh, scenario_committed)
     failures += check_faults(faults_fresh, faults_committed)
+    failures += check_fleet(fleet_fresh, "fleet-fresh",
+                            max_latency_ratio=args.fleet_max_latency_ratio)
+    failures += check_fleet(fleet_committed, "fleet-committed",
+                            max_latency_ratio=args.fleet_max_latency_ratio)
     if failures:
         for msg in failures:
             print(f"[check_bench] FAIL: {msg}")
@@ -429,7 +519,11 @@ def main(argv=None) -> int:
         "iid bit-identical to legacy, no per-round uplink-bytes regression; "
         f"fault gate: {len(_FAULT_PRESETS)} presets, none bit-identical to "
         "fault-free, corruption quarantines with retrans bytes on the "
-        "ledger, per-round realisations match the committed record"
+        "ledger, per-round realisations match the committed record; fleet "
+        "gate: host store bit-identical to device at N=10, device bytes "
+        f"flat across {sorted(int(n) for n in fleet_fresh['fleet'])} "
+        "clients, per-round latency within "
+        f"{args.fleet_max_latency_ratio}x of the 10-client shape"
     )
     return 0
 

@@ -1,5 +1,8 @@
 from repro.checkpoint.ckpt import (
+    fleet_shard_dir,
+    fleet_shard_name,
     latest_step,
+    list_fleet_shards,
     restore,
     restore_step,
     save,
@@ -8,7 +11,10 @@ from repro.checkpoint.ckpt import (
 )
 
 __all__ = [
+    "fleet_shard_dir",
+    "fleet_shard_name",
     "latest_step",
+    "list_fleet_shards",
     "restore",
     "restore_step",
     "save",

@@ -31,6 +31,9 @@ __all__ = [
     "save_step",
     "restore_step",
     "step_metadata",
+    "fleet_shard_name",
+    "list_fleet_shards",
+    "fleet_shard_dir",
 ]
 
 _SEP = "__"
@@ -173,3 +176,44 @@ def restore_step(ckpt_dir: str, like: Any, step: int | None = None) -> tuple[Any
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
     return restore(_step_path(ckpt_dir, step), like), step
+
+
+# -- per-client fleet shards (PR 9) -------------------------------------
+#
+# A fleet-scale checkpoint splits the per-client state into range shards
+# (``{prefix}_{lo:08d}_{hi:08d}.npz``, each written atomically via
+# :func:`save`) plus the small main step npz.  The orchestration writes
+# the shards FIRST and the main step file LAST, so the presence of a
+# valid ``step_NNNNNNNN.npz`` implies its shards are complete — a crash
+# mid-shard-write leaves no main file and :func:`latest_step` falls back
+# to the previous step.  Shard directories (``step_NNNNNNNN.fleet/``) do
+# not match the step-file pattern, so :func:`latest_step` ignores them.
+
+_SHARD_RE = re.compile(r"^(?P<prefix>.+)_(?P<lo>\d{8})_(?P<hi>\d{8})\.npz$")
+
+
+def fleet_shard_name(prefix: str, lo: int, hi: int) -> str:
+    """Canonical file name of the shard holding clients ``[lo, hi)``."""
+    return f"{prefix}_{lo:08d}_{hi:08d}.npz"
+
+
+def fleet_shard_dir(ckpt_dir: str, step: int) -> str:
+    """The shard directory riding alongside one step's main npz."""
+    return os.path.join(ckpt_dir, f"step_{step:08d}.fleet")
+
+
+def list_fleet_shards(dir_path: str, prefix: str = "fleet") -> list[tuple[int, int, str]]:
+    """All ``(lo, hi, path)`` shard ranges of ``prefix`` in ``dir_path``,
+    sorted by range.  Raises ``FileNotFoundError`` when the directory is
+    missing (a sharded checkpoint whose shard dir vanished is corrupt)."""
+    if not os.path.isdir(dir_path):
+        raise FileNotFoundError(f"no fleet shard directory at {dir_path}")
+    out = []
+    for f in os.listdir(dir_path):
+        m = _SHARD_RE.match(f)
+        if m and m.group("prefix") == prefix:
+            out.append(
+                (int(m.group("lo")), int(m.group("hi")),
+                 os.path.join(dir_path, f))
+            )
+    return sorted(out)

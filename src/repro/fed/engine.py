@@ -1,66 +1,34 @@
-"""Client-phase execution engines for the federated round loop.
+"""Compatibility shim: the engines now live in :mod:`repro.fed.engines`.
 
-The paper's Algorithm 1 runs the selected cohort's client work (local
-distillation, local fine-tuning, public-set inference + adaptive Top-k
-upload) independently per client — embarrassingly parallel across the
-cohort.  Two interchangeable engines execute that phase:
-
-* :class:`SequentialEngine` — the reference implementation: a Python loop
-  over clients, one jitted step per client (the seed repo's behaviour).
-* :class:`BatchedEngine` — keeps the fleet's LoRA/optimizer state stacked
-  along a leading client axis and runs every phase as a single
-  ``jax.vmap``-ed, ``jax.jit``-compiled, donated-buffer step: host
-  dispatches per round drop from O(C·steps) to O(steps), and the client
-  axis is the handle accelerator backends parallelise over (vmap →
-  pmap/shard_map), which is what stops wall-clock scaling linearly with
-  ``clients_per_round`` at the paper's cohort sizes.
-* :class:`FusedEngine` — collapses the batched engine's per-phase calls
-  into ONE donated, jitted round body (distill → fine-tune → public
-  last-position inference → adaptive Top-k with the budget as data): host
-  dispatches per round drop to O(1), and the client axis can optionally be
-  placed over devices with ``jax.experimental.shard_map``
-  (``shard_clients=True``; testable on CPU via
-  ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
-
-All engines are driven by :func:`repro.fed.rounds.run_federated`.
-Sequential and batched are bit-compatible under the same seed; the fused
-engine is tolerance-compatible: identical per-client adaptive ``k`` and
-ledger bytes (the budget math is the same host-side scalar code), while
-accuracies/logits may drift by float round-off because XLA fuses the whole
-round into one program (different op scheduling) and the uplink
-sparsifier uses threshold semantics (exact ties at the k-th value are all
-kept — measure-zero for real logits).  Batches are drawn through the same
-per-client RNG streams in every engine.
-
-Straggler semantics (all engines): a client whose channel state yields
-``k == 0`` transmits nothing — it contributes zero uplink bytes and is
-excluded from the aggregation stack entirely rather than zero-padded in.
+The former 1,900-line monolith was split in PR 9 into
+``repro.fed.engines/{base,batched,fused,e2e,hetero}.py`` (with the fleet
+state itself refactored into :mod:`repro.fed.store`).  Every public — and
+historically-reached-for private — name keeps importing from here, so
+``from repro.fed.engine import FusedEngine`` and friends are unaffected.
 """
 
-from __future__ import annotations
-
-import dataclasses
-from typing import Sequence
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import ModelConfig
-from repro.core.channel import BatchedChannelState, ChannelState, topk_budget_batch
-from repro.core.protocol import UplinkPayload, downlink_bits, lora_projection_bits
-from repro.core.topk import (
-    QUANT_LEVELS,
-    QuantizedWire,
-    SparseWire,
-    concat_wires,
-    densify,
-    take_wire_rows,
-    topk_mask_batch,
+from repro.fed.engines import (  # noqa: F401
+    BatchedEngine,
+    BroadcastState,
+    ClientPhase,
+    FusedE2EEngine,
+    FusedEngine,
+    HeteroClientEngine,
+    HeteroFusedE2EEngine,
+    RoundsTrajectory,
+    SequentialEngine,
+    check_unique_cohort,
+    cohort_budgets,
+    k_cap_bucket,
+    make_engine,
+    tree_stack,
 )
-from repro.fed import steps as fed_steps
-from repro.fed.client import Client, make_upload_payload
-from repro.lora import merge_lora, split_lora
+from repro.fed.engines.base import (  # noqa: F401
+    _channel_scan_ops,
+    _ServerOwnerMixin,
+    fake_quant_dense,
+    shared_frozen_backbone,
+)
 
 __all__ = [
     "BroadcastState",
@@ -76,1898 +44,5 @@ __all__ = [
     "tree_stack",
     "k_cap_bucket",
     "cohort_budgets",
+    "check_unique_cohort",
 ]
-
-
-def cohort_budgets(
-    states,
-    cfg: ModelConfig,
-    n_samples: int,
-    adaptive_k: bool,
-    n_cohort: int,
-    send_h: bool = False,
-    *,
-    value_bits: int = 16,
-    k_min: int = 1,
-    quantize_wire: bool = False,
-) -> list[int]:
-    """Per-client adaptive k for a cohort — ONE host-side scalar routine
-    shared by every engine (and by the fault layer, which must price
-    attempted uploads with exactly the engines' k math so HARQ retries and
-    quarantine decisions can never drift from what the engine transmits).
-
-    With ``send_h`` the LoRA-projection bits are reserved out of each
-    budget first (see :meth:`repro.fed.client.Client.upload`).  Under
-    ``quantize_wire`` the (value, index) entries are priced at 8 value
-    bits — the same Shannon budget genuinely affords a larger k — while
-    the unquantized projection stays at ``value_bits``.
-    """
-    if not adaptive_k:
-        return [cfg.vocab_size] * n_cohort
-    reserved = (
-        lora_projection_bits(n_samples, cfg.lora.rank, value_bits)
-        if (send_h and cfg.lora is not None)
-        else 0
-    )
-    wire_bits = 8 if quantize_wire else value_bits
-    return topk_budget_batch(
-        states, vocab_size=cfg.vocab_size, num_samples=n_samples,
-        value_bits=wire_bits, k_min=k_min, reserved_bits=reserved,
-    )
-
-
-def k_cap_bucket(ks: Sequence[int], vocab: int) -> int:
-    """Static sparse-wire width for a round: the next power of two >=
-    max(ks), clamped to the vocabulary.  Bucketing keeps the number of
-    distinct compiled round executables at O(log2 V) while the adaptive
-    budgets themselves stay DATA (the transmit mask)."""
-    need = max([k for k in ks] + [1])
-    cap = 1
-    while cap < need:
-        cap *= 2
-    return min(cap, vocab)
-
-
-def _channel_scan_ops(channel_scan: dict, num_rounds: int) -> tuple:
-    """Validate + device-stage a ``scan_channel_inputs`` dict for the
-    multi-round drivers: (z0, bad0, w, u, base_snr_db, rho, p_gb, p_bg,
-    fade_scale).  Every element is DATA — the drivers compile one channel
-    program for all scenarios."""
-    try:
-        w = np.asarray(channel_scan["w"])
-    except KeyError as e:
-        raise ValueError(f"channel_scan is missing key {e}") from None
-    if w.ndim != 2 or w.shape[0] < num_rounds:
-        raise ValueError(
-            f"channel_scan covers {w.shape[0] if w.ndim == 2 else '?'} "
-            f"rounds, need {num_rounds} "
-            "(ChannelSimulator.scan_channel_inputs(num_rounds))"
-        )
-    return (
-        jnp.asarray(channel_scan["z0"], jnp.float32),
-        jnp.asarray(channel_scan["bad0"], bool),
-        jnp.asarray(w[:num_rounds], jnp.float32),
-        jnp.asarray(np.asarray(channel_scan["u"])[:num_rounds], jnp.float32),
-        jnp.asarray(
-            np.asarray(channel_scan["base_snr_db"])[:num_rounds], jnp.float32
-        ),
-        jnp.asarray(channel_scan["rho"], jnp.float32),
-        jnp.asarray(channel_scan["p_gb"], jnp.float32),
-        jnp.asarray(channel_scan["p_bg"], jnp.float32),
-        jnp.asarray(channel_scan["fade_scale"], jnp.float32),
-    )
-
-
-def fake_quant_dense(dense: jax.Array) -> jax.Array:
-    """Quantize-dequantize a densified top-k stack through the int8 wire's
-    per-(client, sample)-row symmetric code — what the dense-path engines
-    (batched/fused client phase) apply under ``quantize_wire`` so their
-    uplink carries exactly the values the 8-bit-per-entry ledger prices.
-    Zeros (off-support entries) map to exact zeros, so the support is
-    preserved."""
-    amax = jnp.max(jnp.abs(dense), axis=-1, keepdims=True)
-    scale = jnp.where(amax > 0, amax / QUANT_LEVELS, 1.0)
-    q = jnp.clip(jnp.round(dense / scale), -QUANT_LEVELS, QUANT_LEVELS)
-    return q * scale
-
-
-def tree_stack(trees: Sequence) -> object:
-    """Stack a list of identically-structured pytrees along a new leading
-    (client) axis."""
-    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
-
-
-def shared_frozen_backbone(frozens: Sequence) -> bool:
-    """True iff every client's frozen tree is literally the same arrays —
-    the paper's setting (one pretrained W' under per-client LoRA deltas).
-    Identity, not value comparison: O(leaves), no device work."""
-    first = jax.tree.leaves(frozens[0])
-    for other in frozens[1:]:
-        leaves = jax.tree.leaves(other)
-        if len(leaves) != len(first) or any(a is not b for a, b in zip(first, leaves)):
-            return False
-    return True
-
-
-@dataclasses.dataclass(frozen=True)
-class BroadcastState:
-    """The server's knowledge broadcast carried across rounds (Fig. 1 step 1).
-
-    Replaces the fragile ``pub_tokens_prev`` / ``g_bits`` forward references:
-    the public tokens the knowledge was computed on travel *with* the logits
-    they explain, and the downlink cost is accounted from the same object.
-    """
-
-    tokens: jax.Array  # (P, L) public batch the knowledge was inferred on
-    logits: jax.Array  # (P, V) global logits K_g
-    h: jax.Array | None  # (P, r) global LoRA projection h_g
-    bits: int  # on-air size of one broadcast to one client
-
-
-@dataclasses.dataclass
-class ClientPhase:
-    """Result of one round's client phase, engine-agnostic.
-
-    ``dense``/``h`` hold only the ``num_transmitters`` clients that actually
-    uploaded (leading axis), in cohort order; ``ks`` covers every *selected*
-    client (0 marks a dropped straggler).  The fused-e2e engine reports the
-    uplink as the sparse wire format instead (``sparse``; ``dense`` stays
-    None — no (T, P, V) stack exists on that path).
-    """
-
-    dense: jax.Array | None  # (T, P, V) densified top-k logits
-    h: jax.Array | None  # (T, P, r) LoRA projections
-    payloads: list[UplinkPayload]
-    ks: list[int]
-    # (T, P, k_cap) wire — QuantizedWire under the engines' quantize_wire
-    sparse: SparseWire | QuantizedWire | None = None
-
-    @property
-    def uplink_bytes(self) -> float:
-        return float(sum(p.bytes for p in self.payloads))
-
-    @property
-    def num_transmitters(self) -> int:
-        return len(self.payloads)
-
-
-@dataclasses.dataclass
-class RoundsTrajectory:
-    """Per-round observables of one :meth:`FusedE2EEngine.run_rounds` block.
-
-    ``ks``/``payloads`` are the host-side accounting (identical to what R
-    ``run_round`` calls report); ``mean_k``, ``distill_loss`` and — when
-    eval data was passed — ``server_acc``/``client_acc`` come from the
-    IN-SCAN eval tap: they are scanned outputs of the single compiled
-    multi-round dispatch, not host round-trips.  ``distill_loss`` is the
-    round's final server-distill step loss (NaN for an all-dropped round —
-    the server never distilled).
-
-    Heterogeneous blocks (:meth:`HeteroFusedE2EEngine.run_rounds`)
-    additionally fill ``family_client_acc``: per round, one accuracy per
-    family bucket (fleet bucket order), each evaluated on that bucket's
-    first selected client of the round (or its bucket-local client 0 when
-    the family sat the round out).  ``client_acc`` remains the cohort's
-    first selected client — the host loop's metric — which is always one of
-    those family entries.
-    """
-
-    ks: list[list[int]]
-    payloads: list[list[UplinkPayload]]
-    mean_k: list[float]
-    distill_loss: list[float]
-    server_acc: list[float] | None = None
-    client_acc: list[float] | None = None
-    family_client_acc: list[list[float]] | None = None
-    # Scenario runs only (``channel_scan`` passed): the in-scan channel
-    # replica's per-round realised cohort SNR (dB, -inf in outage) and
-    # Gilbert-Elliott outage flags — scanned outputs of the same compiled
-    # dispatch, evolved from the channel carry (f32 replica of the host
-    # realisation that priced ``ks``/``payloads``).
-    snr_db: list[list[float]] | None = None
-    outage: list[list[bool]] | None = None
-
-
-class SequentialEngine:
-    """Reference client-phase executor: one client at a time (Algorithm 1
-    exactly as written)."""
-
-    name = "sequential"
-
-    def __init__(
-        self,
-        clients: list[Client],
-        cfg: ModelConfig,
-        *,
-        value_bits: int = 16,
-        k_min: int = 1,
-        **_unused,
-    ):
-        self.clients = clients
-        self.cfg = cfg
-        self.value_bits = value_bits
-        self.k_min = k_min
-
-    def client_params(self, cid: int):
-        """Current parameters of one client (for evaluation)."""
-        return self.clients[cid].params
-
-    def fleet_state(self) -> dict:
-        """The whole fleet's trainable state as one checkpointable pytree.
-        Per-client subtrees (not a stacked axis): the sequential engine
-        serves mixed-architecture fleets natively, so client leaves need
-        not share shapes."""
-        return {
-            f"client{i}": {"params": c.params, "opt": c.opt}
-            for i, c in enumerate(self.clients)
-        }
-
-    def load_fleet_state(self, state: dict) -> None:
-        for i, c in enumerate(self.clients):
-            c.params = jax.tree.map(jnp.asarray, state[f"client{i}"]["params"])
-            c.opt = jax.tree.map(jnp.asarray, state[f"client{i}"]["opt"])
-
-    def run_round(
-        self,
-        sel: Sequence[int],
-        pub_tokens: jax.Array,
-        bcast: BroadcastState | None,
-        states: BatchedChannelState | Sequence[ChannelState],
-        *,
-        adaptive_k: bool,
-        send_h: bool,
-    ) -> ClientPhase:
-        cohort = [self.clients[i] for i in sel]
-        if bcast is not None:
-            for c in cohort:
-                c.local_distill(bcast.tokens, bcast.logits, bcast.h)
-        dense_rows, hs, payloads, ks = [], [], [], []
-        for c, st in zip(cohort, states):
-            c.local_train()
-            up = c.upload(
-                pub_tokens,
-                st,
-                value_bits=self.value_bits,
-                k_override=None if adaptive_k else self.cfg.vocab_size,
-                send_h=send_h,
-                k_min=self.k_min,
-            )
-            if up is None:  # straggler in outage: transmits nothing
-                ks.append(0)
-                continue
-            ks.append(up.k)
-            dense_rows.append(densify(up.sparse))
-            if up.h is not None:
-                hs.append(up.h)
-            payloads.append(up.payload)
-        return ClientPhase(
-            dense=jnp.stack(dense_rows) if dense_rows else None,
-            h=jnp.stack(hs) if hs else None,
-            payloads=payloads,
-            ks=ks,
-        )
-
-
-class BatchedEngine:
-    """Batched client-phase executor: the whole cohort advances through each
-    phase as one compiled step over a leading client axis.
-
-    The fleet's trainable state lives STACKED on this engine: at
-    construction every client's LoRA tree and optimizer state are stacked
-    along a leading ``(num_clients, ...)`` axis (the frozen backbone is kept
-    as one shared tree when all clients ride the same pretrained W' — the
-    paper's setting — or stacked otherwise).  A round then gathers the
-    selected cohort's rows with ONE gather per leaf, runs the vmapped
-    phases, and scatters the advanced rows back — no per-client
-    stack/unstack/merge churn on the hot path.  The engine is the source of
-    truth for client parameters while it is in use; read them back through
-    :meth:`client_params`.
-    """
-
-    name = "batched"
-
-    def __init__(
-        self,
-        clients: list[Client],
-        cfg: ModelConfig,
-        *,
-        num_classes: int,
-        lr: float = 1e-3,
-        distill_lr: float = 1e-3,
-        temperature: float = 2.0,
-        lam: float = 0.03,
-        local_steps: int = 4,
-        distill_steps: int = 2,
-        restrict_to_support: bool = False,
-        value_bits: int = 16,
-        k_min: int = 1,
-        last_only: bool = True,
-        class_head_only: bool = True,
-        quantize_wire: bool = False,
-    ):
-        self.clients = clients
-        self.cfg = cfg
-        self.local_steps = local_steps
-        self.distill_steps = distill_steps
-        self.value_bits = value_bits
-        self.k_min = k_min
-        self.last_only = last_only
-        self.quantize_wire = quantize_wire
-
-        loras, frozens = zip(*(split_lora(c.params) for c in clients))
-        self._shared = shared_frozen_backbone(frozens)
-        self._lora = tree_stack(loras)  # (N, ...)
-        self._frozen = frozens[0] if self._shared else tree_stack(frozens)
-        self._opt = tree_stack([c.opt for c in clients])
-        self._train = fed_steps.make_batched_finetune_step(
-            cfg, num_classes, lr=lr, shared_backbone=self._shared, last_only=last_only,
-            class_head_only=class_head_only,
-        )
-        self._distill = fed_steps.make_batched_distill_step(
-            cfg, lr=distill_lr, temperature=temperature, lam=lam,
-            restrict_to_support=restrict_to_support, shared_backbone=self._shared,
-            last_only=last_only,
-        )
-        self._public = fed_steps.make_batched_public_logits(
-            cfg, shared_backbone=self._shared, last_only=last_only
-        )
-
-    def client_params(self, cid: int):
-        """Materialise one client's merged params (for evaluation)."""
-        lora_i = jax.tree.map(lambda x: x[cid], self._lora)
-        frozen_i = (
-            self._frozen if self._shared
-            else jax.tree.map(lambda x: x[cid], self._frozen)
-        )
-        return merge_lora(lora_i, frozen_i)
-
-    def fleet_state(self) -> dict:
-        """The engine-held fleet state as one checkpointable pytree.  The
-        frozen backbone is included so a restored run never depends on the
-        construction path reproducing it (it does today, but checkpoints
-        should stand alone)."""
-        return {"lora": self._lora, "opt": self._opt, "frozen": self._frozen}
-
-    def load_fleet_state(self, state: dict) -> None:
-        as_jax = lambda tree: jax.tree.map(jnp.asarray, tree)  # noqa: E731
-        self._lora = as_jax(state["lora"])
-        self._opt = as_jax(state["opt"])
-        self._frozen = as_jax(state["frozen"])
-
-    # -- round plumbing shared by the batched and fused engines ----------
-    def _gather_cohort(self, sel: Sequence[int]):
-        """One gather per leaf: the selected cohort's (lora, frozen, opt)."""
-        idx = jnp.asarray(list(sel))
-        lora = jax.tree.map(lambda x: x[idx], self._lora)
-        opt = jax.tree.map(lambda x: x[idx], self._opt)
-        frozen = (
-            self._frozen if self._shared
-            else jax.tree.map(lambda x: x[idx], self._frozen)
-        )
-        return idx, lora, frozen, opt
-
-    def _scatter_cohort(self, idx, lora, opt) -> None:
-        """Write the advanced cohort rows back into the fleet state."""
-        self._lora = jax.tree.map(
-            lambda full, new: full.at[idx].set(new), self._lora, lora
-        )
-        self._opt = jax.tree.map(
-            lambda full, new: full.at[idx].set(new), self._opt, opt
-        )
-
-    def _budgets(
-        self, states, n_samples: int, adaptive_k: bool, n_cohort: int,
-        send_h: bool = False,
-    ):
-        """Per-client adaptive k — delegates to the module-level
-        :func:`cohort_budgets` (the same host-side scalar math as the
-        sequential reference, so k and bytes can never drift)."""
-        return cohort_budgets(
-            states, self.cfg, n_samples, adaptive_k, n_cohort, send_h,
-            value_bits=self.value_bits, k_min=self.k_min,
-            quantize_wire=self.quantize_wire,
-        )
-
-    def _upload_manifests(self, cohort, states, ks, n_samples: int, send_h: bool):
-        """(active indices, payload manifests, lora rank) for the k > 0
-        transmitters — dropped stragglers contribute nothing."""
-        active = [i for i, k in enumerate(ks) if k > 0]
-        payloads: list[UplinkPayload] = []
-        rank = None
-        for i in active:
-            payload, rank = make_upload_payload(
-                self.cfg, cohort[i].client_id, n_samples, ks[i],
-                send_h=send_h, value_bits=self.value_bits,
-                snr_db=states[i].snr_db, quantize=self.quantize_wire,
-            )
-            payloads.append(payload)
-        return active, payloads, rank
-
-    def _stacked_batches(self, cohort, *, step_major: bool):
-        """Each client's next ``local_steps`` private batches, drawn through
-        its OWN rng stream (identical to the sequential path).  Returns a
-        list of step-major dicts (one per step) or one client-major dict
-        with a (C, S, ...) leading layout."""
-        per_client = [c.next_train_batches(self.local_steps) for c in cohort]
-        keys = per_client[0][0].keys()
-        if step_major:
-            return [
-                {key: jnp.asarray(np.stack([b[s][key] for b in per_client]))
-                 for key in keys}
-                for s in range(self.local_steps)
-            ]
-        return {
-            key: jnp.asarray(
-                np.stack([np.stack([b[s][key] for s in range(self.local_steps)])
-                          for b in per_client])
-            )
-            for key in keys
-        }
-
-    def run_round(
-        self,
-        sel: Sequence[int],
-        pub_tokens: jax.Array,
-        bcast: BroadcastState | None,
-        states: BatchedChannelState | Sequence[ChannelState],
-        *,
-        adaptive_k: bool,
-        send_h: bool,
-    ) -> ClientPhase:
-        cohort = [self.clients[i] for i in sel]
-        states = list(states)
-        idx, lora, frozen, opt = self._gather_cohort(sel)
-
-        # -- lines 5-7: cohort distillation against the shared broadcast --
-        if bcast is not None:
-            for _ in range(self.distill_steps):
-                lora, opt, _ = self._distill(
-                    lora, frozen, opt, bcast.tokens, bcast.logits, bcast.h
-                )
-
-        # -- line 8: local fine-tuning, one vmapped update per step --
-        for jb in self._stacked_batches(cohort, step_major=True):
-            lora, opt, _ = self._train(lora, frozen, opt, jb)
-
-        # -- lines 9-11: public inference + per-client adaptive top-k --
-        n_samples = int(pub_tokens.shape[0])
-        ks = self._budgets(states, n_samples, adaptive_k, len(cohort), send_h)
-
-        logits, h = self._public(lora, frozen, pub_tokens)  # (C, P, V), (C, P, r)|None
-
-        active, payloads, rank = self._upload_manifests(
-            cohort, states, ks, n_samples, send_h
-        )
-        dense = h_out = None
-        if active:
-            take = jnp.asarray(active) if len(active) < len(cohort) else None
-            act_logits = logits if take is None else logits[take]
-            dense = topk_mask_batch(act_logits, [ks[i] for i in active])
-            if self.quantize_wire:
-                dense = fake_quant_dense(dense)
-            if rank is not None and h is not None:
-                h_out = h if take is None else h[take]
-
-        self._scatter_cohort(idx, lora, opt)
-        return ClientPhase(dense=dense, h=h_out, payloads=payloads, ks=ks)
-
-
-class FusedEngine(BatchedEngine):
-    """Single-jit round-body executor: the batched engine's per-phase calls
-    (distill steps, fine-tune steps, public inference, top-k) collapse into
-    ONE donated, compiled step per round (`fed_steps.make_fused_round_fn`).
-
-    Per-client adaptive ``k`` enters the program as DATA (int32 per client),
-    so one executable serves every round regardless of the channel
-    realisation; the uplink sparsifier is the threshold-semantics bisection
-    (ties at the k-th value are kept) — pure-jnp ``topk_mask_dynamic`` by
-    default, or the per-row-budget Pallas kernel with ``use_kernels=True``.
-    Byte accounting still uses the exact host-side ``k``s, so the ledger is
-    identical to the other engines.
-
-    ``shard_clients=True`` additionally places the leading client axis over
-    the process's devices with ``shard_map``; a cohort that does not divide
-    the device count is padded with masked duplicate rows (``k = 0`` — they
-    transmit nothing, are excluded from aggregation, and their advanced
-    state is discarded before the scatter-back).  On CPU this is testable
-    via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
-    """
-
-    name = "fused"
-
-    def __init__(
-        self,
-        clients: list[Client],
-        cfg: ModelConfig,
-        *,
-        num_classes: int,
-        lr: float = 1e-3,
-        distill_lr: float = 1e-3,
-        temperature: float = 2.0,
-        lam: float = 0.03,
-        local_steps: int = 4,
-        distill_steps: int = 2,
-        restrict_to_support: bool = False,
-        value_bits: int = 16,
-        k_min: int = 1,
-        last_only: bool = True,
-        shard_clients: bool = False,
-        use_kernels: bool = False,
-        class_head_only: bool = True,
-        quantize_wire: bool = False,
-        compute_dtype: str = "float32",
-    ):
-        super().__init__(
-            clients, cfg, num_classes=num_classes, lr=lr, distill_lr=distill_lr,
-            temperature=temperature, lam=lam, local_steps=local_steps,
-            distill_steps=distill_steps, restrict_to_support=restrict_to_support,
-            value_bits=value_bits, k_min=k_min, last_only=last_only,
-            class_head_only=class_head_only, quantize_wire=quantize_wire,
-        )
-        self.shard_clients = shard_clients
-        self.compute_dtype = compute_dtype
-
-        def fused(n_distill: int):
-            fn = fed_steps.make_fused_round_fn(
-                cfg, num_classes, lr=lr, distill_lr=distill_lr,
-                temperature=temperature, lam=lam,
-                restrict_to_support=restrict_to_support,
-                local_steps=local_steps, distill_steps=n_distill,
-                shared_backbone=self._shared, last_only=last_only,
-                use_kernels=use_kernels, class_head_only=class_head_only,
-                compute_dtype=compute_dtype,
-            )
-            if shard_clients:
-                fn = self._shard_over_clients(fn)
-            return jax.jit(fn, donate_argnums=(0, 2))
-
-        self._fused_warm = fused(distill_steps)
-        self._fused_cold = fused(0)  # round 0: no broadcast knowledge yet
-
-    def _shard_over_clients(self, fn):
-        from jax.experimental.shard_map import shard_map
-        from jax.sharding import PartitionSpec as P
-
-        from repro.sharding import COHORT_AXIS, cohort_mesh
-
-        c, r = P(COHORT_AXIS), P()
-        frozen_spec = r if self._shared else c
-        return shard_map(
-            fn,
-            mesh=cohort_mesh(),
-            in_specs=(c, frozen_spec, c, r, r, r, c, r, c),
-            out_specs=(c, c, c, c),
-            check_rep=False,
-        )
-
-    def _pad_cohort(self, sel: Sequence[int], batches: dict):
-        """THE masked k = 0 shard-padding contract, in one place (used by the
-        fused client-phase round, the e2e whole round, and the e2e
-        multi-round scan): a cohort that does not divide the device count is
-        extended with duplicate rows of client ``sel[0]`` that ride at
-        ``k = 0`` — they compute alongside the cohort but transmit nothing,
-        and every caller discards their advanced state before it can be
-        observed.  Their batches are COPIES (``sel[0]``'s rng stream
-        advances exactly once).  Returns ``(pad, sel + pad dups, padded
-        batches)``; a no-op (pad 0) unless ``shard_clients``."""
-        pad = (-len(sel)) % jax.device_count() if self.shard_clients else 0
-        if not pad:
-            return 0, list(sel), batches
-        batches = {
-            key: jnp.concatenate([v, jnp.repeat(v[:1], pad, axis=0)])
-            for key, v in batches.items()
-        }
-        return pad, list(sel) + [sel[0]] * pad, batches
-
-    @staticmethod
-    def _drop_pad(n: int, *trees):
-        """Inverse of :meth:`_pad_cohort`: truncate every given pytree (or
-        array, or None) back to the ``n`` real leading-cohort rows — the one
-        place the 'pad state must never be observed' side of the contract
-        lives."""
-        out = tuple(jax.tree.map(lambda x: x[:n], t) for t in trees)
-        return out if len(out) > 1 else out[0]
-
-    def run_round(
-        self,
-        sel: Sequence[int],
-        pub_tokens: jax.Array,
-        bcast: BroadcastState | None,
-        states: BatchedChannelState | Sequence[ChannelState],
-        *,
-        adaptive_k: bool,
-        send_h: bool,
-    ) -> ClientPhase:
-        cohort = [self.clients[i] for i in sel]
-        states = list(states)
-        batches = self._stacked_batches(cohort, step_major=False)  # (C, S, ...)
-        pad, sel_call, batches = self._pad_cohort(sel, batches)
-        idx, lora, frozen, opt = self._gather_cohort(sel_call)
-        n_samples = int(pub_tokens.shape[0])
-        ks = self._budgets(states, n_samples, adaptive_k, len(cohort), send_h)
-
-        # -- the whole client phase: ONE compiled, donated call --
-        if bcast is not None:
-            step = self._fused_warm
-            g_tokens, g_logits, g_h = bcast.tokens, bcast.logits, bcast.h
-        else:
-            step = self._fused_cold  # g_* operands are unused and DCE'd
-            g_tokens, g_logits, g_h = pub_tokens, jnp.zeros(
-                (n_samples, self.cfg.vocab_size), jnp.float32), None
-        lora, opt, dense_all, h_all = step(
-            lora, frozen, opt, g_tokens, g_logits, g_h, batches, pub_tokens,
-            jnp.asarray(ks + [0] * pad, jnp.int32),
-        )
-        if pad:  # drop the padded rows before anything observes them
-            lora, opt, dense_all, h_all, idx = self._drop_pad(
-                len(cohort), lora, opt, dense_all, h_all, idx
-            )
-
-        active, payloads, rank = self._upload_manifests(
-            cohort, states, ks, n_samples, send_h
-        )
-        dense = h_out = None
-        if active:
-            take = jnp.asarray(active) if len(active) < len(cohort) else None
-            dense = dense_all if take is None else dense_all[take]
-            if self.quantize_wire:
-                dense = fake_quant_dense(dense)
-            if rank is not None and h_all is not None:
-                h_out = h_all if take is None else h_all[take]
-
-        self._scatter_cohort(idx, lora, opt)
-        return ClientPhase(dense=dense, h=h_out, payloads=payloads, ks=ks)
-
-
-class _ServerOwnerMixin:
-    """Server-state plumbing shared by the end-to-end engines (homogeneous
-    :class:`FusedE2EEngine` and bucketed :class:`HeteroFusedE2EEngine`):
-    they own the server LLM's state for the duration of a run, compute the
-    broadcast in-program, and sync back for evaluation/checkpointing.
-
-    Expects the owner to maintain ``server``, ``_s_lora``/``_s_frozen``/
-    ``_s_opt``, the broadcast carry ``_b_tokens``/``_b_logits``/``_b_h``
-    and the observability tap ``_d_loss``.
-    """
-
-    handles_server = True
-
-    def _init_server_state(self, server) -> None:
-        self.server = server
-        self._s_lora, self._s_frozen = split_lora(server.params)
-        self._s_opt = server.opt
-        # broadcast knowledge computed in-program, carried across rounds
-        self._b_tokens: jax.Array | None = None
-        self._b_logits: jax.Array | None = None
-        self._b_h: jax.Array | None = None
-        self._d_loss: jax.Array | None = None
-
-    def _cold_broadcast(self, pub_tokens: jax.Array, n_samples: int):
-        """Round-0 placeholder g_* operands (same arg structure as a warm
-        round; ``g_valid=False`` discards their effect in-program)."""
-        g_logits = jnp.zeros((n_samples, self.server.cfg.vocab_size), jnp.float32)
-        if self.server.cfg.lora is not None:
-            g_h = jnp.zeros((n_samples, self.server.cfg.lora.rank), jnp.float32)
-        else:
-            g_h = None
-        return pub_tokens, g_logits, g_h
-
-    def broadcast_state(self, pub_tokens: jax.Array) -> BroadcastState:
-        """The in-program-refreshed broadcast of the LAST executed round, as
-        the host-side carrier (byte accounting identical to
-        :meth:`repro.fed.server.Server.broadcast`)."""
-        assert self._b_logits is not None, "no round has run yet"
-        rank = (
-            self.server.cfg.lora.rank
-            if (self.server.cfg.lora is not None and self._b_h is not None)
-            else None
-        )
-        bits = downlink_bits(
-            int(self._b_logits.shape[0]), int(self._b_logits.shape[-1]), rank
-        )
-        return BroadcastState(
-            tokens=pub_tokens, logits=self._b_logits, h=self._b_h, bits=bits
-        )
-
-    @property
-    def last_distill_loss(self) -> float:
-        """The final server-distill step loss of the last executed round
-        (computed in-program; NaN before any round ran or for an all-dropped
-        round)."""
-        return float("nan") if self._d_loss is None else float(self._d_loss)
-
-    def sync_server(self) -> None:
-        """Materialise the engine-held server state back onto the Server
-        object (for evaluation / checkpointing)."""
-        self.server.params = merge_lora(self._s_lora, self._s_frozen)
-        self.server.opt = self._s_opt
-
-    def server_state(self) -> dict:
-        """The engine-held server state as one checkpointable pytree."""
-        return {
-            "s_lora": self._s_lora,
-            "s_frozen": self._s_frozen,
-            "s_opt": self._s_opt,
-        }
-
-    def load_server_state(self, state: dict) -> None:
-        as_jax = lambda tree: jax.tree.map(jnp.asarray, tree)  # noqa: E731
-        self._s_lora = as_jax(state["s_lora"])
-        self._s_frozen = as_jax(state["s_frozen"])
-        self._s_opt = as_jax(state["s_opt"])
-        self.sync_server()
-
-    def load_broadcast(self, tokens, logits, h=None) -> None:
-        """Restore the in-program broadcast carry (the knowledge the NEXT
-        round's cohort distills against) from a checkpoint."""
-        self._b_tokens = jnp.asarray(tokens)
-        self._b_logits = jnp.asarray(logits)
-        self._b_h = None if h is None else jnp.asarray(h)
-
-
-class FusedE2EEngine(_ServerOwnerMixin, FusedEngine):
-    """Whole-round single-executable engine: client phase AND server phase
-    (adaptive aggregation, server distillation, broadcast recomputation) as
-    ONE donated, compiled call per round — and the uplink crosses the
-    engine/server boundary as the sparse wire format ``(values, indices,
-    transmit mask)`` of width ``k_cap`` instead of a densified ``(C, P, V)``
-    stack, so the aggregation working set is O(C·P·k_cap).
-
-    The engine owns the server LLM's state for the duration of the run
-    (pulled from the :class:`repro.fed.server.Server` at construction);
-    :meth:`sync_server` writes the merged parameters back for evaluation,
-    and :meth:`broadcast_state` exposes the in-program-computed broadcast to
-    the round loop.  Cold-server round 0 and all-dropped rounds are DATA
-    (masks) inside the executable, not Python control flow, so one
-    executable serves every round of a run (per power-of-two ``k_cap``
-    bucket — see :func:`k_cap_bucket`).
-
-    ``shard_clients=True`` places the client phase's cohort axis over the
-    process's devices INSIDE the compiled round body (``shard_map`` in
-    :func:`repro.fed.steps.make_fused_e2e_round_fn`); the server phase stays
-    replicated.  Cohorts that do not divide the device count are padded with
-    masked ``k = 0`` duplicate rows exactly like the fused client-phase
-    engine — the pad transmits nothing, is excluded from aggregation by its
-    all-False wire mask, and its advanced state is discarded before the
-    scatter-back.
-
-    :meth:`run_rounds` additionally scans R whole rounds inside one
-    compiled call (steady-state dispatch fully amortised) and taps each
-    round's server/client accuracy, server-distill loss and mean adaptive
-    ``k`` as scanned outputs — a full :class:`RoundsTrajectory` instead of a
-    blind block.
-    """
-
-    name = "fused_e2e"
-    handles_server = True
-
-    def __init__(
-        self,
-        clients: list[Client],
-        cfg: ModelConfig,
-        *,
-        server,
-        num_classes: int,
-        lr: float = 1e-3,
-        distill_lr: float = 1e-3,
-        temperature: float = 2.0,
-        lam: float = 0.03,
-        local_steps: int = 4,
-        distill_steps: int = 2,
-        server_distill_steps: int = 12,
-        aggregation: str = "adaptive",
-        restrict_to_support: bool = False,
-        value_bits: int = 16,
-        k_min: int = 1,
-        last_only: bool = True,
-        shard_clients: bool = False,
-        use_kernels: bool = False,
-        quantize_wire: bool = False,
-        compute_dtype: str = "float32",
-    ):
-        super().__init__(
-            clients, cfg, num_classes=num_classes, lr=lr, distill_lr=distill_lr,
-            temperature=temperature, lam=lam, local_steps=local_steps,
-            distill_steps=distill_steps, restrict_to_support=restrict_to_support,
-            value_bits=value_bits, k_min=k_min, last_only=last_only,
-            use_kernels=use_kernels, quantize_wire=quantize_wire,
-            compute_dtype=compute_dtype,
-        )
-        self.shard_clients = shard_clients
-        self._fn_kwargs = dict(
-            lr=lr, distill_lr=distill_lr, temperature=temperature, lam=lam,
-            restrict_to_support=restrict_to_support, local_steps=local_steps,
-            distill_steps=distill_steps,
-            server_distill_steps=server_distill_steps,
-            aggregation=aggregation, shared_backbone=self._shared,
-            last_only=last_only, use_kernels=use_kernels,
-            shard_clients=shard_clients, quantize=quantize_wire,
-            compute_dtype=compute_dtype,
-        )
-        self._num_classes = num_classes
-        self._init_server_state(server)
-        self._steps: dict = {}
-        self._drivers: dict = {}
-
-    # -- compiled-step caches -------------------------------------------
-    def _e2e_fn(self, k_cap: int, send_h: bool):
-        """The unjitted whole-round body for one (k_cap, send_h) bucket."""
-        return fed_steps.make_fused_e2e_round_fn(
-            self.cfg, self.server.cfg, self._num_classes,
-            k_cap=k_cap, send_h=send_h, **self._fn_kwargs,
-        )
-
-    def _e2e_step(self, k_cap: int, send_h: bool):
-        key = (k_cap, send_h)
-        if key not in self._steps:
-            self._steps[key] = jax.jit(
-                self._e2e_fn(k_cap, send_h), donate_argnums=(0, 2, 3, 5)
-            )
-        return self._steps[key]
-
-    # -- single whole round: ONE compiled call ---------------------------
-    def run_round(
-        self,
-        sel: Sequence[int],
-        pub_tokens: jax.Array,
-        bcast: BroadcastState | None,
-        states: BatchedChannelState | Sequence[ChannelState],
-        *,
-        adaptive_k: bool,
-        send_h: bool,
-    ) -> ClientPhase:
-        cohort = [self.clients[i] for i in sel]
-        states = list(states)
-        batches = self._stacked_batches(cohort, step_major=False)
-        pad, sel_call, batches = self._pad_cohort(sel, batches)
-        idx, lora, frozen, opt = self._gather_cohort(sel_call)
-        n_samples = int(pub_tokens.shape[0])
-        ks = self._budgets(states, n_samples, adaptive_k, len(cohort), send_h)
-        k_cap = k_cap_bucket(ks, self.cfg.vocab_size)
-
-        if bcast is not None:
-            g_tokens, g_logits, g_h = bcast.tokens, bcast.logits, bcast.h
-            g_valid = True
-        else:
-            g_tokens, g_logits, g_h = self._cold_broadcast(pub_tokens, n_samples)
-            g_valid = False
-
-        step = self._e2e_step(k_cap, send_h)
-        (lora, opt, self._s_lora, self._s_opt,
-         values, indices, scale, b_logits, b_h, self._d_loss) = step(
-            lora, frozen, opt, self._s_lora, self._s_frozen, self._s_opt,
-            g_tokens, g_logits, g_h, jnp.asarray(g_valid),
-            batches, pub_tokens, jnp.asarray(ks + [0] * pad, jnp.int32),
-        )
-        if pad:  # drop the padded rows before anything observes them
-            lora, opt, values, indices, scale, idx = self._drop_pad(
-                len(cohort), lora, opt, values, indices, scale, idx
-            )
-        self._b_tokens, self._b_logits, self._b_h = pub_tokens, b_logits, b_h
-
-        active, payloads, _rank = self._upload_manifests(
-            cohort, states, ks, n_samples, send_h
-        )
-        sparse = None
-        if active:
-            take = jnp.asarray(active)
-            ks_active = jnp.asarray([ks[i] for i in active], jnp.int32)
-            mask = (
-                jnp.arange(k_cap, dtype=jnp.int32)[None, None, :]
-                < ks_active[:, None, None]
-            )
-            mask = jnp.broadcast_to(mask, values[take].shape)
-            if self.quantize_wire:
-                sparse = QuantizedWire(
-                    values=values[take], scale=scale[take],
-                    indices=indices[take], mask=mask,
-                    vocab=self.cfg.vocab_size,
-                )
-            else:
-                sparse = SparseWire(
-                    values=values[take], indices=indices[take], mask=mask,
-                    vocab=self.cfg.vocab_size,
-                )
-
-        self._scatter_cohort(idx, lora, opt)
-        return ClientPhase(dense=None, h=None, payloads=payloads, ks=ks, sparse=sparse)
-
-    # -- multi-round scan driver ------------------------------------------
-    def _rounds_driver(
-        self, k_cap: int, send_h: bool, num_rounds: int, n_real: int,
-        has_eval: bool, has_chan: bool,
-    ):
-        key = (k_cap, send_h, num_rounds, n_real, has_eval, has_chan)
-        if key in self._drivers:
-            return self._drivers[key]
-        fn = self._e2e_fn(k_cap, send_h)
-        has_h = self.server.cfg.lora is not None
-        # in-scan channel replica: scenario dynamics as f32 data, so the
-        # same executable serves every preset (rho=0 == i.i.d.)
-        chan_step = fed_steps.make_channel_step_fn() if has_chan else None
-        # in-scan eval tap: same last-position class-logit accuracy as the
-        # host-side make_eval_fn, traced into the scanned round program
-        server_eval = fed_steps.make_scan_eval_fn(
-            self.server.cfg, self._num_classes, last_only=self.last_only
-        )
-        client_eval = fed_steps.make_scan_eval_fn(
-            self.cfg, self._num_classes, last_only=self.last_only
-        )
-
-        shared = self._shared
-
-        def driver(fleet_lora, fleet_opt, s_lora, s_opt, frozen, s_frozen,
-                   g_tokens, g_logits, g_h, g_valid, sels, kss, pubs, batches,
-                   chan, *eval_args):
-            if has_chan:
-                ch_z0, ch_bad0, ch_w, ch_u, ch_base, rho, p_gb, p_bg, fade = chan
-
-            def body(carry, xs):
-                (fleet_lora, fleet_opt, s_lora, s_opt,
-                 g_tokens, g_logits, g_h, g_valid, ch_state) = carry
-                sel, ks, pub, bat, ch_xs = xs
-                lora = jax.tree.map(lambda x: x[sel], fleet_lora)
-                opt = jax.tree.map(lambda x: x[sel], fleet_opt)
-                # one shared W' broadcasts into the cohort; per-client
-                # backbones are fleet-stacked and gather their cohort rows
-                # exactly like the LoRA/opt state (frozen_ax=0 downstream)
-                frz = frozen if shared else jax.tree.map(lambda x: x[sel], frozen)
-                lora, opt, s_lora, s_opt, _v, _i, _sc, b_logits, b_h, d_loss = fn(
-                    lora, frz, opt, s_lora, s_frozen, s_opt,
-                    g_tokens, g_logits, g_h if has_h else None, g_valid,
-                    bat, pub, ks,
-                )
-                # drop the shard-padding rows (duplicates of sel[0]) BEFORE
-                # the scatter-back: .at[sel].set with duplicate indices has
-                # unspecified ordering, and the pad's advanced state must
-                # never be observed anyway
-                lora, opt = self._drop_pad(n_real, lora, opt)
-                sel_real = sel[:n_real]
-                fleet_lora = jax.tree.map(
-                    lambda full, new: full.at[sel_real].set(new), fleet_lora, lora
-                )
-                fleet_opt = jax.tree.map(
-                    lambda full, new: full.at[sel_real].set(new), fleet_opt, opt
-                )
-                # -- the eval tap: this round's trajectory entry ----------
-                tap = {
-                    "distill_loss": d_loss,
-                    "mean_k": jnp.mean(ks[:n_real].astype(jnp.float32)),
-                }
-                if has_eval:
-                    ev_tokens, ev_labels = eval_args
-                    tap["server_acc"] = server_eval(
-                        s_lora, s_frozen, ev_tokens, ev_labels
-                    )
-                    tap["client_acc"] = client_eval(
-                        jax.tree.map(lambda x: x[0], lora),
-                        frz if shared else jax.tree.map(lambda x: x[0], frz),
-                        ev_tokens, ev_labels,
-                    )
-                if has_chan:
-                    # channel state advances as scan carry; the realised
-                    # cohort SNR/outage are tapped as scanned outputs
-                    ch_z, ch_bad = ch_state
-                    w_t, u_t, base_t = ch_xs
-                    ch_z, ch_bad, snr = chan_step(
-                        ch_z, ch_bad, w_t, u_t, base_t, rho, p_gb, p_bg, fade
-                    )
-                    ch_state = (ch_z, ch_bad)
-                    tap["snr_db"] = snr[sel[:n_real]]
-                    tap["outage"] = ch_bad[sel[:n_real]]
-                carry = (
-                    fleet_lora, fleet_opt, s_lora, s_opt,
-                    pub, b_logits, b_h if has_h else g_h, jnp.ones((), bool),
-                    ch_state,
-                )
-                return carry, tap
-
-            ch_state0 = (ch_z0, ch_bad0) if has_chan else ()
-            ch_xs_all = (ch_w, ch_u, ch_base) if has_chan else ()
-            carry, taps = jax.lax.scan(
-                body,
-                (fleet_lora, fleet_opt, s_lora, s_opt,
-                 g_tokens, g_logits, g_h, g_valid, ch_state0),
-                (sels, kss, pubs, batches, ch_xs_all),
-                length=num_rounds,
-            )
-            return carry, taps
-
-        jitted = jax.jit(driver, donate_argnums=(0, 1, 2, 3))
-        self._drivers[key] = jitted
-        return jitted
-
-    def run_rounds(
-        self,
-        sels: Sequence[Sequence[int]],
-        pubs: Sequence[jax.Array],
-        states_per_round: Sequence,
-        *,
-        adaptive_k: bool,
-        send_h: bool,
-        eval_tokens: jax.Array | None = None,
-        eval_labels: jax.Array | None = None,
-        channel_scan: dict | None = None,
-    ) -> "RoundsTrajectory":
-        """Run R whole federated rounds as ONE compiled ``lax.scan`` — the
-        steady-state amortised driver (dispatch cost O(1) for the block).
-
-        ``channel_scan`` (a :meth:`ChannelSimulator.scan_channel_inputs`
-        dict) additionally evolves the scenario channel state — AR(1)
-        fading ``z``, Gilbert-Elliott outage — INSIDE the scan as carry,
-        with every dynamics parameter an f32 data operand: one executable
-        serves all scenario presets (``rho = 0`` replays i.i.d.).  The
-        per-round realised cohort SNR/outage come back as scanned outputs
-        (``RoundsTrajectory.snr_db``/``outage``); budgets stay host-side
-        scalar math, priced from the same (seed, round, cid)-keyed chain.
-
-        Per-round cohort selection/channel budgets stay host-side scalar
-        math (ledger parity with the round-at-a-time path); the per-round
-        observables — server/client accuracy on the given eval arrays, the
-        server-distill loss, the mean adaptive ``k`` — are tapped INSIDE the
-        scan as scanned outputs, so the block returns a full
-        :class:`RoundsTrajectory` instead of running blind.
-        Fleet/server/broadcast state advance in place exactly as R
-        ``run_round`` calls would.
-
-        ``eval_tokens``/``eval_labels`` (omit both to skip the accuracy tap)
-        are evaluated after each round on the server model and on the
-        round's first selected client — the same models the host loop's
-        per-round evaluation reads.  The split is truncated to whole
-        :data:`repro.fed.steps.EVAL_BATCH` batches exactly like the
-        host-side evaluator (so the tap and ``make_eval_fn`` read the same
-        samples); a split smaller than one batch is rejected.
-        """
-        if (eval_tokens is None) != (eval_labels is None):
-            raise ValueError("pass eval_tokens and eval_labels together")
-        has_eval = eval_tokens is not None
-        has_chan = channel_scan is not None
-        num_rounds = len(sels)
-        if num_rounds == 0:  # degenerate no-op, like zero host-loop rounds
-            return RoundsTrajectory(
-                ks=[], payloads=[], mean_k=[], distill_loss=[],
-                server_acc=[] if has_eval else None,
-                client_acc=[] if has_eval else None,
-                snr_db=[] if has_chan else None,
-                outage=[] if has_chan else None,
-            )
-        n_samples = int(pubs[0].shape[0])
-        n_real = len(sels[0])
-        if any(len(sel) != n_real for sel in sels):
-            raise ValueError("run_rounds requires equal-size cohorts")
-
-        pad = 0
-        all_ks, all_payloads, batch_list, sels_call = [], [], [], []
-        for sel, states in zip(sels, states_per_round):
-            cohort = [self.clients[i] for i in sel]
-            states = list(states)
-            ks = self._budgets(states, n_samples, adaptive_k, len(cohort), send_h)
-            _active, payloads, _rank = self._upload_manifests(
-                cohort, states, ks, n_samples, send_h
-            )
-            all_ks.append(ks)
-            all_payloads.append(payloads)
-            batch = self._stacked_batches(cohort, step_major=False)
-            pad, sel_call, batch = self._pad_cohort(sel, batch)
-            batch_list.append(batch)
-            sels_call.append(sel_call)
-        k_cap = k_cap_bucket([k for ks in all_ks for k in ks], self.cfg.vocab_size)
-
-        sels_arr = jnp.asarray(np.asarray(sels_call), jnp.int32)  # (R, C+pad)
-        kss_arr = jnp.asarray(  # (R, C+pad); pad rows transmit nothing
-            np.asarray([ks + [0] * pad for ks in all_ks]), jnp.int32
-        )
-        pubs_arr = jnp.stack([jnp.asarray(p) for p in pubs])  # (R, P, L)
-        batches = jax.tree.map(lambda *xs: jnp.stack(xs), *batch_list)
-
-        if self._b_logits is not None:
-            g_tokens, g_logits, g_h = self._b_tokens, self._b_logits, self._b_h
-            g_valid = True
-        else:
-            g_tokens, g_logits, g_h = self._cold_broadcast(pubs_arr[0], n_samples)
-            g_valid = False
-
-        eval_args = ()
-        if has_eval:
-            # whole EVAL_BATCH batches only — the host evaluator's walk, and
-            # the precondition of make_scan_eval_fn's bounded-memory chunking
-            seen = (
-                int(eval_tokens.shape[0]) // fed_steps.EVAL_BATCH
-            ) * fed_steps.EVAL_BATCH
-            if seen == 0:
-                raise ValueError(
-                    f"eval split of {int(eval_tokens.shape[0])} samples is "
-                    f"smaller than one eval batch ({fed_steps.EVAL_BATCH})"
-                )
-            eval_args = (
-                jnp.asarray(eval_tokens[:seen]), jnp.asarray(eval_labels[:seen])
-            )
-        chan_ops = _channel_scan_ops(channel_scan, num_rounds) if has_chan else ()
-        driver = self._rounds_driver(
-            k_cap, send_h, num_rounds, n_real, has_eval, has_chan
-        )
-        carry, taps = driver(
-            self._lora, self._opt, self._s_lora, self._s_opt,
-            self._frozen, self._s_frozen,
-            g_tokens, g_logits, g_h, jnp.asarray(g_valid),
-            sels_arr, kss_arr, pubs_arr, batches, chan_ops, *eval_args,
-        )
-        (self._lora, self._opt, self._s_lora, self._s_opt,
-         self._b_tokens, self._b_logits, self._b_h, _valid, _chan) = carry
-        self._d_loss = taps["distill_loss"][-1]
-
-        def _tolist(name):
-            return [float(x) for x in np.asarray(taps[name])]
-
-        snr_db = outage = None
-        if has_chan:
-            snr_db = [[float(x) for x in row] for row in np.asarray(taps["snr_db"])]
-            outage = [[bool(x) for x in row] for row in np.asarray(taps["outage"])]
-        return RoundsTrajectory(
-            ks=all_ks,
-            payloads=all_payloads,
-            mean_k=_tolist("mean_k"),
-            distill_loss=_tolist("distill_loss"),
-            server_acc=_tolist("server_acc") if has_eval else None,
-            client_acc=_tolist("client_acc") if has_eval else None,
-            snr_db=snr_db,
-            outage=outage,
-        )
-
-
-class HeteroClientEngine:
-    """Family-bucketed CLIENT-phase engine for heterogeneous fleets.
-
-    The fleet is partitioned into homogeneous family buckets
-    (:func:`repro.fed.cohort.partition_fleet`); each bucket runs its own
-    batched/fused sub-engine — one vmapped, donated executable per family —
-    and a round's uploads merge in the model-agnostic logit space: the
-    per-bucket densified stacks concatenate into one cohort-ordered
-    ``(T, P, V)`` stack (vocab is the shared exchange contract, so the
-    unchanged server aggregation consumes it exactly as a homogeneous
-    cohort's).  ``ks``/payload accounting is reassembled in cohort order,
-    so the ledger is bit-identical to the sequential reference over the
-    same clients.
-    """
-
-    name = "hetero"
-
-    def __init__(self, kind: str, clients: list[Client], **kwargs):
-        from repro.fed.cohort import fleet_index, partition_fleet, validate_family_contracts
-
-        self.buckets = partition_fleet(clients)
-        validate_family_contracts(self.buckets)
-        self.kind = kind
-        sub_cls = {"batched": BatchedEngine, "fused": FusedEngine}[kind]
-        sub_kwargs = dict(kwargs)
-        if kind == "batched":
-            sub_kwargs.pop("shard_clients", None)
-            sub_kwargs.pop("use_kernels", None)
-        self._engines = [
-            sub_cls([clients[i] for i in b.client_ids], b.cfg, **sub_kwargs)
-            for b in self.buckets
-        ]
-        self._where = fleet_index(self.buckets)
-
-    def client_params(self, cid: int):
-        bi, local = self._where[int(cid)]
-        return self._engines[bi].client_params(local)
-
-    def fleet_state(self) -> dict:
-        return {f"bucket{i}": e.fleet_state() for i, e in enumerate(self._engines)}
-
-    def load_fleet_state(self, state: dict) -> None:
-        for i, e in enumerate(self._engines):
-            e.load_fleet_state(state[f"bucket{i}"])
-
-    def run_round(
-        self,
-        sel: Sequence[int],
-        pub_tokens: jax.Array,
-        bcast: BroadcastState | None,
-        states: BatchedChannelState | Sequence[ChannelState],
-        *,
-        adaptive_k: bool,
-        send_h: bool,
-    ) -> ClientPhase:
-        from repro.fed.cohort import split_cohort
-
-        states = list(states)
-        ks = [0] * len(sel)
-        merged = []  # (cohort position, dense row, h row, payload)
-        for b, pos, local in split_cohort(self.buckets, sel):
-            phase = self._engines[b.index].run_round(
-                local, pub_tokens, bcast, [states[p] for p in pos],
-                adaptive_k=adaptive_k, send_h=send_h,
-            )
-            for p, k in zip(pos, phase.ks):
-                ks[p] = k
-            tx = [p for p, k in zip(pos, phase.ks) if k > 0]
-            for j, p in enumerate(tx):
-                merged.append((
-                    p,
-                    None if phase.dense is None else phase.dense[j],
-                    None if phase.h is None else phase.h[j],
-                    phase.payloads[j],
-                ))
-        # transmitters back into cohort order: the union stack then reads
-        # exactly like a homogeneous engine's (and the payload manifest
-        # order matches the sequential reference)
-        merged.sort(key=lambda entry: entry[0])
-        dense = jnp.stack([d for _, d, _, _ in merged]) if merged else None
-        h = (
-            jnp.stack([h_row for _, _, h_row, _ in merged])
-            if merged and merged[0][2] is not None
-            else None
-        )
-        return ClientPhase(
-            dense=dense, h=h, payloads=[m[3] for m in merged], ks=ks
-        )
-
-
-class HeteroFusedE2EEngine(_ServerOwnerMixin):
-    """Family-bucketed end-to-end engine: one fused client-phase executable
-    PER FAMILY BUCKET, one union sparse wire, one compiled server phase.
-
-    This is the paper's actual scenario — clients with different
-    architectures federating through the shared logit space — served by the
-    fast-engine machinery:
-
-    * the fleet partitions into homogeneous family buckets
-      (`repro.fed.cohort`); each bucket keeps its LoRA/opt state stacked on
-      a leading client axis (a :class:`BatchedEngine` per bucket is the
-      state holder) and runs its whole client phase — distill, fine-tune
-      scan, public inference, sparse-wire top-k with per-client ``k`` as
-      DATA — as one donated compiled call
-      (:func:`repro.fed.steps.make_bucket_client_phase_fn`), with
-      ``frozen_ax=0`` stacked backbones for buckets whose clients carry
-      distinct frozen trees;
-    * the buckets' wires concatenate into ONE vocab-indexed union wire
-      (:func:`repro.core.topk.concat_wires` semantics, materialised
-      in-order here), and the eq.-8 projections align across families by
-      the shared LoRA rank — so the UNCHANGED server phase
-      (:func:`repro.fed.steps.make_server_phase_fn`: wire aggregation,
-      server-distill scan, broadcast recompute) runs exactly once per
-      round, family-blind;
-    * :meth:`run_rounds` scans R whole heterogeneous rounds inside one
-      compiled dispatch: per-bucket fleet state rides in the scan carry
-      (frozen stacks included), per-round variable family participation is
-      handled by padding each bucket to its block-wide max cohort slice
-      with masked ``k = 0`` rows that compute alongside the round but
-      transmit nothing and scatter into a write-only scratch row, and the
-      in-scan eval tap reports the server accuracy plus ONE accuracy PER
-      FAMILY.
-    """
-
-    name = "hetero_fused_e2e"
-
-    def __init__(
-        self,
-        clients: list[Client],
-        *,
-        server,
-        num_classes: int,
-        lr: float = 1e-3,
-        distill_lr: float = 1e-3,
-        temperature: float = 2.0,
-        lam: float = 0.03,
-        local_steps: int = 4,
-        distill_steps: int = 2,
-        server_distill_steps: int = 12,
-        aggregation: str = "adaptive",
-        restrict_to_support: bool = False,
-        value_bits: int = 16,
-        k_min: int = 1,
-        last_only: bool = True,
-        shard_clients: bool = False,
-        use_kernels: bool = False,
-        quantize_wire: bool = False,
-        compute_dtype: str = "float32",
-    ):
-        from repro.fed.cohort import fleet_index, partition_fleet, validate_family_contracts
-
-        if shard_clients:
-            raise NotImplementedError(
-                "shard_clients is not supported for heterogeneous fleets yet:"
-                " each family bucket would need its own divisible client-axis"
-                " placement"
-            )
-        self.buckets = partition_fleet(clients)
-        validate_family_contracts(self.buckets, server_cfg=server.cfg)
-        self._where = fleet_index(self.buckets)
-        self.clients = clients
-        self.vocab = self.buckets[0].cfg.vocab_size
-        self.last_only = last_only
-        self._num_classes = num_classes
-        self._local_steps = local_steps
-        self.quantize_wire = quantize_wire
-        sub_kwargs = dict(
-            num_classes=num_classes, lr=lr, distill_lr=distill_lr,
-            temperature=temperature, lam=lam, local_steps=local_steps,
-            distill_steps=distill_steps,
-            restrict_to_support=restrict_to_support, value_bits=value_bits,
-            k_min=k_min, last_only=last_only, quantize_wire=quantize_wire,
-        )
-        # one BatchedEngine per bucket as the stacked-fleet STATE HOLDER
-        # (gather/scatter/budget/batch plumbing); its per-phase steps are
-        # never invoked — the bucket client-phase executable below runs the
-        # round
-        self._b = [
-            BatchedEngine([clients[i] for i in b.client_ids], b.cfg, **sub_kwargs)
-            for b in self.buckets
-        ]
-        self._phase_kwargs = dict(
-            lr=lr, distill_lr=distill_lr, temperature=temperature, lam=lam,
-            restrict_to_support=restrict_to_support, local_steps=local_steps,
-            distill_steps=distill_steps, last_only=last_only,
-            quantize=quantize_wire, compute_dtype=compute_dtype,
-        )
-        self._server_kwargs = dict(
-            vocab=self.vocab, distill_lr=distill_lr, temperature=temperature,
-            lam=lam, restrict_to_support=restrict_to_support,
-            server_distill_steps=server_distill_steps,
-            aggregation=aggregation, last_only=last_only,
-            use_kernels=use_kernels, quantize=quantize_wire,
-            compute_dtype=compute_dtype,
-        )
-        self._init_server_state(server)
-        self._client_steps: dict = {}
-        self._server_steps: dict = {}
-        self._drivers: dict = {}
-
-    # -- compiled-step caches -------------------------------------------
-    def _client_phase_fn(self, bi: int, k_cap: int):
-        """One bucket's unjitted client-phase body (for the scan driver)."""
-        b = self.buckets[bi]
-        return fed_steps.make_bucket_client_phase_fn(
-            b.cfg, self._num_classes, k_cap=k_cap,
-            shared_backbone=self._b[bi]._shared, **self._phase_kwargs,
-        )
-
-    def _client_step(self, bi: int, k_cap: int):
-        key = (bi, k_cap)
-        if key not in self._client_steps:
-            self._client_steps[key] = jax.jit(
-                self._client_phase_fn(bi, k_cap), donate_argnums=(0, 2)
-            )
-        return self._client_steps[key]
-
-    def _server_step(self, send_h: bool):
-        if send_h not in self._server_steps:
-            self._server_steps[send_h] = jax.jit(
-                fed_steps.make_server_phase_fn(
-                    self.server.cfg, send_h=send_h, **self._server_kwargs
-                ),
-                donate_argnums=(0, 2),
-            )
-        return self._server_steps[send_h]
-
-    def client_params(self, cid: int):
-        bi, local = self._where[int(cid)]
-        return self._b[bi].client_params(local)
-
-    def fleet_state(self) -> dict:
-        return {f"bucket{i}": b.fleet_state() for i, b in enumerate(self._b)}
-
-    def load_fleet_state(self, state: dict) -> None:
-        for i, b in enumerate(self._b):
-            b.load_fleet_state(state[f"bucket{i}"])
-
-    # -- one whole heterogeneous round -----------------------------------
-    def run_round(
-        self,
-        sel: Sequence[int],
-        pub_tokens: jax.Array,
-        bcast: BroadcastState | None,
-        states: BatchedChannelState | Sequence[ChannelState],
-        *,
-        adaptive_k: bool,
-        send_h: bool,
-    ) -> ClientPhase:
-        from repro.fed.cohort import split_cohort
-
-        states = list(states)
-        n_samples = int(pub_tokens.shape[0])
-        parts = split_cohort(self.buckets, sel)
-
-        # budgets first (host scalar math, cohort order — ledger parity)
-        ks = [0] * len(sel)
-        budgets = []
-        for b, pos, local in parts:
-            ks_b = self._b[b.index]._budgets(
-                [states[p] for p in pos], n_samples, adaptive_k, len(pos), send_h
-            )
-            budgets.append(ks_b)
-            for p, k in zip(pos, ks_b):
-                ks[p] = k
-        k_cap = k_cap_bucket(ks, self.vocab)
-
-        if bcast is not None:
-            g_tokens, g_logits, g_h = bcast.tokens, bcast.logits, bcast.h
-            g_valid = True
-        else:
-            g_tokens, g_logits, g_h = self._cold_broadcast(pub_tokens, n_samples)
-            g_valid = False
-        g_valid_arr = jnp.asarray(g_valid)
-
-        # -- client phase: one donated compiled call per family bucket --
-        wires: list[SparseWire | QuantizedWire] = []
-        h_parts: list = []
-        order: list[int] = []  # cohort position of each bucket-concat row
-        payloads_by_pos: dict[int, UplinkPayload] = {}
-        for (b, pos, local), ks_b in zip(parts, budgets):
-            be = self._b[b.index]
-            cohort = [be.clients[j] for j in local]
-            batches = be._stacked_batches(cohort, step_major=False)
-            idx, lora, frozen, opt = be._gather_cohort(local)
-            lora, opt, v, i, m, sc, h = self._client_step(b.index, k_cap)(
-                lora, frozen, opt, g_tokens, g_logits, g_h, g_valid_arr,
-                batches, pub_tokens, jnp.asarray(ks_b, jnp.int32),
-            )
-            be._scatter_cohort(idx, lora, opt)
-            _active, pl, _rank = be._upload_manifests(
-                cohort, [states[p] for p in pos], ks_b, n_samples, send_h
-            )
-            it = iter(pl)
-            for j, p in enumerate(pos):
-                if ks_b[j] > 0:
-                    payloads_by_pos[p] = next(it)
-            if self.quantize_wire:
-                wires.append(QuantizedWire(
-                    values=v, scale=sc, indices=i, mask=m, vocab=self.vocab
-                ))
-            else:
-                wires.append(SparseWire(values=v, indices=i, mask=m, vocab=self.vocab))
-            h_parts.append(h)
-            order.extend(pos)
-
-        # -- union wire: the buckets' wires merge in the shared vocab-indexed
-        # logit space, rows permuted back into cohort order; then ONE
-        # family-blind compiled server phase --
-        inv = np.argsort(np.asarray(order))
-        union = take_wire_rows(concat_wires(wires), inv)
-        h_all = None
-        if h_parts[0] is not None:
-            h_all = jnp.concatenate(h_parts)[jnp.asarray(inv)]
-        union_scale = union.scale if self.quantize_wire else None
-        (self._s_lora, self._s_opt, b_logits, b_h, self._d_loss) = (
-            self._server_step(send_h)(
-                self._s_lora, self._s_frozen, self._s_opt,
-                union.values, union.indices, union.mask, union_scale, h_all,
-                jnp.asarray(ks, jnp.int32), pub_tokens,
-            )
-        )
-        self._b_tokens, self._b_logits, self._b_h = pub_tokens, b_logits, b_h
-
-        tx = [p for p in range(len(sel)) if ks[p] > 0]
-        sparse = take_wire_rows(union, tx) if tx else None
-        return ClientPhase(
-            dense=None, h=None, payloads=[payloads_by_pos[p] for p in tx],
-            ks=ks, sparse=sparse,
-        )
-
-    # -- R heterogeneous rounds as ONE compiled lax.scan ------------------
-    def _hetero_rounds_driver(
-        self, k_cap: int, send_h: bool, num_rounds: int, n_real: int,
-        caps: tuple[int, ...], has_eval: bool, has_chan: bool,
-    ):
-        key = (k_cap, send_h, num_rounds, n_real, caps, has_eval, has_chan)
-        if key in self._drivers:
-            return self._drivers[key]
-        chan_step = fed_steps.make_channel_step_fn() if has_chan else None
-        fns = [self._client_phase_fn(bi, k_cap) for bi in range(len(self.buckets))]
-        server_fn = fed_steps.make_server_phase_fn(
-            self.server.cfg, send_h=send_h, **self._server_kwargs
-        )
-        has_h = self.server.cfg.lora is not None
-        shared = [be._shared for be in self._b]
-        sizes = [b.size for b in self.buckets]
-        server_eval = fed_steps.make_scan_eval_fn(
-            self.server.cfg, self._num_classes, last_only=self.last_only
-        )
-        family_evals = [
-            fed_steps.make_scan_eval_fn(
-                b.cfg, self._num_classes, last_only=self.last_only
-            )
-            for b in self.buckets
-        ]
-
-        def driver(fleet_loras, fleet_opts, s_lora, s_opt, frozens, s_frozen,
-                   g_tokens, g_logits, g_h, g_valid,
-                   gathers, scatters, kss_b, batches_b, kss_all, pubs,
-                   chan, *eval_args):
-            if has_chan:
-                (ch_z0, ch_bad0, ch_w, ch_u, ch_base,
-                 rho, p_gb, p_bg, fade, sels_data) = chan
-
-            def body(carry, xs):
-                (fleet_loras, fleet_opts, s_lora, s_opt,
-                 g_tokens, g_logits, g_h, g_valid, ch_state) = carry
-                gath, scat, ksb, bat, ks_all, pub, ch_xs = xs
-                vs, idxs, ms, scs, hs = [], [], [], [], []
-                new_loras, new_opts = [], []
-                for f, fn in enumerate(fns):
-                    # gather this round's (padded) bucket slice; pads
-                    # duplicate a real row for COMPUTE but scatter into the
-                    # write-only scratch row sizes[f], so their advanced
-                    # state is never observable
-                    lora = jax.tree.map(lambda x: x[gath[f]], fleet_loras[f])
-                    opt = jax.tree.map(lambda x: x[gath[f]], fleet_opts[f])
-                    frz = (
-                        frozens[f] if shared[f]
-                        else jax.tree.map(lambda x: x[gath[f]], frozens[f])
-                    )
-                    lora, opt, v, i, m, sc, h = fn(
-                        lora, frz, opt, g_tokens, g_logits,
-                        g_h if has_h else None, g_valid, bat[f], pub, ksb[f],
-                    )
-                    new_loras.append(jax.tree.map(
-                        lambda full, new: full.at[scat[f]].set(new),
-                        fleet_loras[f], lora,
-                    ))
-                    new_opts.append(jax.tree.map(
-                        lambda full, new: full.at[scat[f]].set(new),
-                        fleet_opts[f], opt,
-                    ))
-                    vs.append(v)
-                    idxs.append(i)
-                    ms.append(m)
-                    scs.append(sc)
-                    hs.append(h)
-                # the union wire: bucket-concatenated rows, vocab-indexed —
-                # aggregation is row-permutation-invariant, so no cohort
-                # reordering is needed in-program
-                v_all = jnp.concatenate(vs)
-                i_all = jnp.concatenate(idxs)
-                m_all = jnp.concatenate(ms)
-                sc_all = jnp.concatenate(scs) if scs[0] is not None else None
-                h_all = jnp.concatenate(hs) if hs[0] is not None else None
-                s_lora, s_opt, b_logits, b_h, d_loss = server_fn(
-                    s_lora, s_frozen, s_opt, v_all, i_all, m_all, sc_all,
-                    h_all, ks_all, pub,
-                )
-                # pad rows ride at k = 0, so the real cohort's mean is just
-                # the padded sum over the true cohort size
-                tap = {
-                    "distill_loss": d_loss,
-                    "mean_k": jnp.sum(ks_all.astype(jnp.float32)) / n_real,
-                }
-                if has_eval:
-                    ev_tokens, ev_labels = eval_args
-                    tap["server_acc"] = server_eval(
-                        s_lora, s_frozen, ev_tokens, ev_labels
-                    )
-                    fam = []
-                    for f in range(len(fns)):
-                        # post-scatter fleet row gath[f][0]: the family's
-                        # first selected client this round (or its local
-                        # client 0, untouched, when the family sat out)
-                        lf = jax.tree.map(
-                            lambda x: x[gath[f][0]], new_loras[f]
-                        )
-                        ff = (
-                            frozens[f] if shared[f]
-                            else jax.tree.map(lambda x: x[gath[f][0]], frozens[f])
-                        )
-                        fam.append(family_evals[f](lf, ff, ev_tokens, ev_labels))
-                    tap["family_client_acc"] = jnp.stack(fam)
-                if has_chan:
-                    # hetero cohorts are bucket-local in-program; the global
-                    # cohort ids ride along as data purely for the tap gather
-                    ch_z, ch_bad = ch_state
-                    w_t, u_t, base_t, sel_real = ch_xs
-                    ch_z, ch_bad, snr = chan_step(
-                        ch_z, ch_bad, w_t, u_t, base_t, rho, p_gb, p_bg, fade
-                    )
-                    ch_state = (ch_z, ch_bad)
-                    tap["snr_db"] = snr[sel_real]
-                    tap["outage"] = ch_bad[sel_real]
-                carry = (
-                    tuple(new_loras), tuple(new_opts), s_lora, s_opt,
-                    pub, b_logits, b_h if has_h else g_h, jnp.ones((), bool),
-                    ch_state,
-                )
-                return carry, tap
-
-            ch_state0 = (ch_z0, ch_bad0) if has_chan else ()
-            ch_xs_all = (ch_w, ch_u, ch_base, sels_data) if has_chan else ()
-            carry, taps = jax.lax.scan(
-                body,
-                (fleet_loras, fleet_opts, s_lora, s_opt,
-                 g_tokens, g_logits, g_h, g_valid, ch_state0),
-                (gathers, scatters, kss_b, batches_b, kss_all, pubs,
-                 ch_xs_all),
-                length=num_rounds,
-            )
-            return carry, taps
-
-        jitted = jax.jit(driver, donate_argnums=(0, 1, 2, 3))
-        self._drivers[key] = jitted
-        return jitted
-
-    def run_rounds(
-        self,
-        sels: Sequence[Sequence[int]],
-        pubs: Sequence[jax.Array],
-        states_per_round: Sequence,
-        *,
-        adaptive_k: bool,
-        send_h: bool,
-        eval_tokens: jax.Array | None = None,
-        eval_labels: jax.Array | None = None,
-        channel_scan: dict | None = None,
-    ) -> RoundsTrajectory:
-        """Run R whole heterogeneous rounds as ONE compiled ``lax.scan``.
-
-        ``channel_scan`` evolves the scenario channel state inside the scan
-        exactly as on the homogeneous path (see
-        :meth:`FusedE2EEngine.run_rounds`); the global cohort ids ride
-        along as data so the per-round SNR/outage tap can gather the
-        fleet-wide realisation into cohort order.
-
-        Family participation varies per round, but every compiled shape is
-        static: each bucket is padded to its block-wide maximum cohort slice
-        (at least one row) with masked ``k = 0`` rows.  A pad row gathers a
-        real client's state so the computation stays well-posed, contributes
-        nothing to the union wire (all-False transmit mask), consumes no
-        private batch (its batch rows are zeros), and scatters its advanced
-        state into a write-only scratch row appended past the bucket's fleet
-        — ``.at[sel].set`` duplicate-index hazards land only there.  Per
-        round, the eval tap reports server accuracy and one accuracy per
-        family bucket; ``client_acc`` is the cohort's first selected
-        client's family entry (the host loop's metric).
-        """
-        from repro.fed.cohort import split_cohort
-
-        if (eval_tokens is None) != (eval_labels is None):
-            raise ValueError("pass eval_tokens and eval_labels together")
-        has_eval = eval_tokens is not None
-        has_chan = channel_scan is not None
-        num_rounds = len(sels)
-        if num_rounds == 0:
-            return RoundsTrajectory(
-                ks=[], payloads=[], mean_k=[], distill_loss=[],
-                server_acc=[] if has_eval else None,
-                client_acc=[] if has_eval else None,
-                family_client_acc=[] if has_eval else None,
-                snr_db=[] if has_chan else None,
-                outage=[] if has_chan else None,
-            )
-        n_samples = int(pubs[0].shape[0])
-        n_real = len(sels[0])
-        if any(len(sel) != n_real for sel in sels):
-            raise ValueError("run_rounds requires equal-size cohorts")
-
-        F = len(self.buckets)
-        # -- host pre-pass: budgets/payloads (ledger), per-bucket slices --
-        all_ks, all_payloads = [], []
-        per_round: list[list[tuple[list[int], list[int], list[int]]]] = []
-        first_bucket: list[int] = []  # family of sel[0], per round
-        for sel, states in zip(sels, states_per_round):
-            states = list(states)
-            parts = {b.index: (pos, local)
-                     for b, pos, local in split_cohort(self.buckets, sel)}
-            ks = [0] * len(sel)
-            round_rows = []
-            for f in range(F):
-                pos, local = parts.get(f, ([], []))
-                ks_b = self._b[f]._budgets(
-                    [states[p] for p in pos], n_samples, adaptive_k,
-                    len(pos), send_h,
-                ) if pos else []
-                for p, k in zip(pos, ks_b):
-                    ks[p] = k
-                round_rows.append((pos, local, ks_b))
-            payloads = []
-            for f, (pos, local, ks_b) in enumerate(round_rows):
-                if not pos:
-                    continue
-                be = self._b[f]
-                _a, pl, _r = be._upload_manifests(
-                    [be.clients[j] for j in local],
-                    [states[p] for p in pos], ks_b, n_samples, send_h,
-                )
-                it = iter(pl)
-                payloads.extend(
-                    (p, next(it)) for p, k in zip(pos, ks_b) if k > 0
-                )
-            payloads.sort(key=lambda t: t[0])
-            all_ks.append(ks)
-            all_payloads.append([pl for _, pl in payloads])
-            per_round.append(round_rows)
-            fb = [f for f, (pos, _l, _k) in enumerate(round_rows) if 0 in pos]
-            first_bucket.append(fb[0])
-        k_cap = k_cap_bucket(
-            [k for ks in all_ks for k in ks], self.vocab
-        )
-        caps = tuple(
-            max(max((len(per_round[r][f][0]) for r in range(num_rounds)),
-                    default=0), 1)
-            for f in range(F)
-        )
-
-        # -- per-bucket padded scan inputs (gather/scatter/ks/batches) --
-        gathers, scatters, kss_b, batches_b = [], [], [], []
-        for f in range(F):
-            be = self._b[f]
-            cap = caps[f]
-            g_rows, s_rows, k_rows, b_rows = [], [], [], []
-            for r in range(num_rounds):
-                pos, local, ks_b = per_round[r][f]
-                pad = cap - len(local)
-                anchor = local[0] if local else 0
-                g_rows.append(local + [anchor] * pad)
-                s_rows.append(local + [self.buckets[f].size] * pad)
-                k_rows.append(ks_b + [0] * pad)
-                if local:
-                    bat = be._stacked_batches(
-                        [be.clients[j] for j in local], step_major=False
-                    )
-                    bat = {
-                        key: np.concatenate(
-                            [np.asarray(v)]
-                            + [np.zeros_like(np.asarray(v[:1]))] * pad
-                        ) if pad else np.asarray(v)
-                        for key, v in bat.items()
-                    }
-                else:
-                    # the family sits this round out: all-pad slice, zero
-                    # batches (no client rng stream is consumed)
-                    shapes = self._zero_batch_shapes(be)
-                    bat = {
-                        key: np.zeros((cap,) + shape, dtype)
-                        for key, (shape, dtype) in shapes.items()
-                    }
-                b_rows.append(bat)
-            gathers.append(jnp.asarray(np.asarray(g_rows), jnp.int32))
-            scatters.append(jnp.asarray(np.asarray(s_rows), jnp.int32))
-            kss_b.append(jnp.asarray(np.asarray(k_rows), jnp.int32))
-            batches_b.append({
-                key: jnp.asarray(np.stack([row[key] for row in b_rows]))
-                for key in b_rows[0]
-            })
-        kss_all = jnp.asarray(  # (R, sum caps) in bucket-concat order
-            np.concatenate([np.asarray(k) for k in kss_b], axis=1), jnp.int32
-        )
-        pubs_arr = jnp.stack([jnp.asarray(p) for p in pubs])
-
-        # fleet state + one write-only scratch row per bucket (pad target)
-        fleet_loras, fleet_opts, frozens = [], [], []
-        for be in self._b:
-            fleet_loras.append(jax.tree.map(
-                lambda x: jnp.concatenate([x, jnp.zeros_like(x[:1])]), be._lora
-            ))
-            fleet_opts.append(jax.tree.map(
-                lambda x: jnp.concatenate([x, jnp.zeros_like(x[:1])]), be._opt
-            ))
-            frozens.append(be._frozen)
-
-        if self._b_logits is not None:
-            g_tokens, g_logits, g_h = self._b_tokens, self._b_logits, self._b_h
-            g_valid = True
-        else:
-            g_tokens, g_logits, g_h = self._cold_broadcast(pubs_arr[0], n_samples)
-            g_valid = False
-
-        eval_args = ()
-        if has_eval:
-            seen = (
-                int(eval_tokens.shape[0]) // fed_steps.EVAL_BATCH
-            ) * fed_steps.EVAL_BATCH
-            if seen == 0:
-                raise ValueError(
-                    f"eval split of {int(eval_tokens.shape[0])} samples is "
-                    f"smaller than one eval batch ({fed_steps.EVAL_BATCH})"
-                )
-            eval_args = (
-                jnp.asarray(eval_tokens[:seen]), jnp.asarray(eval_labels[:seen])
-            )
-
-        chan_ops = ()
-        if has_chan:
-            chan_ops = _channel_scan_ops(channel_scan, num_rounds) + (
-                jnp.asarray(np.asarray(sels), jnp.int32),  # (R, n_real)
-            )
-        driver = self._hetero_rounds_driver(
-            k_cap, send_h, num_rounds, n_real, caps, has_eval, has_chan
-        )
-        carry, taps = driver(
-            tuple(fleet_loras), tuple(fleet_opts),
-            self._s_lora, self._s_opt, tuple(frozens), self._s_frozen,
-            g_tokens, g_logits, g_h, jnp.asarray(g_valid),
-            tuple(gathers), tuple(scatters), tuple(kss_b), tuple(batches_b),
-            kss_all, pubs_arr, chan_ops, *eval_args,
-        )
-        (out_loras, out_opts, self._s_lora, self._s_opt,
-         self._b_tokens, self._b_logits, self._b_h, _valid, _chan) = carry
-        for be, lora, opt in zip(self._b, out_loras, out_opts):
-            n = jax.tree.leaves(be._lora)[0].shape[0]
-            be._lora = jax.tree.map(lambda x: x[:n], lora)
-            be._opt = jax.tree.map(lambda x: x[:n], opt)
-        self._d_loss = taps["distill_loss"][-1]
-
-        def _tolist(name):
-            return [float(x) for x in np.asarray(taps[name])]
-
-        family_acc = client_acc = None
-        if has_eval:
-            fam = np.asarray(taps["family_client_acc"])  # (R, F)
-            family_acc = [[float(a) for a in row] for row in fam]
-            client_acc = [
-                family_acc[r][first_bucket[r]] for r in range(num_rounds)
-            ]
-        snr_db = outage = None
-        if has_chan:
-            snr_db = [[float(x) for x in row] for row in np.asarray(taps["snr_db"])]
-            outage = [[bool(x) for x in row] for row in np.asarray(taps["outage"])]
-        return RoundsTrajectory(
-            ks=all_ks,
-            payloads=all_payloads,
-            mean_k=_tolist("mean_k"),
-            distill_loss=_tolist("distill_loss"),
-            server_acc=_tolist("server_acc") if has_eval else None,
-            client_acc=client_acc,
-            family_client_acc=family_acc,
-            snr_db=snr_db,
-            outage=outage,
-        )
-
-    @staticmethod
-    def _zero_batch_shapes(be: BatchedEngine) -> dict:
-        """Per-sample batch shapes/dtypes of one bucket, WITHOUT consuming
-        any client's rng stream (probed from the dataset layout)."""
-        c = be.clients[0]
-        seq_len = int(c.data.tokens.shape[1])
-        bsz = c.batch_size  # epoch_batches always pads up to a full batch
-        return {
-            "tokens": ((be.local_steps, bsz, seq_len), c.data.tokens.dtype),
-            "labels": ((be.local_steps, bsz), c.data.labels.dtype),
-        }
-
-
-def make_engine(kind: str, clients: list[Client], cfg: ModelConfig, **kwargs):
-    """Build a round engine.  A fleet whose clients run more than one
-    :class:`ModelConfig` (``client.cfg`` differs) is served by the
-    family-bucketed heterogeneous engines for every fast ``kind`` — same
-    interface, per-bucket executables — while ``sequential`` handles mixed
-    fleets natively (each client runs its own architecture)."""
-    if kind != "fused_e2e":
-        for e2e_only in ("server", "server_distill_steps", "aggregation"):
-            kwargs.pop(e2e_only, None)
-    if kind == "sequential":
-        if kwargs.get("quantize_wire"):
-            raise NotImplementedError(
-                "quantize_wire is not supported by the sequential reference"
-                " engine — use 'batched', 'fused' or 'fused_e2e'"
-            )
-        if kwargs.get("compute_dtype", "float32") != "float32":
-            raise NotImplementedError(
-                "compute_dtype is not supported by the sequential reference"
-                " engine — use 'fused' or 'fused_e2e'"
-            )
-        return SequentialEngine(
-            clients, cfg,
-            value_bits=kwargs.get("value_bits", 16), k_min=kwargs.get("k_min", 1),
-        )
-    hetero = len({c.cfg for c in clients}) > 1
-    if kind == "batched":
-        kwargs.pop("shard_clients", None)
-        kwargs.pop("use_kernels", None)
-        # the batched engine is the fp32 per-phase reference; the bf16 round
-        # body exists only on the fused single-executable paths
-        kwargs.pop("compute_dtype", None)
-        if hetero:
-            return HeteroClientEngine(kind, clients, **kwargs)
-        return BatchedEngine(clients, cfg, **kwargs)
-    if kind == "fused":
-        if hetero:
-            return HeteroClientEngine(kind, clients, **kwargs)
-        return FusedEngine(clients, cfg, **kwargs)
-    if kind == "fused_e2e":
-        if hetero:
-            return HeteroFusedE2EEngine(clients, **kwargs)
-        return FusedE2EEngine(clients, cfg, **kwargs)
-    raise ValueError(
-        f"unknown engine: {kind!r} (expected 'sequential', 'batched', 'fused'"
-        " or 'fused_e2e')"
-    )

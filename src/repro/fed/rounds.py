@@ -78,6 +78,18 @@ class FedConfig:
     # scan — the R-round trajectory (accuracies, distill loss, mean_k) comes
     # back as scanned outputs instead of R host round-trips.
     scan_rounds: bool = False
+    # Fleet-state residency (repro.fed.store): "device" keeps the whole
+    # fleet's LoRA/opt stacked on the accelerator (bit-identical to the
+    # pre-store layout); "host" keeps the fleet in host memory and streams
+    # only each round's cohort to the device — O(cohort) device memory at
+    # any fleet size, with round r+1's cohort transfer prefetched under
+    # round r's compute.  scan_rounds requires "device" (the multi-round
+    # scan carries the whole fleet as a donated device operand); with
+    # "host" the run falls back to the per-round driver.  Checkpoints are
+    # layout-compatible across stores ("host" writes per-client-range
+    # shards instead of one fleet tree), so the knob is excluded from the
+    # resume fingerprint.
+    fleet_store: str = "device"
     num_clients: int = 50
     clients_per_round: int = 10
     rounds: int = 20
@@ -186,9 +198,13 @@ class FedRun:
 def _config_fingerprint(fed: FedConfig) -> dict:
     """A JSON-normalised image of the FedConfig for checkpoint/resume
     compatibility checks.  ``rounds`` is excluded: extending the horizon of
-    a checkpointed run is exactly what resume is for."""
+    a checkpointed run is exactly what resume is for.  ``fleet_store`` is
+    excluded too: residency does not change the trajectory, and both store
+    kinds read either checkpoint layout (monolithic fleet tree or
+    per-client shards), so a run may resume under the other store."""
     d = dataclasses.asdict(fed)
     d.pop("rounds")
+    d.pop("fleet_store", None)
     return json.loads(json.dumps(d, sort_keys=True, default=str))
 
 
@@ -404,6 +420,7 @@ def run_federated(
         use_kernels=fed.use_kernels,
         quantize_wire=fed.quantize_wire,
         compute_dtype=fed.compute_dtype,
+        fleet_store=fed.fleet_store,
         # fused_e2e only: the engine owns the server phase too
         server=server,
         server_distill_steps=fed.server_distill_steps,
@@ -523,7 +540,18 @@ def run_federated(
         run.attempted_k.append(list(attempted))
 
     # -- crash-safe checkpointing ---------------------------------------
-    def ckpt_tree(like: bool = False):
+    # A host-store fleet checkpoints as per-client-range SHARDS next to the
+    # main step npz (never materialised as one tree — the whole point of
+    # out-of-core residency); the shards are written FIRST and the main
+    # npz LAST, so a valid step file implies complete shards (ckpt.py's
+    # ordering contract) and a crash mid-shard-write resumes from the
+    # previous step.
+    fleet_sharded = (
+        getattr(engine, "store_kind", "device") == "host"
+        and hasattr(engine, "save_fleet_shards")
+    )
+
+    def ckpt_tree(like: bool = False, include_fleet: bool = True):
         """The full federation state as one checkpointable pytree: fleet
         LoRA/opt (+ backbone), server state, and — for server-owning
         engines — the broadcast carry.  ``like=True`` builds the restore
@@ -531,8 +559,11 @@ def run_federated(
         does not exist yet and is shaped from the config instead.  Round
         index and histories ride the JSON metadata sidecar; channel and
         fault trajectories replay for free from (seed, round, cid) keying.
+        ``include_fleet=False`` leaves the fleet out (it rides in shards).
         """
-        tree = {"fleet": engine.fleet_state()}
+        tree = {}
+        if include_fleet:
+            tree["fleet"] = engine.fleet_state()
         if handles_server:
             tree["server"] = engine.server_state()
             if like:
@@ -567,12 +598,28 @@ def run_federated(
             v = getattr(run, tap)
             if v is not None:
                 meta[tap] = v
-        ckpt_io.save_step(ckpt_dir, step, ckpt_tree(), **meta)
+        if fleet_sharded:
+            # shards FIRST, main npz LAST: the main file is the atomic
+            # completion marker for the whole sharded checkpoint
+            engine.save_fleet_shards(ckpt_io.fleet_shard_dir(ckpt_dir, step))
+            meta["fleet_sharded"] = True
+        ckpt_io.save_step(
+            ckpt_dir, step, ckpt_tree(include_fleet=not fleet_sharded), **meta
+        )
 
     resume_bcast: BroadcastState | None = None
     if completed:
-        tree, _step = ckpt_io.restore_step(ckpt_dir, ckpt_tree(like=True), completed)
-        engine.load_fleet_state(tree["fleet"])
+        was_sharded = bool(ckpt_meta.get("fleet_sharded"))
+        tree, _step = ckpt_io.restore_step(
+            ckpt_dir, ckpt_tree(like=True, include_fleet=not was_sharded),
+            completed,
+        )
+        if was_sharded:
+            engine.load_fleet_shards(
+                ckpt_io.fleet_shard_dir(ckpt_dir, completed)
+            )
+        else:
+            engine.load_fleet_state(tree["fleet"])
         if handles_server:
             engine.load_server_state(tree["server"])
         else:
@@ -619,12 +666,23 @@ def run_federated(
         for entry in ckpt_meta.get("ledger", []):
             ledger.record(RoundStats(**entry))
 
+    store_kind = getattr(engine, "store_kind", "device")
     if fed.scan_rounds:
         if not handles_server:
             raise ValueError(
                 "FedConfig.scan_rounds requires engine='fused_e2e' "
                 f"(got {fed.engine!r})"
             )
+        if store_kind != "device" and verbose:
+            # the scan carries the WHOLE fleet as a donated device operand,
+            # which defeats the host store's O(cohort) residency — trade
+            # the amortised dispatch for streaming and drive per round
+            print(
+                "[rounds] scan_rounds needs the device fleet store; "
+                f"fleet_store={store_kind!r} falls back to the per-round "
+                "driver with cohort prefetch"
+            )
+    if fed.scan_rounds and store_kind == "device":
         # Pre-draw every remaining round in the same order the per-round
         # loop uses, then run the block as one compiled multi-round dispatch
         # with the eval tap inside the scan.  A resumed run scans only the
@@ -738,8 +796,18 @@ def run_federated(
     # distilled once (cold server at round 0 -> no downlink that round); a
     # resumed run re-enters with the checkpointed broadcast.
     bcast: BroadcastState | None = resume_bcast
+    # Rounds are pre-drawn ONE round ahead so the store can stage round
+    # r+1's cohort (host->device prefetch) under round r's compute.  The
+    # draw order is unchanged — draw_round(r) still fires in increasing r,
+    # keeping the host-rng chain identical to the non-prefetching loop —
+    # and the channel/fault draws are (seed, round, cid)-keyed, so drawing
+    # round r+1 before round r's faults resolve changes nothing.
+    pending = draw_round(completed) if fed.rounds > completed else None
     for rnd in range(completed, fed.rounds):
-        sel, pub_tokens, states = draw_round(rnd)
+        sel, pub_tokens, states = pending
+        pending = draw_round(rnd + 1) if rnd + 1 < fed.rounds else None
+        if pending is not None:
+            engine.prefetch_cohort(pending[0])
         fault_row = None
         if fault_sim is not None:
             states, attempted, res, ghosts = apply_faults(rnd, sel, states)

@@ -1,0 +1,711 @@
+"""Fleet-state stores: WHERE the fleet's per-client LoRA/optimizer trees
+live between rounds.
+
+Every fast engine keeps the fleet's trainable state outside the Client
+objects and works on the selected cohort per round.  Before PR 9 that
+state was hard-wired as jnp stacks on the engine (device memory and
+scatter cost O(fleet)); this module factors the ownership out into a
+store with a four-call contract the engines route through:
+
+* ``fetch(sel) -> (idx, lora, frozen, opt)`` — the selected cohort's
+  device trees, leading axis = cohort.  The returned arrays are FRESH
+  (safe to donate into a jitted step).
+* ``commit(idx, lora, opt)`` — write the advanced cohort rows back.
+* ``prefetch(sel)`` — optional hint: start staging round r+1's cohort
+  host->device while round r computes (no-op where state already lives
+  on device).
+* ``state_dict()/load_state_dict()`` — the checkpointable
+  ``{"lora", "opt", "frozen"}`` image, layout-identical across stores
+  (a checkpoint written under one store restores under the other).
+
+Two implementations:
+
+* :class:`DeviceFleetStore` — today's layout, bit-identically: the whole
+  fleet stacked on device along a leading ``(N, ...)`` axis, fetch is one
+  gather per leaf, commit one ``.at[idx].set`` per leaf.  O(N) device
+  memory; the only store the scan-carry multi-round drivers accept (the
+  fleet rides inside the compiled scan).
+* :class:`HostFleetStore` — out-of-core: the fleet lives in host numpy
+  (optionally npz-spilled to disk through :mod:`repro.checkpoint`), and
+  only the current cohort (+ one prefetch buffer) ever exists on device.
+  Device memory is O(cohort), independent of N; a double-buffered
+  prefetch thread overlaps the next cohort's host->device transfer with
+  the current round's compute, with dirty-row patching so overlapping
+  consecutive cohorts still read committed state (the result is
+  bit-identical with prefetch on or off).
+
+Sharded persistence: both stores save/restore the fleet as per-client
+range shards (``{prefix}_{lo:08d}_{hi:08d}.npz``; shared backbones ride
+one ``{prefix}_frozen.npz``) through the atomic
+:mod:`repro.checkpoint.ckpt` writers, so a checkpoint of a 100k-client
+fleet never materializes as one device tree.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt as ckpt_io
+
+__all__ = [
+    "FleetStore",
+    "DeviceFleetStore",
+    "HostFleetStore",
+    "make_fleet_store",
+]
+
+_NO_STACK = (
+    "HostFleetStore keeps the fleet out of device memory: the full stacked "
+    "device tree does not exist.  The scan-carry multi-round drivers "
+    "(scan_rounds / run_rounds) donate the stacked fleet into one compiled "
+    "scan and therefore require fleet_store='device'; the host store runs "
+    "the per-round driver instead."
+)
+
+
+def _device_stack(trees: Sequence):
+    """Stack pytrees along a new leading (client) axis on device — the
+    exact op the engines used pre-refactor (bit-identity anchor)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def _host_stack(trees: Sequence):
+    """Stack pytrees along a new leading (client) axis in host numpy,
+    without a device-stacked intermediate."""
+    return jax.tree.map(lambda *xs: np.stack([np.asarray(x) for x in xs]), *trees)
+
+
+def _like(tree):
+    """Shape/dtype skeleton (no allocation) for :func:`ckpt.restore`."""
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _rows_like(tree, n: int):
+    """Skeleton of ``n`` leading-axis rows of a stacked tree."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((n,) + tuple(x.shape[1:]), x.dtype), tree
+    )
+
+
+def _check_shard_cover(shards, num_clients: int, dir_path: str) -> None:
+    ranges = sorted((lo, hi) for lo, hi, _ in shards)
+    expect = 0
+    for lo, hi in ranges:
+        if lo != expect:
+            raise ValueError(
+                f"fleet shards in {dir_path} do not cover clients "
+                f"[{expect}, {lo}) — checkpoint is incomplete"
+            )
+        expect = hi
+    if expect != num_clients:
+        raise ValueError(
+            f"fleet shards in {dir_path} cover {expect} clients, "
+            f"store holds {num_clients}"
+        )
+
+
+class FleetStore:
+    """Abstract fleet-state owner (see module docstring for the contract).
+
+    ``shard_size`` bounds the per-client range of one persisted shard
+    file; it is a persistence knob only (any store can read shards
+    written at any shard size — names encode the ranges).
+    """
+
+    kind: str
+    num_clients: int
+    shared: bool
+    shard_size: int = 1024
+
+    # -- round-loop contract -------------------------------------------
+    def fetch(self, sel: Sequence[int]):
+        raise NotImplementedError
+
+    def commit(self, idx, lora, opt) -> None:
+        raise NotImplementedError
+
+    def prefetch(self, sel: Sequence[int]) -> None:  # pragma: no cover
+        """Hint: the NEXT round's cohort.  Default: nothing to stage."""
+
+    # -- checkpoint contract -------------------------------------------
+    def state_dict(self) -> dict:
+        raise NotImplementedError
+
+    def load_state_dict(self, state: dict) -> None:
+        raise NotImplementedError
+
+    def _rows_host(self, lo: int, hi: int) -> dict:
+        """Host-numpy copies of clients [lo, hi): ``{"lora", "opt"}``
+        (+ ``"frozen"`` rows for per-client backbones)."""
+        raise NotImplementedError
+
+    def _frozen_shared_tree(self):
+        raise NotImplementedError
+
+    def save_shards(self, dir_path: str, *, prefix: str = "fleet") -> None:
+        """Persist the fleet as per-client-range npz shards (each write
+        atomic via :func:`repro.checkpoint.ckpt.save`)."""
+        os.makedirs(dir_path, exist_ok=True)
+        for lo in range(0, self.num_clients, self.shard_size):
+            hi = min(lo + self.shard_size, self.num_clients)
+            ckpt_io.save(
+                os.path.join(dir_path, ckpt_io.fleet_shard_name(prefix, lo, hi)),
+                self._rows_host(lo, hi),
+            )
+        if self.shared:
+            ckpt_io.save(
+                os.path.join(dir_path, f"{prefix}_frozen.npz"),
+                {"frozen": self._frozen_shared_tree()},
+            )
+
+    def load_shards(self, dir_path: str, *, prefix: str = "fleet") -> None:
+        raise NotImplementedError
+
+    # -- introspection --------------------------------------------------
+    def device_bytes(self) -> int:
+        """Device-resident bytes this store holds BETWEEN rounds (the
+        fleet-scaling metric: O(N) for the device store, O(1) in N for
+        the host store)."""
+        raise NotImplementedError
+
+
+class DeviceFleetStore(FleetStore):
+    """The pre-PR-9 layout, bit-identically: whole fleet stacked on
+    device; fetch = one gather per leaf, commit = one scatter per leaf."""
+
+    kind = "device"
+
+    def __init__(self, loras: Sequence, frozens: Sequence, opts: Sequence,
+                 *, shared: bool):
+        self.num_clients = len(loras)
+        self.shared = bool(shared)
+        self._lora = _device_stack(loras)  # (N, ...)
+        self._frozen = frozens[0] if self.shared else _device_stack(frozens)
+        self._opt = _device_stack(opts)
+
+    # the stacked trees stay directly addressable: the scan-carry drivers
+    # donate them into compiled multi-round scans and write them back
+    @property
+    def lora(self):
+        return self._lora
+
+    @lora.setter
+    def lora(self, tree):
+        self._lora = tree
+
+    @property
+    def opt(self):
+        return self._opt
+
+    @opt.setter
+    def opt(self, tree):
+        self._opt = tree
+
+    @property
+    def frozen(self):
+        return self._frozen
+
+    @frozen.setter
+    def frozen(self, tree):
+        self._frozen = tree
+
+    def fetch(self, sel: Sequence[int]):
+        idx = jnp.asarray(list(sel))
+        lora = jax.tree.map(lambda x: x[idx], self._lora)
+        opt = jax.tree.map(lambda x: x[idx], self._opt)
+        frozen = (
+            self._frozen if self.shared
+            else jax.tree.map(lambda x: x[idx], self._frozen)
+        )
+        return idx, lora, frozen, opt
+
+    def commit(self, idx, lora, opt) -> None:
+        self._lora = jax.tree.map(
+            lambda full, new: full.at[idx].set(new), self._lora, lora
+        )
+        self._opt = jax.tree.map(
+            lambda full, new: full.at[idx].set(new), self._opt, opt
+        )
+
+    def client_row(self, cid: int):
+        """One client's (lora, frozen) trees (for evaluation)."""
+        lora_i = jax.tree.map(lambda x: x[cid], self._lora)
+        frozen_i = (
+            self._frozen if self.shared
+            else jax.tree.map(lambda x: x[cid], self._frozen)
+        )
+        return lora_i, frozen_i
+
+    def state_dict(self) -> dict:
+        return {"lora": self._lora, "opt": self._opt, "frozen": self._frozen}
+
+    def load_state_dict(self, state: dict) -> None:
+        # copy=True: these stacks are donated into the scan-carry drivers,
+        # so they must be XLA-owned even when restored from numpy buffers
+        as_jax = lambda tree: jax.tree.map(  # noqa: E731
+            lambda a: jnp.array(a, copy=True), tree
+        )
+        self._lora = as_jax(state["lora"])
+        self._opt = as_jax(state["opt"])
+        self._frozen = as_jax(state["frozen"])
+
+    def _rows_host(self, lo: int, hi: int) -> dict:
+        rows = {
+            "lora": jax.tree.map(lambda x: np.asarray(x[lo:hi]), self._lora),
+            "opt": jax.tree.map(lambda x: np.asarray(x[lo:hi]), self._opt),
+        }
+        if not self.shared:
+            rows["frozen"] = jax.tree.map(
+                lambda x: np.asarray(x[lo:hi]), self._frozen
+            )
+        return rows
+
+    def _frozen_shared_tree(self):
+        return self._frozen
+
+    def load_shards(self, dir_path: str, *, prefix: str = "fleet") -> None:
+        shards = ckpt_io.list_fleet_shards(dir_path, prefix)
+        _check_shard_cover(shards, self.num_clients, dir_path)
+        keys = ["lora", "opt"] + ([] if self.shared else ["frozen"])
+        stacks = {"lora": self._lora, "opt": self._opt}
+        if not self.shared:
+            stacks["frozen"] = self._frozen
+        parts = [
+            ckpt_io.restore(
+                path, {k: _rows_like(stacks[k], hi - lo) for k in keys}
+            )
+            for lo, hi, path in sorted(shards)
+        ]
+        state = {
+            k: jax.tree.map(lambda *xs: jnp.concatenate(xs), *[p[k] for p in parts])
+            for k in keys
+        }
+        if self.shared:
+            state["frozen"] = ckpt_io.restore(
+                os.path.join(dir_path, f"{prefix}_frozen.npz"),
+                {"frozen": _like(self._frozen)},
+            )["frozen"]
+        self.load_state_dict(state)
+
+    def device_bytes(self) -> int:
+        return sum(
+            int(np.dtype(x.dtype).itemsize) * int(np.prod(x.shape))
+            for tree in (self._lora, self._opt, self._frozen)
+            for x in jax.tree.leaves(tree)
+        )
+
+
+class HostFleetStore(FleetStore):
+    """Out-of-core fleet: host-numpy stacks (optionally npz-spilled),
+    device working set = current cohort + one prefetch buffer.
+
+    Prefetch protocol: :meth:`prefetch` snapshots the requested cohort
+    and stages its device copy on a worker thread while the round
+    computes; every :meth:`commit` after the snapshot marks its rows
+    dirty, and a :meth:`fetch` of that cohort patches dirty positions
+    from the (by then committed) host rows — so a prefetched fetch
+    returns exactly what an unprefetched one would, even when
+    consecutive cohorts overlap.  The buffer is DOUBLE: up to two staged
+    cohorts are held (the round driver hints round r+1 BEFORE it fetches
+    round r's already-staged rows), each with its own dirty set; older
+    entries are evicted FIFO.
+
+    ``spill_dir`` pages the host stacks to per-range npz shards under
+    the given directory with a small in-memory shard cache
+    (write-back on eviction) — host memory then also stays O(cohort·
+    shard_size) instead of O(N).
+
+    :meth:`from_template` builds an N-client store from ONE template row
+    (every client starts at the template until first commit) in O(1)
+    time and O(touched rows) resident memory — the constructor for
+    fleet-scale benchmarks where N Client objects cannot exist.
+    """
+
+    kind = "host"
+
+    def __init__(self, loras: Sequence, frozens: Sequence, opts: Sequence,
+                 *, shared: bool, prefetch: bool = True,
+                 spill_dir: str | None = None, shard_size: int = 1024):
+        if not shared:
+            frozen_rows = _host_stack(frozens)
+        else:
+            frozen_rows = None
+        self._init_common(
+            num_clients=len(loras), shared=shared, prefetch=prefetch,
+            spill_dir=spill_dir, shard_size=shard_size,
+            host={"lora": _host_stack(loras), "opt": _host_stack(opts),
+                  **({} if shared else {"frozen": frozen_rows})},
+            frozen_shared=frozens[0] if shared else None,
+            template=None,
+        )
+
+    @classmethod
+    def from_template(cls, lora_row, frozen, opt_row, *, num_clients: int,
+                      prefetch: bool = True, spill_dir: str | None = None,
+                      shard_size: int = 1024):
+        self = cls.__new__(cls)
+        template = {
+            "lora": jax.tree.map(np.asarray, lora_row),
+            "opt": jax.tree.map(np.asarray, opt_row),
+        }
+        # np.zeros is calloc-backed: untouched rows cost virtual address
+        # space only — resident memory scales with COMMITTED rows, not N
+        host = {
+            k: jax.tree.map(
+                lambda r: np.zeros((num_clients,) + r.shape, r.dtype), t
+            )
+            for k, t in template.items()
+        }
+        self._init_common(
+            num_clients=num_clients, shared=True, prefetch=prefetch,
+            spill_dir=spill_dir, shard_size=shard_size, host=host,
+            frozen_shared=frozen, template=template,
+        )
+        return self
+
+    def _init_common(self, *, num_clients, shared, prefetch, spill_dir,
+                     shard_size, host, frozen_shared, template):
+        self.num_clients = int(num_clients)
+        self.shared = bool(shared)
+        self.shard_size = int(shard_size)
+        self.prefetch_enabled = bool(prefetch)
+        self._frozen_shared = frozen_shared  # device tree (or None)
+        self._template = template
+        self._initialized = (
+            np.zeros(self.num_clients, bool) if template is not None else None
+        )
+        self._lock = threading.Lock()
+        # double buffer: sel tuple -> [thread, result box, dirty-row set]
+        self._pf: dict[tuple, list] = {}
+        self._spill_dir = spill_dir
+        if spill_dir is None:
+            self._host = host
+            self._cache = None
+        else:
+            # page the stacks out now; keep only shape/dtype row skeletons
+            self._host = None
+            self._row_like = {
+                k: jax.tree.map(
+                    lambda a: np.zeros(a.shape[1:], a.dtype), t
+                )
+                for k, t in host.items()
+            }
+            self._cache: dict[int, dict] = {}
+            self._cache_cap = 4
+            os.makedirs(spill_dir, exist_ok=True)
+            for lo in range(0, self.num_clients, self.shard_size):
+                hi = min(lo + self.shard_size, self.num_clients)
+                ckpt_io.save(
+                    os.path.join(
+                        spill_dir, ckpt_io.fleet_shard_name("spill", lo, hi)
+                    ),
+                    {k: jax.tree.map(lambda a: a[lo:hi], t)
+                     for k, t in host.items()},
+                )
+
+    # -- the stacked-device API does not exist here ---------------------
+    @property
+    def lora(self):
+        raise RuntimeError(_NO_STACK)
+
+    @property
+    def opt(self):
+        raise RuntimeError(_NO_STACK)
+
+    @property
+    def frozen(self):
+        if self.shared:
+            return self._frozen_shared
+        raise RuntimeError(_NO_STACK)
+
+    # -- spill paging (callers hold self._lock) -------------------------
+    def _shard_path(self, si: int) -> str:
+        lo = si * self.shard_size
+        hi = min(lo + self.shard_size, self.num_clients)
+        return os.path.join(
+            self._spill_dir, ckpt_io.fleet_shard_name("spill", lo, hi)
+        )
+
+    def _shard_tree(self, si: int) -> dict:
+        tree = self._cache.get(si)
+        if tree is not None:
+            return tree
+        lo = si * self.shard_size
+        hi = min(lo + self.shard_size, self.num_clients)
+        path = self._shard_path(si)
+        if os.path.exists(path):
+            tree = ckpt_io.restore(
+                path,
+                {k: jax.tree.map(
+                    lambda r: jax.ShapeDtypeStruct((hi - lo,) + r.shape, r.dtype),
+                    t,
+                ) for k, t in self._row_like.items()},
+            )
+            # restore returns read-only-ish np arrays; ensure writable rows
+            tree = {k: jax.tree.map(np.array, t) for k, t in tree.items()}
+        else:
+            tree = {
+                k: jax.tree.map(
+                    lambda r: np.zeros((hi - lo,) + r.shape, r.dtype), t
+                )
+                for k, t in self._row_like.items()
+            }
+        if len(self._cache) >= self._cache_cap:
+            evict = next(iter(self._cache))
+            ckpt_io.save(self._shard_path(evict), self._cache.pop(evict))
+        self._cache[si] = tree
+        return tree
+
+    def _flush_spill(self) -> None:
+        for si, tree in self._cache.items():
+            ckpt_io.save(self._shard_path(si), tree)
+
+    # -- host row access (callers hold self._lock) ----------------------
+    def _row(self, cid: int) -> dict:
+        """One client's host row trees (views — callers must copy)."""
+        if self._template is not None and not self._initialized[cid]:
+            return self._template
+        if self._spill_dir is None:
+            return {
+                k: jax.tree.map(lambda a: a[cid], t)
+                for k, t in self._host.items()
+            }
+        tree = self._shard_tree(cid // self.shard_size)
+        local = cid % self.shard_size
+        return {k: jax.tree.map(lambda a: a[local], t) for k, t in tree.items()}
+
+    def _gather_rows(self, ids) -> dict:
+        """Fresh host stacks of the given client rows, cohort order."""
+        with self._lock:
+            rows = [self._row(int(i)) for i in ids]
+            return {
+                k: jax.tree.map(
+                    lambda *xs: np.stack(xs), *[r[k] for r in rows]
+                )
+                for k in rows[0]
+            }
+
+    def _write_rows(self, ids, host_trees: dict) -> None:
+        with self._lock:
+            for j, cid in enumerate(ids):
+                if self._spill_dir is None:
+                    target = self._host
+                    local = cid
+                else:
+                    target = self._shard_tree(cid // self.shard_size)
+                    local = cid % self.shard_size
+                for k, new in host_trees.items():
+                    jax.tree.map(
+                        lambda a, nw: a.__setitem__(local, nw[j]),
+                        target[k], new,
+                    )
+                if self._initialized is not None:
+                    self._initialized[cid] = True
+
+    @staticmethod
+    def _to_device(host_trees: dict) -> dict:
+        # copy=True, NOT asarray: CPU jax may zero-copy ALIAS an aligned
+        # numpy buffer, and the engines donate these arrays — XLA reusing
+        # a buffer the (freed) numpy temporary also owned corrupts the heap
+        return {
+            k: jax.tree.map(lambda a: jnp.array(a, copy=True), t)
+            for k, t in host_trees.items()
+        }
+
+    # -- round-loop contract -------------------------------------------
+    def fetch(self, sel: Sequence[int]):
+        sel = tuple(int(i) for i in sel)
+        idx = jnp.asarray(list(sel))
+        dev = self._take_prefetched(sel)
+        if dev is None:
+            dev = self._to_device(self._gather_rows(sel))
+        frozen = self._frozen_shared if self.shared else dev["frozen"]
+        return idx, dev["lora"], frozen, dev["opt"]
+
+    def commit(self, idx, lora, opt) -> None:
+        ids = [int(i) for i in np.asarray(idx)]
+        if len(set(ids)) != len(ids):
+            raise ValueError(
+                f"commit got duplicate client ids {sorted(ids)}: duplicate "
+                "row writes would resolve in unspecified order"
+            )
+        self._write_rows(ids, {
+            "lora": jax.tree.map(np.asarray, lora),
+            "opt": jax.tree.map(np.asarray, opt),
+        })
+        # rows committed after a prefetch snapshot: that staged copy is
+        # (possibly) stale — the matching fetch will re-read those rows
+        for entry in self._pf.values():
+            entry[2].update(ids)
+
+    def prefetch(self, sel: Sequence[int]) -> None:
+        if not self.prefetch_enabled:
+            return
+        sel = tuple(int(i) for i in sel)
+        # double buffer: the driver hints round r+1 while round r's staged
+        # cohort is still pending — keep both, evict beyond that (FIFO)
+        self._pf.pop(sel, None)
+        while len(self._pf) >= 2:
+            self._pf.pop(next(iter(self._pf)))[0].join()
+        box: dict = {}
+
+        def stage():
+            box["dev"] = self._to_device(self._gather_rows(sel))
+
+        t = threading.Thread(target=stage, daemon=True)
+        self._pf[sel] = [t, box, set()]
+        t.start()
+
+    def _drop_prefetch(self) -> None:
+        for entry in self._pf.values():
+            entry[0].join()
+        self._pf.clear()
+
+    def _take_prefetched(self, sel: tuple) -> dict | None:
+        entry = self._pf.pop(sel, None)
+        if entry is None:
+            return None  # no hint for this cohort — cold fetch
+        t, box, dirty = entry
+        t.join()
+        dev = box.get("dev")
+        if dev is None:  # staging thread died; fall back to a cold fetch
+            return None
+        stale = [p for p, cid in enumerate(sel) if cid in dirty]
+        if stale:
+            fresh = self._to_device(
+                self._gather_rows([sel[p] for p in stale])
+            )
+            pos = jnp.asarray(stale)
+            dev = {
+                k: jax.tree.map(
+                    lambda full, f: full.at[pos].set(f), dev[k], fresh[k]
+                )
+                for k in dev
+            }
+        return dev
+
+    def client_row(self, cid: int):
+        row = self._to_device(self._gather_rows([int(cid)]))
+        lora_i = jax.tree.map(lambda x: x[0], row["lora"])
+        frozen_i = (
+            self._frozen_shared if self.shared
+            else jax.tree.map(lambda x: x[0], row["frozen"])
+        )
+        return lora_i, frozen_i
+
+    # -- checkpoint contract -------------------------------------------
+    def state_dict(self) -> dict:
+        """The monolithic checkpoint image (host-numpy leaves; identical
+        layout to the device store's).  Materializes O(N) host memory —
+        fleet-scale runs should persist through :meth:`save_shards`."""
+        self._drop_prefetch()
+        full = self._rows_host(0, self.num_clients)
+        return {
+            "lora": full["lora"],
+            "opt": full["opt"],
+            "frozen": (
+                self._frozen_shared if self.shared else full["frozen"]
+            ),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self._drop_prefetch()
+        as_np = lambda tree: jax.tree.map(np.array, tree)  # noqa: E731
+        host = {"lora": as_np(state["lora"]), "opt": as_np(state["opt"])}
+        if self.shared:
+            self._frozen_shared = jax.tree.map(jnp.asarray, state["frozen"])
+        else:
+            host["frozen"] = as_np(state["frozen"])
+        self._template = None
+        self._initialized = None
+        with self._lock:
+            if self._spill_dir is None:
+                self._host = host
+            else:
+                self._cache.clear()
+                for lo in range(0, self.num_clients, self.shard_size):
+                    hi = min(lo + self.shard_size, self.num_clients)
+                    ckpt_io.save(
+                        self._shard_path(lo // self.shard_size),
+                        {k: jax.tree.map(lambda a: a[lo:hi], t)
+                         for k, t in host.items()},
+                    )
+
+    def _rows_host(self, lo: int, hi: int) -> dict:
+        rows = self._gather_rows(range(lo, hi))
+        return rows
+
+    def _frozen_shared_tree(self):
+        return self._frozen_shared
+
+    def save_shards(self, dir_path: str, *, prefix: str = "fleet") -> None:
+        self._drop_prefetch()
+        super().save_shards(dir_path, prefix=prefix)
+
+    def load_shards(self, dir_path: str, *, prefix: str = "fleet") -> None:
+        self._drop_prefetch()
+        shards = ckpt_io.list_fleet_shards(dir_path, prefix)
+        _check_shard_cover(shards, self.num_clients, dir_path)
+        probe = self._gather_rows([0])
+        keys = list(probe)
+        for lo, hi, path in sorted(shards):
+            tree = ckpt_io.restore(
+                path,
+                {k: jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(
+                        (hi - lo,) + tuple(x.shape[1:]), x.dtype
+                    ), probe[k],
+                ) for k in keys},
+            )
+            self._write_rows(
+                range(lo, hi), {k: jax.tree.map(np.array, tree[k]) for k in keys}
+            )
+        if self.shared:
+            frozen = ckpt_io.restore(
+                os.path.join(dir_path, f"{prefix}_frozen.npz"),
+                {"frozen": _like(self._frozen_shared)},
+            )["frozen"]
+            self._frozen_shared = jax.tree.map(jnp.asarray, frozen)
+
+    # -- introspection --------------------------------------------------
+    def device_bytes(self) -> int:
+        """Persistent device residency: the shared backbone only (cohort
+        and prefetch buffers are transient per round) — independent of N."""
+        if not self.shared:
+            return 0
+        return sum(
+            int(np.dtype(x.dtype).itemsize) * int(np.prod(x.shape))
+            for x in jax.tree.leaves(self._frozen_shared)
+        )
+
+    def host_bytes(self) -> int:
+        """Resident host bytes of the fleet stacks (0 when spilled)."""
+        if self._spill_dir is not None or self._host is None:
+            return 0
+        return sum(
+            int(x.nbytes)
+            for t in self._host.values()
+            for x in jax.tree.leaves(t)
+        )
+
+
+def make_fleet_store(spec, *, loras, frozens, opts, shared: bool) -> FleetStore:
+    """Resolve a ``FedConfig.fleet_store`` spec — ``"device"`` /
+    ``"host"`` / an already-built :class:`FleetStore` — into a store
+    holding the given per-client trees."""
+    if isinstance(spec, FleetStore):
+        return spec
+    if spec in (None, "device"):
+        return DeviceFleetStore(loras, frozens, opts, shared=shared)
+    if spec == "host":
+        return HostFleetStore(loras, frozens, opts, shared=shared)
+    raise ValueError(
+        f"unknown fleet_store: {spec!r} (expected 'device', 'host', or a "
+        "FleetStore instance)"
+    )

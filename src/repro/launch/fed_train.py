@@ -80,6 +80,18 @@ def main(argv=None) -> int:
                          "contract.  Default: homogeneous REDUCED_CLIENT")
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--clients", type=int, default=10)
+    ap.add_argument("--fleet-size", type=int, default=None,
+                    help="alias for --clients aimed at fleet-scale runs "
+                         "(takes precedence when both are given); pair with "
+                         "--fleet-store host so device memory stays "
+                         "O(cohort) regardless of this number")
+    ap.add_argument("--fleet-store", choices=["device", "host"],
+                    default="device",
+                    help="fleet-state residency (repro.fed.store): 'device' "
+                         "keeps the whole fleet stacked on the accelerator; "
+                         "'host' keeps it in host memory and streams only "
+                         "each round's cohort to the device, prefetching "
+                         "round r+1's cohort under round r's compute")
     ap.add_argument("--per-round", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--iid", action="store_true")
@@ -129,7 +141,10 @@ def main(argv=None) -> int:
     fed = FedConfig(
         method=args.method,
         engine=args.engine,
-        num_clients=args.clients,
+        fleet_store=args.fleet_store,
+        num_clients=(
+            args.fleet_size if args.fleet_size is not None else args.clients
+        ),
         clients_per_round=args.per_round,
         rounds=args.rounds,
         public_size=512,
