@@ -50,6 +50,14 @@ the device store's stacked fleet), and the per-round latency at any fleet
 size must stay within 1.15x of the 10-client shape — the out-of-core
 round cost is O(cohort), not O(N).
 
+The PR-10 serve record (BENCH_serve, written by benchmarks/serve_bench.py)
+is gated fresh AND committed (see ``check_serve``): the stacked multi-
+tenant decode must reproduce the classic merged single-adapter decode bit
+for bit at >= 8 distinct adapters per batch through ONE compiled decode
+executable, its steady throughput must stay within 0.9x of the single-
+adapter baseline at equal batch, and the cache-thrash regime must actually
+page (misses AND evictions on the adapter cache).
+
 Run (CI does exactly this):
 
     python benchmarks/engine_bench.py --quick --round-only
@@ -57,6 +65,7 @@ Run (CI does exactly this):
     PYTHONPATH=src python examples/scenario_suite.py --quick
     PYTHONPATH=src python examples/fault_suite.py --quick
     PYTHONPATH=src python benchmarks/fleet_bench.py --quick
+    PYTHONPATH=src python benchmarks/serve_bench.py --quick
     python benchmarks/check_bench.py
 
 Pure stdlib; exits non-zero with a one-line reason per failed check.
@@ -382,6 +391,73 @@ def check_fleet(record: dict, label: str, *, max_latency_ratio: float = 1.15) ->
     return failures
 
 
+def check_serve(record: dict, label: str, *, min_ratio: float = 0.9) -> list[str]:
+    """Gate on a BENCH_serve record (fresh quick AND committed full — the
+    multi-tenant serving guarantees are size-independent):
+
+    1. ``parity.multi_tenant_bit_identical`` true with >= 8 distinct
+       adapters per batch: the stacked slab-gather decode reproduced the
+       classic merged single-adapter decode bit for bit, per row;
+    2. ONE stacked decode executable — serving any tenant mix costs one
+       compile (slot assignment is traced data, not a trace constant);
+    3. stacked steady throughput >= ``min_ratio`` x single-adapter at
+       equal batch: per-request personalization is not a serving tax;
+    4. the thrash regime actually thrashed (misses AND evictions on the
+       adapter cache after warmup) and still decoded.
+    """
+    failures = []
+
+    parity = record.get("parity", {})
+    if parity.get("multi_tenant_bit_identical") is not True:
+        failures.append(
+            f"[{label}] multi_tenant_bit_identical is not true: the "
+            "stacked decode diverged from classic merged decode"
+        )
+    if (parity.get("adapters_per_batch") or 0) < 8:
+        failures.append(
+            f"[{label}] parity probed only "
+            f"{parity.get('adapters_per_batch')} adapters/batch (< 8)"
+        )
+
+    regimes = record.get("regimes", {})
+    stacked = regimes.get("stacked_multi_tenant", {})
+    if stacked.get("decode_executables") != 1:
+        failures.append(
+            f"[{label}] stacked decode compiled "
+            f"{stacked.get('decode_executables')} executables (want 1): "
+            "the tenant mix leaked into the trace"
+        )
+    if (stacked.get("adapters_per_batch") or 0) < 8:
+        failures.append(
+            f"[{label}] stacked regime served only "
+            f"{stacked.get('adapters_per_batch')} adapters/batch (< 8)"
+        )
+    for name in ("single_adapter", "stacked_multi_tenant"):
+        if not (regimes.get(name, {}).get("tok_s") or 0) > 0:
+            failures.append(f"[{label}] regime {name} has no throughput")
+
+    ratio = record.get("speedups", {}).get("stacked_vs_single")
+    if ratio is None or ratio < min_ratio:
+        failures.append(
+            f"[{label}] stacked throughput {ratio}x single-adapter is "
+            f"below the {min_ratio}x gate: per-request adapters became a "
+            "serving tax"
+        )
+
+    thrash = regimes.get("cache_thrash", {})
+    tc = thrash.get("cache", {})
+    if not ((tc.get("misses") or 0) > 0 and (tc.get("evictions") or 0) > 0):
+        failures.append(
+            f"[{label}] thrash regime did not thrash (misses="
+            f"{tc.get('misses')}, evictions={tc.get('evictions')}): the "
+            "paging path went unexercised"
+        )
+    if not (thrash.get("tok_s_incl_paging") or 0) > 0:
+        failures.append(f"[{label}] thrash regime has no throughput")
+
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument(
@@ -444,6 +520,21 @@ def main(argv=None) -> int:
         help="ceiling for the host store's per-round latency at any fleet "
              "size vs its N=10 run",
     )
+    ap.add_argument(
+        "--serve-fresh",
+        default=os.path.join(_REPO_ROOT, "BENCH_serve.quick.json"),
+        help="serve record written by the quick bench run just executed",
+    )
+    ap.add_argument(
+        "--serve-committed",
+        default=os.path.join(_REPO_ROOT, "BENCH_serve.json"),
+        help="the committed full-size serve reference record",
+    )
+    ap.add_argument(
+        "--serve-min-ratio", type=float, default=0.9,
+        help="floor for stacked multi-tenant decode throughput vs the "
+             "single-adapter baseline at equal batch (committed: 1.00)",
+    )
     args = ap.parse_args(argv)
 
     for path in (args.fresh, args.committed):
@@ -471,6 +562,11 @@ def main(argv=None) -> int:
             print(f"[check_bench] FAIL: {path} does not exist "
                   "(run benchmarks/fleet_bench.py --quick first)")
             return 2
+    for path in (args.serve_fresh, args.serve_committed):
+        if not os.path.exists(path):
+            print(f"[check_bench] FAIL: {path} does not exist "
+                  "(run benchmarks/serve_bench.py --quick first)")
+            return 2
     with open(args.fresh) as f:
         fresh = json.load(f)
     with open(args.committed) as f:
@@ -491,6 +587,10 @@ def main(argv=None) -> int:
         fleet_fresh = json.load(f)
     with open(args.fleet_committed) as f:
         fleet_committed = json.load(f)
+    with open(args.serve_fresh) as f:
+        serve_fresh = json.load(f)
+    with open(args.serve_committed) as f:
+        serve_committed = json.load(f)
 
     failures = check(fresh, committed, min_speedup=args.min_speedup)
     failures += check_quant(quant_fresh, "quant-fresh")
@@ -501,6 +601,10 @@ def main(argv=None) -> int:
                             max_latency_ratio=args.fleet_max_latency_ratio)
     failures += check_fleet(fleet_committed, "fleet-committed",
                             max_latency_ratio=args.fleet_max_latency_ratio)
+    failures += check_serve(serve_fresh, "serve-fresh",
+                            min_ratio=args.serve_min_ratio)
+    failures += check_serve(serve_committed, "serve-committed",
+                            min_ratio=args.serve_min_ratio)
     if failures:
         for msg in failures:
             print(f"[check_bench] FAIL: {msg}")
@@ -523,7 +627,13 @@ def main(argv=None) -> int:
         "gate: host store bit-identical to device at N=10, device bytes "
         f"flat across {sorted(int(n) for n in fleet_fresh['fleet'])} "
         "clients, per-round latency within "
-        f"{args.fleet_max_latency_ratio}x of the 10-client shape"
+        f"{args.fleet_max_latency_ratio}x of the 10-client shape; serve "
+        "gate: stacked multi-tenant decode bit-identical to classic "
+        f"merged at {serve_fresh['parity']['adapters_per_batch']} "
+        "adapters/batch in one executable, throughput "
+        f"{serve_fresh['speedups']['stacked_vs_single']}x single-adapter "
+        f">= {args.serve_min_ratio}x, adapter-cache thrash paged with "
+        "evictions"
     )
     return 0
 

@@ -27,6 +27,7 @@ import numpy as np
 __all__ = [
     "save",
     "restore",
+    "restore_subtree",
     "latest_step",
     "save_step",
     "restore_step",
@@ -116,6 +117,41 @@ def restore(path: str, like: Any) -> Any:
             )
         leaves.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_subtree(path: str, prefix: str) -> Any:
+    """Load the subtree stored under ``prefix`` WITHOUT a skeleton.
+
+    :func:`restore` needs a ``like`` structure; serving-side consumers
+    (``repro.serve.export_adapters``) read a checkpoint they did not write
+    and reconstruct the nested-dict tree from the path-flattened keys
+    instead.  ``prefix`` is a flattened key prefix (e.g. ``"fleet__lora"``
+    or just ``"lora"``); the returned tree is nested host-numpy dicts.
+    Only dict-keyed trees round-trip this way — which is all the repo's
+    param/fleet trees are.  Raises ``KeyError`` when nothing matches.
+    """
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    out: dict = {}
+    hit = False
+    lead = prefix + _SEP
+    for key in data.files:
+        if key == prefix:
+            return np.asarray(data[key])  # the prefix IS a leaf
+        if not key.startswith(lead):
+            continue
+        hit = True
+        node = out
+        parts = key[len(lead):].split(_SEP)
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = np.asarray(data[key])
+    if not hit:
+        raise KeyError(
+            f"checkpoint {path} holds no keys under prefix {prefix!r}"
+        )
+    return out
 
 
 def _step_path(ckpt_dir: str, step: int) -> str:

@@ -133,6 +133,15 @@ class FleetStore:
     def prefetch(self, sel: Sequence[int]) -> None:  # pragma: no cover
         """Hint: the NEXT round's cohort.  Default: nothing to stage."""
 
+    # -- serving contract ----------------------------------------------
+    def lora_rows(self, sel: Sequence[int]):
+        """Fresh device-stacked LoRA rows of the given clients, leading
+        axis = len(sel) — the adapter-paging read the serving
+        :class:`repro.serve.AdapterCache` issues on a slot miss.  No opt
+        state, no frozen rows: an adapter page-in moves adapter bytes
+        only.  The returned arrays are fresh (safe to donate)."""
+        raise NotImplementedError
+
     # -- checkpoint contract -------------------------------------------
     def state_dict(self) -> dict:
         raise NotImplementedError
@@ -241,6 +250,10 @@ class DeviceFleetStore(FleetStore):
             else jax.tree.map(lambda x: x[cid], self._frozen)
         )
         return lora_i, frozen_i
+
+    def lora_rows(self, sel: Sequence[int]):
+        idx = jnp.asarray(list(sel))
+        return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), self._lora)
 
     def state_dict(self) -> dict:
         return {"lora": self._lora, "opt": self._opt, "frozen": self._frozen}
@@ -598,6 +611,14 @@ class HostFleetStore(FleetStore):
             else jax.tree.map(lambda x: x[0], row["frozen"])
         )
         return lora_i, frozen_i
+
+    def lora_rows(self, sel: Sequence[int]):
+        with self._lock:
+            rows = [self._row(int(i))["lora"] for i in sel]
+        # _row hands out views; np.stack copies, jnp.array(copy=True) keeps
+        # the device buffers XLA-owned (donation-safe, same as _to_device)
+        stacked = jax.tree.map(lambda *xs: np.stack(xs), *rows)
+        return jax.tree.map(lambda a: jnp.array(a, copy=True), stacked)
 
     # -- checkpoint contract -------------------------------------------
     def state_dict(self) -> dict:

@@ -41,7 +41,8 @@ import numpy as np
 from repro.configs import ARCHITECTURES, INPUT_SHAPES
 from repro.configs.base import ModelConfig
 from repro.launch.mesh import V5E, make_production_mesh
-from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.launch.steps import make_train_step
+from repro.serve import make_decode_step as make_serve_step, make_prefill_step
 from repro import sharding as sh
 
 DEFAULT_OUT = "experiments/dryrun"

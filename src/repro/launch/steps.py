@@ -8,6 +8,10 @@
 
 All are pure (params/opt/batch in, params/opt/metrics out) and
 pjit-compatible; shardings are attached by the caller (dryrun/train).
+
+The serving-side factories (prefill/serve) live in :mod:`repro.serve.steps`
+since the PR-10 serve redesign; ``make_serve_step``/``make_prefill_step``
+stay importable here as shims (``make_serve_step`` == ``make_decode_step``).
 """
 
 from __future__ import annotations
@@ -18,9 +22,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import backbone, decode_step as model_decode_step, prefill as model_prefill
+from repro.models import backbone
 from repro.models.model import _lm_logits  # internal head reuse (framework-private)
 from repro.optim import AdamWState, adamw_update
+
+# Serving steps moved to repro.serve (PR 10 api_redesign) — re-exported here
+# so pre-redesign imports keep working, mirroring the PR-9 fed/engines shims.
+from repro.serve.steps import (  # noqa: F401
+    make_decode_step as make_serve_step,
+    make_prefill_step,
+)
 
 __all__ = ["chunked_lm_loss", "make_train_step", "make_prefill_step", "make_serve_step"]
 
@@ -136,16 +147,3 @@ def make_train_step(
     return train_step
 
 
-def make_prefill_step(cfg: ModelConfig, *, window: int | None = None) -> Callable:
-    def prefill_step(params, batch):
-        logits, _ = model_prefill(params, cfg, batch, window=window)
-        return logits
-
-    return prefill_step
-
-
-def make_serve_step(cfg: ModelConfig, *, window: int | None = None) -> Callable:
-    def serve_step(params, cache, token):
-        return model_decode_step(params, cfg, cache, token, window=window)
-
-    return serve_step

@@ -1,3 +1,19 @@
-from repro.lora.lora import is_lora_path, lora_param_count, map_lora, merge_lora, split_lora
+from repro.lora.lora import (
+    is_lora_path,
+    lora_param_count,
+    lora_template,
+    map_lora,
+    merge_lora,
+    path_strings,
+    split_lora,
+)
 
-__all__ = ["is_lora_path", "lora_param_count", "map_lora", "merge_lora", "split_lora"]
+__all__ = [
+    "is_lora_path",
+    "lora_param_count",
+    "lora_template",
+    "map_lora",
+    "merge_lora",
+    "path_strings",
+    "split_lora",
+]

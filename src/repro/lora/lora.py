@@ -13,7 +13,15 @@ from typing import Any, Callable
 
 import jax
 
-__all__ = ["is_lora_path", "split_lora", "merge_lora", "lora_param_count", "map_lora"]
+__all__ = [
+    "is_lora_path",
+    "path_strings",
+    "split_lora",
+    "merge_lora",
+    "lora_param_count",
+    "map_lora",
+    "lora_template",
+]
 
 
 def _path_strings(path) -> tuple[str, ...]:
@@ -66,3 +74,16 @@ def map_lora(fn: Callable[[jax.Array], jax.Array], params: Any) -> Any:
     return jax.tree_util.tree_map_with_path(
         lambda p, x: fn(x) if is_lora_path(p) else x, params
     )
+
+
+def lora_template(params: Any) -> Any:
+    """Shape/dtype skeleton of the adapter subtree (``split_lora()[0]`` with
+    ``jax.ShapeDtypeStruct`` leaves) — the ``like`` argument the serving
+    AdapterCache validates fleet rows against."""
+    lora, _ = split_lora(params)
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), lora)
+
+
+# public alias: serving (repro.serve) dispatches on path segments ("stack"
+# subtrees are stacked over layer repeats) using the same normalisation
+path_strings = _path_strings

@@ -62,10 +62,23 @@ def init_kv_cache(
 
 
 def _lora_delta(lora_p: dict, x: jax.Array, *, alpha: float, rank: int, compute_dtype: str):
-    """x @ A @ B scaled by alpha/r.  Returns (delta, h) with h = x @ A."""
+    """x @ A @ B scaled by alpha/r.  Returns (delta, h) with h = x @ A.
+
+    Two adapter layouts (multi-tenant serving, repro.serve):
+      * shared  — A (d, r), B (r, o): one adapter for the whole batch;
+      * batched — A (B, d, r), B (B, r, o): row b of the batch applies
+        adapter b.  Row b's contraction is the SAME einsum over the same
+        operands as the shared case, so stacked multi-tenant decode is
+        bit-identical to running each request alone with its adapter.
+    """
     cd = jnp.dtype(compute_dtype)
-    h = jnp.einsum("...i,ir->...r", x.astype(cd), lora_p["A"].astype(cd))
-    delta = jnp.einsum("...r,ro->...o", h, lora_p["B"].astype(cd)) * (alpha / rank)
+    a, b = lora_p["A"].astype(cd), lora_p["B"].astype(cd)
+    if a.ndim == 3:  # per-request adapters, leading axis = batch
+        h = jnp.einsum("b...i,bir->b...r", x.astype(cd), a)
+        delta = jnp.einsum("b...r,bro->b...o", h, b) * (alpha / rank)
+    else:
+        h = jnp.einsum("...i,ir->...r", x.astype(cd), a)
+        delta = jnp.einsum("...r,ro->...o", h, b) * (alpha / rank)
     return delta, h
 
 

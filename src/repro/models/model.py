@@ -116,11 +116,15 @@ def _lm_logits(
     logits = jnp.einsum("bsd,vd->bsv", x.astype(cd), head.astype(cd))
     if "lora_head" in params:  # LoRA on the LM head (PEFT-standard target)
         lh = params["lora_head"]
-        lb = lh["B"] if head_cols is None else lh["B"][:, :head_cols]
-        h = jnp.einsum("bsd,dr->bsr", x.astype(cd), lh["A"].astype(cd))
-        logits = logits + jnp.einsum("bsr,rv->bsv", h, lb.astype(cd)) * (
-            cfg.lora.alpha / cfg.lora.rank
-        )
+        if lh["A"].ndim == 3:  # per-request adapters (repro.serve): (B, d, r)
+            lb = lh["B"] if head_cols is None else lh["B"][:, :, :head_cols]
+            h = jnp.einsum("bsd,bdr->bsr", x.astype(cd), lh["A"].astype(cd))
+            delta = jnp.einsum("bsr,brv->bsv", h, lb.astype(cd))
+        else:
+            lb = lh["B"] if head_cols is None else lh["B"][:, :head_cols]
+            h = jnp.einsum("bsd,dr->bsr", x.astype(cd), lh["A"].astype(cd))
+            delta = jnp.einsum("bsr,rv->bsv", h, lb.astype(cd))
+        logits = logits + delta * (cfg.lora.alpha / cfg.lora.rank)
     return logits
 
 

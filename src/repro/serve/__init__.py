@@ -1,0 +1,44 @@
+"""Multi-tenant personalized-adapter serving (the deploy half of the paper's
+federation): one shared frozen backbone + a device slab of per-tenant LoRA
+adapters, served by ONE donated jitted decode step per mode.
+
+Public API:
+
+  ServeConfig / ServeSession     — the serving loop (session.py)
+  AdapterCache / CacheStats      — LRU slot paging over the slab (cache.py)
+  export_adapters / serving_params — checkpoint -> serving handoff (export.py)
+  make_decode_step / make_stacked_decode_step / make_prefill_step — the pure
+                                   step factories (steps.py)
+"""
+
+from repro.serve.adapters import (
+    canonicalize_row,
+    gather_adapters,
+    slab_init,
+    slab_set_row,
+)
+from repro.serve.cache import AdapterCache, AdapterSource, CacheStats
+from repro.serve.export import export_adapters, serving_params
+from repro.serve.session import ServeConfig, ServeSession
+from repro.serve.steps import (
+    make_decode_step,
+    make_prefill_step,
+    make_stacked_decode_step,
+)
+
+__all__ = [
+    "ServeConfig",
+    "ServeSession",
+    "AdapterCache",
+    "AdapterSource",
+    "CacheStats",
+    "export_adapters",
+    "serving_params",
+    "make_decode_step",
+    "make_stacked_decode_step",
+    "make_prefill_step",
+    "slab_init",
+    "slab_set_row",
+    "gather_adapters",
+    "canonicalize_row",
+]

@@ -1,0 +1,229 @@
+"""Federation -> serving handoff: ``export_adapters`` resolves what a
+``fed_train --ckpt-dir`` run left on disk (or a live ``FleetStore``) into
+an :class:`repro.serve.cache.AdapterSource` the AdapterCache pages from.
+
+No new on-disk format: the sources read exactly what PR 9's checkpoint
+writers produce —
+
+* ``step_N.fleet/`` shard directories (``fleet_{lo:08d}_{hi:08d}.npz`` +
+  ``fleet_frozen.npz``), the host-store layout: rows are paged per shard
+  with a tiny LRU of open shards, so serving a 100k-tenant fleet never
+  materializes the fleet in memory;
+* monolithic ``step_N.npz`` checkpoints (device-store layout): the
+  ``fleet__lora`` stacked subtree, loaded once into host numpy;
+* a live :class:`repro.fed.store.FleetStore` (either kind), read through
+  its ``lora_rows`` serving contract.
+
+Each source also exposes ``frozen_tree()`` — the fleet's shared backbone
+(split_lora frozen structure) — so a serving process can reconstruct full
+params without re-running the federation:
+
+    src = export_adapters(ckpt_dir)
+    params = merge_lora(split_lora(model_init(key, cfg))[0], src.frozen_tree())
+    cache = AdapterCache(src, like=lora_template(params), slots=8)
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from collections import OrderedDict
+from typing import Any
+
+import numpy as np
+
+from repro.checkpoint import ckpt as ckpt_io
+from repro.fed.store import FleetStore
+
+__all__ = [
+    "export_adapters",
+    "serving_params",
+    "FleetStoreSource",
+    "ShardDirSource",
+    "MonolithicSource",
+]
+
+_NOT_SHARED = (
+    "this fleet checkpoints a PER-CLIENT backbone (no shared frozen tree); "
+    "multi-tenant serving stacks adapters against ONE shared backbone — "
+    "export a shared-backbone federation instead"
+)
+
+
+class FleetStoreSource:
+    """Adapters straight out of a live fleet store (no disk round-trip)."""
+
+    def __init__(self, store: FleetStore):
+        self.store = store
+        self.num_adapters = store.num_clients
+
+    def lora_row(self, cid: int) -> Any:
+        import jax
+
+        return jax.tree.map(lambda x: x[0], self.store.lora_rows([int(cid)]))
+
+    def frozen_tree(self) -> Any:
+        if not self.store.shared:
+            raise ValueError(_NOT_SHARED)
+        return self.store.frozen
+
+
+class ShardDirSource:
+    """Adapters from a ``step_N.fleet/`` shard directory (host-store
+    checkpoints).  Rows are read per shard on demand; at most
+    ``max_open`` unflattened shard trees stay resident (LRU), so host
+    memory is O(shard), not O(fleet)."""
+
+    def __init__(self, dir_path: str, *, prefix: str = "fleet", max_open: int = 2):
+        self.dir = dir_path
+        self.prefix = prefix
+        self._shards = ckpt_io.list_fleet_shards(dir_path, prefix)
+        if not self._shards:
+            raise FileNotFoundError(
+                f"no {prefix!r} shards in {dir_path} — not a fleet shard dir"
+            )
+        self.num_adapters = max(hi for _, hi, _ in self._shards)
+        self._open: OrderedDict[str, Any] = OrderedDict()
+        self._max_open = max_open
+
+    def _shard_lora(self, path: str) -> Any:
+        tree = self._open.get(path)
+        if tree is None:
+            tree = ckpt_io.restore_subtree(path, "lora")
+            while len(self._open) >= self._max_open:
+                self._open.popitem(last=False)
+            self._open[path] = tree
+        else:
+            self._open.move_to_end(path)
+        return tree
+
+    def lora_row(self, cid: int) -> Any:
+        import jax
+
+        cid = int(cid)
+        for lo, hi, path in self._shards:
+            if lo <= cid < hi:
+                tree = self._shard_lora(path)
+                return jax.tree.map(lambda a: a[cid - lo], tree)
+        raise IndexError(
+            f"tenant {cid} outside the shard ranges of {self.dir} "
+            f"(fleet of {self.num_adapters})"
+        )
+
+    def frozen_tree(self) -> Any:
+        frozen_path = os.path.join(self.dir, f"{self.prefix}_frozen.npz")
+        if not os.path.exists(frozen_path):
+            raise ValueError(_NOT_SHARED)
+        return ckpt_io.restore_subtree(frozen_path, "frozen")
+
+
+class MonolithicSource:
+    """Adapters from a monolithic ``step_N.npz`` (device-store layout):
+    the ``fleet__lora`` stacked subtree, loaded once into host numpy."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._lora = ckpt_io.restore_subtree(path, "fleet__lora")
+        import jax
+
+        sizes = {int(x.shape[0]) for x in jax.tree_util.tree_leaves(self._lora)}
+        if len(sizes) != 1:
+            raise ValueError(
+                f"{path}: fleet__lora leaves disagree on the client axis: {sizes}"
+            )
+        self.num_adapters = sizes.pop()
+
+    def lora_row(self, cid: int) -> Any:
+        import jax
+
+        return jax.tree.map(lambda a: a[int(cid)], self._lora)
+
+    def frozen_tree(self) -> Any:
+        frozen = ckpt_io.restore_subtree(self.path, "fleet__frozen")
+        import jax
+
+        n_lora = self.num_adapters
+        per_client = all(
+            x.ndim >= 1 and int(x.shape[0]) == n_lora
+            for x in jax.tree_util.tree_leaves(frozen)
+        )
+        # a shared backbone stores ONE tree; per-client backbones stack N —
+        # ambiguous only if every frozen leaf coincidentally has leading
+        # dim == num_clients, which real param trees (norm vectors, embed
+        # tables) never do
+        if per_client and n_lora > 1:
+            raise ValueError(_NOT_SHARED)
+        return frozen
+
+
+def serving_params(source, like: Any) -> Any:
+    """Full serving params: the source's shared backbone grafted into the
+    structure of ``like`` (a freshly-initialized params tree of the same
+    model config).  LoRA leaves keep ``like``'s values — they are either
+    overridden per request by the AdapterCache slab, or serve as the
+    detached-mode fallback adapter.  The npz-backed sources drop the
+    None-valued LoRA positions from the frozen tree on disk, so a plain
+    ``merge_lora`` cannot reassemble params from them; grafting by path
+    can."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.lora import is_lora_path, path_strings
+    from repro.serve.adapters import _dig
+
+    frozen = source.frozen_tree()
+
+    def pick(path, leaf):
+        if is_lora_path(path):
+            return leaf
+        parts = path_strings(path)
+        val = _dig(frozen, parts)
+        if val is None:
+            raise KeyError(
+                f"exported backbone is missing leaf {'/'.join(parts)!r} — "
+                "the checkpoint does not match the model config"
+            )
+        if tuple(val.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"backbone leaf {'/'.join(parts)!r} has shape "
+                f"{tuple(val.shape)}, model expects {tuple(leaf.shape)}"
+            )
+        return jnp.asarray(val, dtype=leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(pick, like)
+
+
+def export_adapters(src) -> Any:
+    """Resolve ``src`` into an AdapterSource:
+
+    * a live :class:`FleetStore`;
+    * a ``step_N.fleet/`` shard directory;
+    * a checkpoint directory (``fed_train --ckpt-dir``): newest valid step,
+      preferring its shard dir over the monolithic fleet subtree.
+    """
+    if isinstance(src, FleetStore):
+        return FleetStoreSource(src)
+    if not isinstance(src, (str, os.PathLike)):
+        raise TypeError(
+            f"export_adapters wants a FleetStore or a path, got {type(src)!r}"
+        )
+    path = os.fspath(src)
+    if os.path.isdir(path):
+        # a shard dir itself?
+        try:
+            return ShardDirSource(path)
+        except FileNotFoundError:
+            pass
+        # a checkpoint dir: newest step, shards preferred
+        step = ckpt_io.latest_step(path)
+        if step is not None:
+            shard_dir = ckpt_io.fleet_shard_dir(path, step)
+            if os.path.isdir(shard_dir):
+                return ShardDirSource(shard_dir)
+            return MonolithicSource(os.path.join(path, f"step_{step:08d}.npz"))
+        raise FileNotFoundError(
+            f"{path}: neither fleet shards nor step_N.npz checkpoints found"
+        )
+    if os.path.isfile(path) and re.search(r"\.npz$", path):
+        return MonolithicSource(path)
+    raise FileNotFoundError(f"export_adapters: no such checkpoint: {path}")

@@ -1,0 +1,51 @@
+"""Serving step factories (pure functions, jitted by ServeSession).
+
+  decode_step         — one token against the cache, single shared adapter
+                        (the pre-redesign ``make_serve_step``, re-exported
+                        from ``repro.launch.steps`` for compatibility).
+  stacked_decode_step — one token, per-request adapters: gathers row
+                        ``idx[b]`` of the adapter slab for request b and
+                        merges into the shared frozen backbone INSIDE the
+                        step, so one compiled executable serves any tenant
+                        mix (``idx`` is traced int32 data).
+  prefill_step        — full forward over a prompt, last-position logits.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.configs.base import ModelConfig
+from repro.lora import merge_lora
+from repro.models import decode_step as model_decode_step, prefill as model_prefill
+from repro.serve.adapters import gather_adapters
+
+__all__ = ["make_decode_step", "make_stacked_decode_step", "make_prefill_step"]
+
+
+def make_decode_step(cfg: ModelConfig, *, window: int | None = None) -> Callable:
+    def decode_step(params, cache, token):
+        return model_decode_step(params, cfg, cache, token, window=window)
+
+    return decode_step
+
+
+def make_stacked_decode_step(cfg: ModelConfig, *, window: int | None = None) -> Callable:
+    """(frozen, slab, idx, cache, token) -> (logits, cache) — the
+    multi-tenant decode step.  ``frozen``: the shared backbone
+    (split_lora()[1]); ``slab``: the adapter slab (slots leading axis);
+    ``idx (B,) int32``: slab slot per request."""
+
+    def stacked_decode_step(frozen, slab, idx, cache, token):
+        params = merge_lora(gather_adapters(slab, idx), frozen)
+        return model_decode_step(params, cfg, cache, token, window=window)
+
+    return stacked_decode_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, window: int | None = None) -> Callable:
+    def prefill_step(params, batch):
+        logits, _ = model_prefill(params, cfg, batch, window=window)
+        return logits
+
+    return prefill_step
